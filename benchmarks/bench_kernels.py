@@ -1,0 +1,68 @@
+"""Kernel-path microbenchmarks (CPU-executable proxies).
+
+The Pallas kernels themselves only run in interpret mode here (Python-speed,
+not meaningful to time); what we CAN measure on CPU is the XLA formulation
+they were derived from - the fused flat sweep and LIF chain - across sizes,
+plus the blocked-layout conversion cost.  On TPU the same harness times the
+compiled kernels (interpret=False).
+"""
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import builder, engine, models, snn
+
+
+def bench_sweep_sizes(out):
+    for scale, tag in ((0.02, "small"), (0.08, "medium")):
+        spec, _ = models.hpc_benchmark(scale=scale, stdp=False)
+        g = builder.build_shards(spec, builder.decompose(spec, 1))[0] \
+            .device_arrays()
+        ring = jnp.zeros((spec.max_delay, g.n_mirror), jnp.float32)
+        w = g.weight_init
+
+        @jax.jit
+        def sweep(ring, t):
+            return engine.synaptic_sweep(g, w, ring, t, mode="flat")
+
+        r = sweep(ring, jnp.asarray(5, jnp.int32))
+        jax.block_until_ready(r)
+        n = 200
+        t0 = time.perf_counter()
+        for i in range(n):
+            r = sweep(ring, jnp.asarray(i % spec.max_delay, jnp.int32))
+        jax.block_until_ready(r)
+        us = (time.perf_counter() - t0) / n * 1e6
+        out(f"kernel_proxy/synaptic_sweep/{tag}", us,
+            f"edges={g.n_edges};edges_per_us={g.n_edges/us:.0f}")
+
+
+def bench_lif_chain(out):
+    for n in (4096, 65536):
+        gs = [snn.LIFParams()]
+        table = snn.make_param_table(gs, dt=0.1)
+        state = snn.init_state(n, np.zeros(n, np.int32), gs)
+        zeros = jnp.zeros(n)
+
+        @jax.jit
+        def step(s):
+            return snn.lif_step(s, table, zeros, zeros)
+
+        s = step(state)
+        jax.block_until_ready(s.v_m)
+        reps = 200
+        t0 = time.perf_counter()
+        for _ in range(reps):
+            s = step(s)
+        jax.block_until_ready(s.v_m)
+        us = (time.perf_counter() - t0) / reps * 1e6
+        out(f"kernel_proxy/lif_step/n{n}", us,
+            f"neurons_per_us={n/us:.0f}")
+
+
+def main(out):
+    bench_sweep_sizes(out)
+    bench_lif_chain(out)

@@ -1,0 +1,69 @@
+"""Per-arch smoke-scale step benchmarks + serving throughput.
+
+Wall times at smoke scale verify every family's step functions execute and
+give a relative cost fingerprint; TPU-scale cost is covered by §Roofline
+(static analysis), not by these CPU timings.
+"""
+
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro import configs
+from repro.configs.base import TrainConfig
+from repro.models.model import build_model
+from repro.serve.engine import BatchServer
+from repro.train.loop import make_train_step
+from repro.train.optimizer import init_opt_state
+
+FAST_ARCHS = ("qwen2.5-3b", "internlm2-1.8b", "rwkv6-3b",
+              "qwen3-moe-30b-a3b", "whisper-tiny")
+
+
+def _batch(cfg, key, b=2, s=16):
+    batch = {"tokens": jax.random.randint(key, (b, s + 1), 1,
+                                          cfg.vocab_size)}
+    if cfg.family == "audio":
+        batch["frames"] = jax.random.normal(key, (b, cfg.encoder_seq,
+                                                  cfg.d_model)) * 0.02
+    if cfg.family == "vlm":
+        batch["patches"] = jax.random.normal(key, (b, cfg.n_prefix_embeds,
+                                                   cfg.d_model)) * 0.02
+    return batch
+
+
+def bench_train_steps(out):
+    for arch in FAST_ARCHS:
+        cfg = configs.get_smoke(arch)
+        m = build_model(cfg)
+        params = m.init(jax.random.key(0))
+        tcfg = TrainConfig(optimizer="adamw", lr=1e-3)
+        opt = init_opt_state(tcfg, params)
+        step = jax.jit(make_train_step(m, tcfg), donate_argnums=(0, 1))
+        batch = _batch(cfg, jax.random.key(1))
+        params, opt, met = step(params, opt, batch, jnp.asarray(0))
+        jax.block_until_ready(met["loss"])
+        n = 10
+        t0 = time.perf_counter()
+        for i in range(n):
+            params, opt, met = step(params, opt, batch, jnp.asarray(i))
+        jax.block_until_ready(met["loss"])
+        us = (time.perf_counter() - t0) / n * 1e6
+        out(f"train_step_smoke/{arch}", us, f"loss={float(met['loss']):.3f}")
+
+
+def bench_serving(out):
+    cfg = configs.get_smoke("qwen2.5-3b")
+    m = build_model(cfg)
+    params = m.init(jax.random.key(0))
+    server = BatchServer(m, params, slots=4, max_len=64, eos_id=-1)
+    reqs = [[5, 6, 7], [8, 9, 10, 11], [3], [12, 13]]
+    outs, stats = server.serve(reqs, max_new_tokens=16)
+    out("serve/decode_tok_per_s", stats.decode_tok_per_s * 1e0,
+        f"prefill_s={stats.prefill_s:.3f};tokens={stats.tokens_out}")
+
+
+def main(out):
+    bench_train_steps(out)
+    bench_serving(out)

@@ -1,0 +1,74 @@
+"""Fig. 18 analogue: memory + step-time scaling of the SNN engine.
+
+The paper's headline figure compares CORTEX vs NEST on the marmoset
+benchmark across normalized problem sizes (memory per node, wall time).
+On this CPU container we reproduce the *shape* of that comparison:
+
+* problem-size scaling of step wall-time and per-shard memory for the
+  CORTEX engine (flat + bucketed sweeps);
+* Area-Processes Mapping vs Random Equivalent Mapping: remote-mirror
+  memory and per-step spike-exchange bytes (the Fig. 8/9/10 quantities,
+  computed exactly from the built shards - these are the terms that
+  dominate at Fugaku scale).
+"""
+
+import time
+
+import jax
+import numpy as np
+
+from repro.core import builder, engine, models, snn
+from repro.core.distributed import mesh_decompose, prepare_stacked
+
+
+def _bytes_of_shard(g) -> int:
+    tot = 0
+    for f in ("pre_idx", "post_idx", "delay", "channel", "weight_init"):
+        tot += np.asarray(getattr(g, f)).nbytes
+    tot += np.asarray(g.mirror_src_shard).nbytes * 2
+    return tot
+
+
+def bench_step_scaling(out):
+    for scale in (0.02, 0.05, 0.1):
+        spec, stdp = models.hpc_benchmark(scale=scale, stdp=True)
+        dec = builder.decompose(spec, 1)
+        g = builder.build_shards(spec, dec)[0].device_arrays()
+        table = snn.make_param_table(list(spec.groups), dt=0.1)
+        for sweep in ("flat", "bucketed"):
+            cfg = engine.EngineConfig(dt=0.1, stdp=stdp, sweep=sweep)
+            st = engine.init_state(g, list(spec.groups), jax.random.key(0))
+            step = engine.make_step_fn(g, table, cfg)
+            st, _ = step(st)  # compile+warm
+            n = 100
+            t0 = time.perf_counter()
+            for _ in range(n):
+                st, _ = step(st)
+            jax.block_until_ready(st.v_m if hasattr(st, "v_m")
+                                  else st.neurons.v_m)
+            us = (time.perf_counter() - t0) / n * 1e6
+            out(f"snn_step/{sweep}/scale{scale}", us,
+                f"edges={g.n_edges}")
+
+
+def bench_mapping_comparison(out):
+    """Area vs Random mapping: mirrors + spike traffic (paper Fig. 8-10)."""
+    for scale in (0.004, 0.008):
+        spec = models.marmoset(scale=scale, n_areas=4)
+        for method, tag in (("area", "cortex_area"),
+                            ("random", "random_equiv")):
+            dec = mesh_decompose(spec, n_rows=4, row_width=2, method=method)
+            net = prepare_stacked(spec, dec, 4, 2)
+            shards = builder.build_shards(spec, dec)
+            mem = sum(_bytes_of_shard(g) for g in shards) / len(shards)
+            remote = sum(int(g.n_mirror) - int(dec.parts[i].size)
+                         for i, g in enumerate(shards))
+            comm = (net.comm_bytes_area if method == "area"
+                    else net.comm_bytes_global)
+            out(f"snn_map/{tag}/scale{scale}", mem,
+                f"remote_mirrors={remote};comm_bytes_step={comm}")
+
+
+def main(out):
+    bench_step_scaling(out)
+    bench_mapping_comparison(out)

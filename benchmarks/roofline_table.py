@@ -1,0 +1,34 @@
+"""Pretty-print the §Roofline table from experiments/roofline.json."""
+
+import json
+import os
+
+
+def main(out=None, path="experiments/roofline.json"):
+    if not os.path.exists(path):
+        print(f"(no {path}; run PYTHONPATH=src python -m "
+              "repro.launch.roofline first)")
+        return
+    with open(path) as f:
+        rows = json.load(f)
+    hdr = (f"{'arch':22s} {'shape':12s} {'dom':10s} {'compute_s':>10s} "
+           f"{'memory_s':>10s} {'collect_s':>10s} {'useful':>7s} "
+           f"{'roofline':>8s}")
+    print(hdr)
+    print("-" * len(hdr))
+    for r in rows:
+        if r.get("status") != "ok":
+            print(f"{r['arch']:22s} {r['shape']:12s} {r['status']}")
+            continue
+        print(f"{r['arch']:22s} {r['shape']:12s} {r['dominant']:10s} "
+              f"{r['compute_s']:10.4f} {r['memory_s']:10.4f} "
+              f"{r['collective_s']:10.4f} {r['useful_fraction']:7.2f} "
+              f"{r['roofline_fraction']:8.3f}")
+        if out is not None:
+            out(f"roofline/{r['arch']}/{r['shape']}",
+                max(r['compute_s'], r['memory_s'], r['collective_s']) * 1e6,
+                f"dom={r['dominant']};roofline={r['roofline_fraction']:.3f}")
+
+
+if __name__ == "__main__":
+    main()

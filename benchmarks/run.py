@@ -1,0 +1,39 @@
+"""Benchmark harness entry point - one section per paper table/figure.
+
+Prints ``name,us_per_call,derived`` CSV lines (plus the roofline table if
+experiments/roofline.json exists).
+
+    PYTHONPATH=src python -m benchmarks.run [--only snn|kernels|models]
+"""
+
+import argparse
+import sys
+
+
+def _out(name: str, us: float, derived: str = "") -> None:
+    print(f"{name},{us:.2f},{derived}", flush=True)
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--only", default=None,
+                    choices=[None, "snn", "kernels", "models", "roofline"])
+    args = ap.parse_args()
+
+    print("name,us_per_call,derived")
+    if args.only in (None, "snn"):
+        from benchmarks import bench_snn
+        bench_snn.main(_out)
+    if args.only in (None, "kernels"):
+        from benchmarks import bench_kernels
+        bench_kernels.main(_out)
+    if args.only in (None, "models"):
+        from benchmarks import bench_models
+        bench_models.main(_out)
+    if args.only in (None, "roofline"):
+        from benchmarks import roofline_table
+        roofline_table.main(_out)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,48 @@
+"""Diagnostic: list the largest per-device tensors in a compiled dry-run
+cell.  Usage: PYTHONPATH=src python scripts/dump_big_tensors.py <arch> <shape>
+"""
+import os
+os.environ.setdefault("XLA_FLAGS",
+                      "--xla_force_host_platform_device_count=512")
+import re
+import sys
+
+sys.path.insert(0, "src")
+import jax  # noqa: E402
+
+from repro.launch import dryrun  # noqa: E402
+from repro.launch.mesh import make_production_mesh  # noqa: E402
+from repro import configs  # noqa: E402
+from repro.configs.shapes import SHAPES  # noqa: E402
+from repro.sharding import rules  # noqa: E402
+from repro.utils.hlo import DTYPE_BYTES  # noqa: E402
+
+
+def main():
+    arch, shape = sys.argv[1], sys.argv[2]
+    mesh = make_production_mesh(multi_pod="--multi-pod" in sys.argv)
+    cfg = configs.get(arch)
+    fn, args, donate, out_sh = dryrun.build_cell(cfg, SHAPES[shape], mesh)
+    with rules.use_mesh(mesh):
+        compiled = jax.jit(fn, donate_argnums=donate,
+                           out_shardings=out_sh).lower(*args).compile()
+    txt = compiled.as_text()
+    sizes = {}
+    for m in re.finditer(r"(\w+)\[([\d,]+)\]", txt):
+        dt, dims = m.group(1), m.group(2)
+        if dt not in DTYPE_BYTES:
+            continue
+        n = 1
+        for d in dims.split(","):
+            n *= int(d)
+        b = n * DTYPE_BYTES[dt]
+        key = f"{dt}[{dims}]"
+        if b > 2 ** 27:
+            sizes[key] = max(sizes.get(key, 0), b)
+    for k, v in sorted(sizes.items(), key=lambda kv: -kv[1])[:20]:
+        print(f"{v / 2**30:8.2f} GiB  {k}  x{txt.count(k)}")
+    print(compiled.memory_analysis())
+
+
+if __name__ == "__main__":
+    main()

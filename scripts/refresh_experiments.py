@@ -1,0 +1,82 @@
+"""Regenerate the data-driven tables of EXPERIMENTS.md from the sweep JSONs.
+
+Writes experiments/tables.md with:
+  - per-device peak bytes table (single-pod)
+  - the roofline baseline table
+  - SNN dry-run table
+Run after the final sweeps; paste/compare into EXPERIMENTS.md.
+"""
+
+import json
+import sys
+
+ARCHS = ["qwen2.5-3b", "phi3-medium-14b", "command-r-plus-104b",
+         "internlm2-1.8b", "jamba-v0.1-52b", "rwkv6-3b",
+         "deepseek-v3-671b", "qwen3-moe-30b-a3b", "whisper-tiny",
+         "internvl2-1b"]
+SHAPES = ["train_4k", "prefill_32k", "decode_32k", "long_500k"]
+
+
+def main():
+    out = []
+    with open("experiments/dryrun_all.json") as f:
+        dr = json.load(f)
+    idx = {(r["arch"], r["shape"], r["mesh"]): r for r in dr}
+
+    out.append("## per-device peak GiB (single-pod 16x16)\n")
+    out.append("| arch | " + " | ".join(SHAPES) + " |")
+    out.append("|---|" + "---|" * len(SHAPES))
+    for a in ARCHS:
+        row = [a]
+        for s in SHAPES:
+            r = idx.get((a, s, "16x16"), {})
+            if r.get("status") == "ok":
+                row.append(f"{r['memory']['peak_bytes']/2**30:.2f}")
+            elif r.get("status") == "skipped":
+                row.append("skip")
+            else:
+                row.append(r.get("status", "?"))
+        out.append("| " + " | ".join(row) + " |")
+    n_ok = sum(r["status"] == "ok" for r in dr)
+    n_sk = sum(r["status"] == "skipped" for r in dr)
+    n_er = sum(r["status"] == "error" for r in dr)
+    out.append(f"\ncells: {n_ok} ok / {n_sk} skipped / {n_er} error "
+               f"(both meshes)\n")
+
+    out.append("## roofline baseline (single-pod), FINAL\n")
+    with open("experiments/roofline.json") as f:
+        rl = json.load(f)
+    out.append("| arch | shape | dominant | compute_s | memory_s | "
+               "collective_s | useful | roofline |")
+    out.append("|---|---|---|---|---|---|---|---|")
+    for r in rl:
+        if r.get("status") != "ok":
+            out.append(f"| {r['arch']} | {r['shape']} | {r['status']} | "
+                       "| | | | |")
+            continue
+        out.append(
+            f"| {r['arch']} | {r['shape']} | {r['dominant']} | "
+            f"{r['compute_s']:.3f} | {r['memory_s']:.3f} | "
+            f"{r['collective_s']:.3f} | {r['useful_fraction']:.2f} | "
+            f"{r['roofline_fraction']:.3f} |")
+
+    out.append("\n## SNN engine @ production scale\n")
+    with open("experiments/dryrun_snn.json") as f:
+        sn = json.load(f)
+    out.append("| mesh | scale | wire | compact | peak GiB | compute_us | "
+               "memory_us | collective_us |")
+    out.append("|---|---|---|---|---|---|---|---|")
+    for r in sn:
+        out.append(
+            f"| {r['mesh']} | {r['scale']} | {r['wire']} | "
+            f"{int(r.get('compact', False))} | {r['peak_gib']:.2f} | "
+            f"{r['compute_s']*1e6:.1f} | {r['memory_s']*1e6:.1f} | "
+            f"{r['collective_s']*1e6:.2f} |")
+
+    with open("experiments/tables.md", "w") as f:
+        f.write("\n".join(out) + "\n")
+    print("\n".join(out))
+
+
+if __name__ == "__main__":
+    main()

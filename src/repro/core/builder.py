@@ -1,0 +1,307 @@
+"""Biological network builder: spec -> decomposition -> per-shard ShardGraph.
+
+Mirrors CORTEX's build pipeline (paper Fig. 6a-c): connectome-level spec
+(areas, populations, projections) -> two-level domain decomposition ->
+per-device indegree sub-graph data instances.
+
+Determinism: every projection's full edge list is generated once from a
+spec-derived seed (independent of the decomposition), so the SAME network is
+produced for any device count - the property that makes elastic re-sharding
+and the 1-shard-vs-N-shard equivalence tests meaningful.
+
+The fixed-indegree convention follows NEST's ``fixed_indegree`` rule (and the
+paper's "number of incoming synaptic interactions per neuron is fixed"): each
+post neuron draws exactly ``indegree`` pre partners from the source
+population.  This is also what makes the indegree sub-graph load balance
+reduce to post-neuron count balance (paper §III.A.4).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Sequence
+
+import numpy as np
+
+from repro.core.decomposition import (AreaSpec, Decomposition,
+                                      area_process_mapping,
+                                      random_equivalent_mapping)
+from repro.core.engine import ShardGraph
+from repro.core.snn import LIFParams
+
+__all__ = ["Population", "Projection", "NetworkSpec", "build_shards",
+           "decompose"]
+
+
+@dataclasses.dataclass(frozen=True)
+class Population:
+    """A homogeneous neuron population inside one area."""
+
+    name: str
+    area: int          # area index
+    group: int         # index into NetworkSpec.groups (LIF parameter set)
+    n: int
+    # external Poisson drive per neuron of this population
+    ext_rate_hz: float = 0.0
+    ext_weight: float = 0.0
+
+
+@dataclasses.dataclass(frozen=True)
+class Projection:
+    """Fixed-indegree connection rule between two populations."""
+
+    src_pop: int
+    dst_pop: int
+    indegree: int
+    weight_mean: float          # signed (current model) or magnitude (cond)
+    weight_std: float = 0.0
+    delay_min: int = 1          # integer steps, inclusive
+    delay_max: int = 1
+    channel: int = 0            # 0 excitatory, 1 inhibitory
+    plastic: bool = False
+    allow_autapse: bool = False
+    # fraction of the source population acting as projection neurons
+    # (inter-areal axons originate from a subset - this is what keeps
+    # remote mirror tables small under Area-Processes Mapping)
+    src_frac: float = 1.0
+
+
+@dataclasses.dataclass(frozen=True)
+class NetworkSpec:
+    areas: Sequence[AreaSpec]
+    groups: Sequence[LIFParams]
+    populations: Sequence[Population]
+    projections: Sequence[Projection]
+    max_delay: int
+    seed: int = 0
+
+    def pop_offsets(self) -> np.ndarray:
+        """Global-ID offset of each population (populations must be ordered
+        by area so that area ID ranges are contiguous)."""
+        areas_seen = [p.area for p in self.populations]
+        if areas_seen != sorted(areas_seen):
+            raise ValueError("populations must be sorted by area")
+        sizes = np.asarray([p.n for p in self.populations], dtype=np.int64)
+        return np.concatenate([[0], np.cumsum(sizes)])
+
+    @property
+    def n_neurons(self) -> int:
+        return int(sum(p.n for p in self.populations))
+
+    def area_sizes(self) -> list[int]:
+        sizes = [0] * len(self.areas)
+        for p in self.populations:
+            sizes[p.area] += p.n
+        return sizes
+
+    def group_of(self) -> np.ndarray:
+        out = np.empty(self.n_neurons, dtype=np.int32)
+        off = self.pop_offsets()
+        for i, p in enumerate(self.populations):
+            out[off[i]:off[i + 1]] = p.group
+        return out
+
+    def ext_arrays(self) -> tuple[np.ndarray, np.ndarray]:
+        rate = np.zeros(self.n_neurons, dtype=np.float32)
+        wt = np.zeros(self.n_neurons, dtype=np.float32)
+        off = self.pop_offsets()
+        for i, p in enumerate(self.populations):
+            rate[off[i]:off[i + 1]] = p.ext_rate_hz
+            wt[off[i]:off[i + 1]] = p.ext_weight
+        return rate, wt
+
+
+def decompose(spec: NetworkSpec, n_devices: int, *,
+              method: str = "area") -> Decomposition:
+    """Two-level decomposition of the spec's neuron set."""
+    if method == "area":
+        # mem_per_neuron estimate = expected indegree of the area's neurons.
+        sizes = spec.area_sizes()
+        edges_per_area = [0.0] * len(spec.areas)
+        off = spec.pop_offsets()
+        for pr in spec.projections:
+            dst = spec.populations[pr.dst_pop]
+            edges_per_area[dst.area] += pr.indegree * dst.n
+        areas = []
+        for i, a in enumerate(spec.areas):
+            if a.n_neurons != sizes[i]:
+                raise ValueError(
+                    f"area {a.name}: n_neurons={a.n_neurons} != population "
+                    f"total {sizes[i]}")
+            areas.append(dataclasses.replace(
+                a, mem_per_neuron=max(edges_per_area[i] / max(sizes[i], 1),
+                                      1.0)))
+        return area_process_mapping(areas, n_devices, seed=spec.seed)
+    if method == "random":
+        return random_equivalent_mapping(spec.n_neurons, n_devices,
+                                         seed=spec.seed)
+    raise ValueError(f"unknown decomposition method {method!r}")
+
+
+def _generate_projection_edges(spec: NetworkSpec, pi: int,
+                               rng: np.random.Generator):
+    """Full dst-major edge list of one projection: (pre_gid, post_gid, w, d)."""
+    pr = spec.projections[pi]
+    off = spec.pop_offsets()
+    src, dst = spec.populations[pr.src_pop], spec.populations[pr.dst_pop]
+    k = pr.indegree
+    if k <= 0:
+        z = np.zeros(0, dtype=np.int64)
+        return z, z, z.astype(np.float64), z.astype(np.int64)
+    if not pr.allow_autapse and pr.src_pop == pr.dst_pop and k >= src.n:
+        raise ValueError("indegree >= population size without autapses")
+
+    post = np.repeat(np.arange(dst.n, dtype=np.int64), k) + off[pr.dst_pop]
+    n_src = max(1, int(round(src.n * pr.src_frac)))
+    pre_local = rng.integers(0, n_src, size=dst.n * k)
+    if not pr.allow_autapse and pr.src_pop == pr.dst_pop:
+        # resample self-connections (cheap rejection; k << n)
+        self_mask = pre_local == (post - off[pr.dst_pop])
+        while np.any(self_mask):
+            pre_local[self_mask] = rng.integers(0, src.n,
+                                                size=int(self_mask.sum()))
+            self_mask = pre_local == (post - off[pr.dst_pop])
+    pre = pre_local + off[pr.src_pop]
+    w = rng.normal(pr.weight_mean, pr.weight_std, size=post.size)
+    if pr.weight_std > 0.0:
+        # keep the sign of the mean (biological weights do not flip sign)
+        if pr.weight_mean >= 0:
+            w = np.maximum(w, 0.0)
+        else:
+            w = np.minimum(w, 0.0)
+    d = rng.integers(pr.delay_min, pr.delay_max + 1, size=post.size)
+    if pr.delay_max > spec.max_delay:
+        raise ValueError("projection delay exceeds spec.max_delay")
+    return pre, post, w, d
+
+
+def build_shards(spec: NetworkSpec, dec: Decomposition, *,
+                 pad_to_multiple: int = 8,
+                 uniform_pad: bool = True) -> list[ShardGraph]:
+    """Generate every projection's edges, route them to owner shards, and
+    emit one delay-sorted padded ShardGraph per device.
+
+    With ``uniform_pad`` all shards are padded to identical (E_pad, n_mirror,
+    n_local) so they can be stacked into leading-device-axis arrays for
+    ``shard_map`` (the distributed engine requires this).
+    """
+    n_dev = dec.n_devices
+    off = spec.pop_offsets()
+    group_of = spec.group_of()
+    ext_rate, ext_weight = spec.ext_arrays()
+
+    # --- generate & route edges --------------------------------------------
+    per_dev = [[] for _ in range(n_dev)]  # lists of (pre, post, w, d, ch, pl)
+    for pi, pr in enumerate(spec.projections):
+        rng = np.random.default_rng(
+            np.random.SeedSequence([spec.seed, 7919, pi]))
+        pre, post, w, d = _generate_projection_edges(spec, pi, rng)
+        owners = dec.owner[post]
+        order = np.argsort(owners, kind="stable")
+        pre, post, w, d, owners = (pre[order], post[order], w[order],
+                                   d[order], owners[order])
+        bounds = np.searchsorted(owners, np.arange(n_dev + 1))
+        for dev in range(n_dev):
+            lo, hi = bounds[dev], bounds[dev + 1]
+            if lo == hi:
+                continue
+            per_dev[dev].append((pre[lo:hi], post[lo:hi], w[lo:hi], d[lo:hi],
+                                 pr.channel, pr.plastic))
+    del off
+
+    # --- assemble shards -----------------------------------------------------
+    raw = []
+    for dev in range(n_dev):
+        owned = dec.parts[dev]
+        if per_dev[dev]:
+            pre = np.concatenate([x[0] for x in per_dev[dev]])
+            post = np.concatenate([x[1] for x in per_dev[dev]])
+            w = np.concatenate([x[2] for x in per_dev[dev]])
+            d = np.concatenate([x[3] for x in per_dev[dev]])
+            ch = np.concatenate([np.full(x[0].size, x[4], np.int32)
+                                 for x in per_dev[dev]])
+            pl = np.concatenate([np.full(x[0].size, x[5], bool)
+                                 for x in per_dev[dev]])
+        else:
+            pre = post = np.zeros(0, np.int64)
+            w = np.zeros(0, np.float64)
+            d = np.zeros(0, np.int64)
+            ch = np.zeros(0, np.int32)
+            pl = np.zeros(0, bool)
+
+        # mirror table: local neurons first (identity block), then remotes.
+        remote = np.setdiff1d(np.unique(pre), owned)
+        mirror_gids = np.concatenate([owned, remote])
+        # vectorized gid -> mirror-row lookup via sorted permutation
+        perm = np.argsort(mirror_gids, kind="stable")
+        sorted_gids = mirror_gids[perm]
+        pre_m = perm[np.searchsorted(sorted_gids, pre)] if pre.size else \
+            np.zeros(0, np.int64)
+        post_l = np.searchsorted(owned, post)
+
+        # delay-major, then post (paper Fig. 12b ordering)
+        order = np.lexsort((post_l, d))
+        raw.append(dict(owned=owned, mirror_gids=mirror_gids,
+                        pre_m=pre_m[order], post_l=post_l[order],
+                        w=w[order], d=d[order], ch=ch[order], pl=pl[order]))
+
+    def _pad_up(n, m):
+        return ((n + m - 1) // m) * m
+
+    if uniform_pad:
+        e_pad = max(_pad_up(max(r["pre_m"].size for r in raw), pad_to_multiple), pad_to_multiple)
+        n_local_pad = max(_pad_up(max(r["owned"].size for r in raw), pad_to_multiple), pad_to_multiple)
+        n_mirror_pad = max(_pad_up(max(r["mirror_gids"].size for r in raw), pad_to_multiple), pad_to_multiple)
+    shards = []
+    for dev, r in enumerate(raw):
+        e = r["pre_m"].size
+        if not uniform_pad:
+            e_pad = max(_pad_up(e, pad_to_multiple), pad_to_multiple)
+            n_local_pad = max(_pad_up(r["owned"].size, pad_to_multiple), pad_to_multiple)
+            n_mirror_pad = max(_pad_up(r["mirror_gids"].size, pad_to_multiple), pad_to_multiple)
+
+        def pad(a, size, fill=0):
+            out = np.full(size, fill, dtype=a.dtype)
+            out[:a.size] = a
+            return out
+
+        d = pad(r["d"], e_pad)                 # padding delay = 0 => masked
+        pre_m = pad(r["pre_m"], e_pad)
+        post_l = pad(r["post_l"], e_pad)
+        w = pad(r["w"], e_pad).astype(np.float32)
+        ch = pad(r["ch"], e_pad)
+        pl = pad(r["pl"], e_pad, fill=False)
+
+        # bucket_ptr[d]..bucket_ptr[d+1] = edge range of delay d; padding
+        # edges sit at the tail and are outside every bucket.
+        bucket_ptr = np.searchsorted(d[:e], np.arange(spec.max_delay + 2))
+
+        n_loc = r["owned"].size
+        mirror_gids = r["mirror_gids"]
+        msrc_shard = dec.owner[mirror_gids]
+        # local index of each mirror within its source shard
+        msrc_idx = np.empty(mirror_gids.size, dtype=np.int64)
+        for s in np.unique(msrc_shard):
+            m = msrc_shard == s
+            msrc_idx[m] = np.searchsorted(dec.parts[int(s)], mirror_gids[m])
+        msrc_shard = pad(msrc_shard.astype(np.int32), n_mirror_pad)
+        msrc_idx = pad(msrc_idx, n_mirror_pad)
+
+        shards.append(ShardGraph(
+            n_local=n_local_pad,
+            n_mirror=n_mirror_pad,
+            max_delay=spec.max_delay,
+            pre_idx=pre_m.astype(np.int32),
+            post_idx=post_l.astype(np.int32),
+            delay=d.astype(np.int32),
+            channel=ch.astype(np.int32),
+            plastic=pl,
+            weight_init=w,
+            bucket_ptr=bucket_ptr.astype(np.int64),
+            mirror_src_shard=msrc_shard,
+            mirror_src_idx=msrc_idx.astype(np.int32),
+            group_id=pad(group_of[r["owned"]].astype(np.int32), n_local_pad),
+            ext_rate=pad(ext_rate[r["owned"]], n_local_pad),
+            ext_weight=pad(ext_weight[r["owned"]], n_local_pad),
+        ))
+    return shards

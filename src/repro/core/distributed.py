@@ -1,0 +1,552 @@
+"""Distributed SNN engine: indegree sub-graphs on a TPU mesh via shard_map.
+
+The mesh mapping of the paper's two-level decomposition (DESIGN.md §2):
+
+* the OUTER mesh axes ("pod", "data") index *rows* of devices; each row is an
+  Area-Processes group (one or more atlas areas packed by estimated edge
+  memory - the paper's Area-Processes Mapping at row granularity);
+* the INNER axis ("model") indexes the Multisection Division of each row's
+  post-neurons - ``row_width`` spatial cells per row.
+
+Each device owns one indegree sub-graph.  Its mirror table splits into
+
+* **intra-row** mirrors (the paper's *local* sub-graph ``inS^l``): served by a
+  dense spike-bitmap ``all_gather`` along "model" only - cheap, dense,
+  intra-area traffic; and
+* **remote** mirrors (``inS^r``): served by gathering only the *boundary*
+  neurons (those with inter-row consumers) across the whole mesh - the
+  fixed-width analogue of CORTEX's Spikes Broadcast of IDs.  Because
+  ``n(boundary) << n(local)`` under area mapping, total traffic collapses
+  from S*n_local (Random Equivalent Mapping) to M*n_local + S*B.
+
+Overlap (paper §III.C): spikes fired at step t-1 are carried RAW in the scan
+state and exchanged at the START of step t, while the synaptic sweep for
+delays >= 2 (which only needs older ring slots) proceeds independently; the
+delay-1 sweep and the ring write consume the collective's result.  On TPU,
+XLA's async collectives overlap the exchange with that independent compute -
+the dataflow twin of CORTEX's dedicated communication thread.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.core import snn, stdp as stdp_mod
+from repro.core.builder import NetworkSpec, build_shards
+from repro.core.decomposition import (Decomposition, apportion_devices,
+                                      multisection_divide)
+from repro.core.engine import EngineConfig, ShardGraph
+
+__all__ = ["mesh_decompose", "StackedNetwork", "prepare_stacked",
+           "DistributedConfig", "make_distributed_step", "init_stacked_state"]
+
+
+# --------------------------------------------------------------------------
+# mesh-aligned decomposition
+# --------------------------------------------------------------------------
+
+def mesh_decompose(spec: NetworkSpec, n_rows: int, row_width: int, *,
+                   method: str = "area") -> Decomposition:
+    """Two-level decomposition aligned to a (rows=pod*data, model) mesh.
+
+    Level 1: pack areas onto rows proportionally to estimated edge memory
+    (greedy largest-first into emptiest row - Area-Processes Mapping).
+    Level 2: multisection-divide each row's neurons into ``row_width`` cells.
+
+    ``method='random'`` is the Random Equivalent Mapping baseline on the same
+    mesh layout (areas ignored), for the Fig. 9-vs-10 comparison.
+    """
+    rng = np.random.default_rng(spec.seed)
+    n_devices = n_rows * row_width
+    off = spec.pop_offsets()
+    sizes = spec.area_sizes()
+    n_areas = len(spec.areas)
+
+    # per-area edge-memory weights
+    edge_w = np.zeros(n_areas)
+    for pr in spec.projections:
+        dst = spec.populations[pr.dst_pop]
+        edge_w[dst.area] += pr.indegree * dst.n
+    edge_w = np.maximum(edge_w, 1.0)
+
+    area_starts = np.zeros(n_areas + 1, dtype=np.int64)
+    for i, p in enumerate(spec.populations):
+        area_starts[p.area + 1] = off[i + 1]
+    for a in range(1, n_areas + 1):  # forward-fill empty areas
+        area_starts[a] = max(area_starts[a], area_starts[a - 1])
+
+    if method == "random":
+        perm = rng.permutation(spec.n_neurons)
+        row_of_neuron = np.repeat(np.arange(n_rows),
+                                  -(-spec.n_neurons // n_rows))[
+            np.argsort(perm, kind="stable")][:spec.n_neurons]
+        # (equal random split across rows)
+        row_of_neuron = np.empty(spec.n_neurons, dtype=np.int64)
+        splits = np.array_split(perm, n_rows)
+        for r, s in enumerate(splits):
+            row_of_neuron[s] = r
+    else:
+        if n_areas >= n_rows:
+            # pack areas into rows: largest weight first, into lightest row
+            row_load = np.zeros(n_rows)
+            area_row = np.zeros(n_areas, dtype=np.int64)
+            for a in np.argsort(-edge_w, kind="stable"):
+                r = int(np.argmin(row_load))
+                area_row[a] = r
+                row_load[r] += edge_w[a]
+            row_of_neuron = np.empty(spec.n_neurons, dtype=np.int64)
+            for a in range(n_areas):
+                row_of_neuron[area_starts[a]:area_starts[a + 1]] = area_row[a]
+        else:
+            # more rows than areas: apportion rows to areas, then split each
+            # area across its rows by multisection on positions
+            counts = apportion_devices(edge_w, n_rows)
+            row_of_neuron = np.empty(spec.n_neurons, dtype=np.int64)
+            row0 = 0
+            for a in range(n_areas):
+                ga = np.arange(area_starts[a], area_starts[a + 1])
+                pos = spec.areas[a].positions
+                if pos is None:
+                    pos = rng.uniform(size=(ga.size, 3))
+                part = multisection_divide(pos, int(counts[a]), rng=rng)
+                row_of_neuron[ga] = row0 + part
+                row0 += int(counts[a])
+
+    # level 2: multisection within each row
+    owner = np.full(spec.n_neurons, -1, dtype=np.int32)
+    parts: list[np.ndarray] = []
+    all_pos = np.concatenate([
+        (a.positions if a.positions is not None
+         else rng.uniform(size=(sizes[i], 3)))
+        for i, a in enumerate(spec.areas)], axis=0)
+    for r in range(n_rows):
+        gids = np.nonzero(row_of_neuron == r)[0].astype(np.int64)
+        if gids.size < row_width:
+            raise ValueError(f"row {r} has {gids.size} < {row_width} neurons")
+        cell = multisection_divide(all_pos[gids], row_width, rng=rng)
+        for m in range(row_width):
+            d = r * row_width + m
+            sel = np.sort(gids[cell == m])
+            parts.append(sel)
+            owner[sel] = d
+
+    dec = Decomposition(n_neurons=spec.n_neurons, parts=parts, owner=owner,
+                        device_area=np.full(n_devices, -1, dtype=np.int32))
+    dec.validate()
+    return dec
+
+
+# --------------------------------------------------------------------------
+# stacked (device-major) network arrays + exchange metadata
+# --------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class StackedNetwork:
+    """All shard graphs stacked on a leading device axis, plus exchange
+    metadata. Every array field has shape (S, ...) and is sharded on axis 0."""
+
+    n_shards: int
+    row_width: int
+    n_local: int
+    n_mirror: int
+    n_edges: int
+    b_pad: int                 # boundary slots per shard
+    max_delay: int
+    graph: dict[str, Any]      # stacked ShardGraph arrays (incl. mirror_src_*)
+    # exchange metadata (stacked, device-major)
+    boundary_slots: Any        # (S, B) int32 local idx published per slot
+    mirror_is_intra: Any       # (S, n_mirror) bool
+    mirror_row_gather: Any     # (S, n_mirror) int32 -> row-gathered flat idx
+    mirror_remote_gather: Any  # (S, n_mirror) int32 -> remote-gathered flat idx
+    mirror_src_flat: Any       # (S, n_mirror) int32 (global mode)
+    comm_bytes_global: int     # per-step traffic accounting (per shard, fp32)
+    comm_bytes_area: int
+
+
+def prepare_stacked(spec: NetworkSpec, dec: Decomposition,
+                    n_rows: int, row_width: int, *,
+                    pad_to_multiple: int = 8) -> StackedNetwork:
+    """Build uniform shards and the area/remote exchange index tables."""
+    shards = build_shards(spec, dec, pad_to_multiple=pad_to_multiple,
+                          uniform_pad=True)
+    S = len(shards)
+    assert S == n_rows * row_width
+    n_local = shards[0].n_local
+    n_mirror = shards[0].n_mirror
+    n_edges = shards[0].n_edges
+    row_of = np.arange(S) // row_width
+
+    # boundary sets: local indices consumed by shards in OTHER rows
+    boundary: list[np.ndarray] = [np.zeros(0, np.int64) for _ in range(S)]
+    consumers: list[list[np.ndarray]] = [[] for _ in range(S)]
+    for s, g in enumerate(shards):
+        src = np.asarray(g.mirror_src_shard)
+        idx = np.asarray(g.mirror_src_idx)
+        used = np.zeros(n_mirror, dtype=bool)
+        used[np.asarray(g.pre_idx)[np.asarray(g.delay) > 0]] = True
+        for src_shard in np.unique(src[used]):
+            if row_of[src_shard] != row_of[s]:
+                sel = used & (src == src_shard)
+                consumers[int(src_shard)].append(np.unique(idx[sel]))
+    for s in range(S):
+        if consumers[s]:
+            boundary[s] = np.unique(np.concatenate(consumers[s]))
+    b_pad = max(max((b.size for b in boundary), default=1), 1)
+    b_pad = ((b_pad + pad_to_multiple - 1) // pad_to_multiple) * pad_to_multiple
+
+    boundary_slots = np.zeros((S, b_pad), dtype=np.int32)
+    for s in range(S):
+        boundary_slots[s, :boundary[s].size] = boundary[s]
+
+    mirror_is_intra = np.zeros((S, n_mirror), dtype=bool)
+    mirror_row_gather = np.zeros((S, n_mirror), dtype=np.int32)
+    mirror_remote_gather = np.zeros((S, n_mirror), dtype=np.int32)
+    mirror_src_flat = np.zeros((S, n_mirror), dtype=np.int32)
+    for s, g in enumerate(shards):
+        src = np.asarray(g.mirror_src_shard)
+        idx = np.asarray(g.mirror_src_idx)
+        mirror_src_flat[s] = src
+        intra = row_of[src] == row_of[s]
+        mirror_is_intra[s] = intra
+        # row gather: (model_idx_within_row, local_idx) -> flat
+        mirror_row_gather[s] = (src % row_width) * n_local + idx
+        # remote gather: (src_flat, slot) -> flat; slot via searchsorted into
+        # the source's sorted boundary list (only meaningful where ~intra and
+        # the source actually publishes that neuron)
+        slot = np.zeros(n_mirror, dtype=np.int64)
+        for src_shard in np.unique(src[~intra]):
+            m = (~intra) & (src == src_shard)
+            b = boundary[int(src_shard)]
+            pos = np.searchsorted(b, idx[m])
+            pos = np.clip(pos, 0, max(b.size - 1, 0))
+            slot[m] = pos
+        mirror_remote_gather[s] = src * b_pad + slot
+
+    stack = lambda f: np.stack([np.asarray(getattr(g, f)) for g in shards])
+    graph = dict(
+        pre_idx=stack("pre_idx").astype(np.int32),
+        post_idx=stack("post_idx").astype(np.int32),
+        delay=stack("delay").astype(np.int32),
+        channel=stack("channel").astype(np.int32),
+        plastic=stack("plastic"),
+        weight_init=stack("weight_init").astype(np.float32),
+        group_id=stack("group_id").astype(np.int32),
+        ext_rate=stack("ext_rate").astype(np.float32),
+        ext_weight=stack("ext_weight").astype(np.float32),
+        mirror_src_idx=stack("mirror_src_idx").astype(np.int32),
+    )
+
+    # per-shard per-step spike traffic (fp32 bitmap words, DESIGN.md §2)
+    comm_global = S * n_local * 4
+    comm_area = row_width * n_local * 4 + S * b_pad * 4
+    return StackedNetwork(
+        n_shards=S, row_width=row_width, n_local=n_local, n_mirror=n_mirror,
+        n_edges=n_edges, b_pad=b_pad, max_delay=spec.max_delay, graph=graph,
+        boundary_slots=boundary_slots, mirror_is_intra=mirror_is_intra,
+        mirror_row_gather=mirror_row_gather,
+        mirror_remote_gather=mirror_remote_gather,
+        mirror_src_flat=mirror_src_flat,
+        comm_bytes_global=comm_global, comm_bytes_area=comm_area)
+
+
+# --------------------------------------------------------------------------
+# the distributed step
+# --------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class DistributedConfig:
+    engine: EngineConfig
+    comm_mode: str = "area"       # "area" | "global"
+    overlap: bool = True          # paper §III.C schedule
+    axis_names: tuple[str, ...] = ("data", "model")  # (outer..., inner)
+    # spike-exchange payload encoding: "f32" (naive bitmap words), "u8"
+    # (byte bitmap, 4x less traffic), "packed" (1 bit/neuron, 32x less -
+    # spikes ARE bits; §Perf iteration on the paper's own bottleneck)
+    spike_wire: str = "packed"
+
+    @property
+    def inner_axis(self) -> str:
+        return self.axis_names[-1]
+
+
+def _wire_encode(bits, wire: str):
+    """bits (n,) f32 in {0,1} -> wire payload."""
+    if wire == "f32":
+        return bits
+    if wire == "u8":
+        return bits.astype(jnp.uint8)
+    if wire == "packed":
+        n = bits.shape[0]
+        pad = (-n) % 8
+        b = jnp.pad(bits, (0, pad)).astype(jnp.uint8).reshape(-1, 8)
+        weights = (2 ** jnp.arange(8, dtype=jnp.uint8)).astype(jnp.uint8)
+        return jnp.sum(b * weights, axis=-1, dtype=jnp.uint8)
+    raise ValueError(wire)
+
+
+def _wire_decode(payload, n: int, wire: str, dtype):
+    """wire payload -> (n,) dtype bits; works on any leading batch dims."""
+    if wire == "f32":
+        return payload.astype(dtype)
+    if wire == "u8":
+        return payload.astype(dtype)
+    if wire == "packed":
+        shifts = jnp.arange(8, dtype=jnp.uint8)
+        bits = (payload[..., :, None] >> shifts) & jnp.uint8(1)
+        bits = bits.reshape(*payload.shape[:-1], -1)
+        return bits[..., :n].astype(dtype)
+    raise ValueError(wire)
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass
+class DistState:
+    """Scan-carried state; every leaf is (S, ...) sharded on axis 0."""
+    v_m: jax.Array
+    syn_ex: jax.Array
+    syn_in: jax.Array
+    ref_count: jax.Array
+    ring: jax.Array          # (S, D, n_mirror)
+    weights: jax.Array       # (S, E)
+    k_pre: jax.Array
+    k_post: jax.Array
+    prev_bits: jax.Array     # (S, n_local) spikes fired last step (raw)
+    t: jax.Array             # (S,) step counter (identical values)
+    key: jax.Array           # (S, 2) per-shard PRNG key data
+
+
+def init_stacked_state(net: StackedNetwork, groups: Sequence[snn.LIFParams],
+                       seed: int = 0, dtype=jnp.float32,
+                       weight_dtype=None) -> DistState:
+    """``weight_dtype`` may be narrower than the neuron dtype (bf16) for
+    non-plastic evaluation runs - weights are the largest per-edge stream
+    (§Perf C4)."""
+    S = net.n_shards
+    e_l = np.asarray([g.e_l for g in groups], dtype=np.float64)
+    gid = np.asarray(net.graph["group_id"])
+    keys = jax.random.split(jax.random.key(seed), S)
+    return DistState(
+        v_m=jnp.asarray(e_l[gid], dtype),
+        syn_ex=jnp.zeros((S, net.n_local), dtype),
+        syn_in=jnp.zeros((S, net.n_local), dtype),
+        ref_count=jnp.zeros((S, net.n_local), jnp.int32),
+        ring=jnp.zeros((S, net.max_delay, net.n_mirror), dtype),
+        weights=jnp.asarray(net.graph["weight_init"],
+                            weight_dtype or dtype),
+        k_pre=jnp.zeros((S, net.n_mirror), dtype),
+        k_post=jnp.zeros((S, net.n_local), dtype),
+        prev_bits=jnp.zeros((S, net.n_local), dtype),
+        t=jnp.zeros((S,), jnp.int32),
+        key=jax.random.key_data(keys),
+    )
+
+
+def _exchange(bits, g, cfg: DistributedConfig):
+    """Map this shard's freshly fired local bits to its mirror rows.
+
+    The wire format is config-selectable: spikes are 1-bit events, so the
+    payload can be packed 32x below the naive f32 bitmap (the same
+    small-message philosophy as the paper's planned BSB library)."""
+    wire = cfg.spike_wire
+    dtype = bits.dtype
+    n_local = bits.shape[0]
+    if cfg.comm_mode == "global":
+        payload = _wire_encode(bits, wire)
+        all_p = jax.lax.all_gather(payload, axis_name=cfg.axis_names,
+                                   tiled=False)              # (S, W)
+        all_bits = _wire_decode(all_p, n_local, wire, dtype)
+        flat = all_bits.reshape(-1)
+        return jnp.take(flat, g["mirror_src_flat"] * n_local
+                        + g["mirror_src_idx"])
+    if cfg.comm_mode == "area":
+        payload = _wire_encode(bits, wire)
+        row_p = jax.lax.all_gather(payload, axis_name=cfg.inner_axis,
+                                   tiled=False)              # (M, W)
+        row_bits = _wire_decode(row_p, n_local, wire, dtype)
+        bbits = jnp.take(bits, g["boundary_slots"])          # (B,)
+        b_payload = _wire_encode(bbits, wire)
+        remote_p = jax.lax.all_gather(b_payload, axis_name=cfg.axis_names,
+                                      tiled=False)           # (S, Wb)
+        remote = _wire_decode(remote_p, bbits.shape[0], wire, dtype)
+        intra_val = jnp.take(row_bits.reshape(-1), g["mirror_row_gather"])
+        remote_val = jnp.take(remote.reshape(-1), g["mirror_remote_gather"])
+        return jnp.where(g["mirror_is_intra"], intra_val, remote_val)
+    raise ValueError(f"unknown comm mode {cfg.comm_mode!r}")
+
+
+def _sweep_masked(g, weights, values_per_edge, delay_mask, n_local, dtype):
+    """segment-sum of weighted per-edge arrival values under a delay mask."""
+    contrib = weights * values_per_edge * delay_mask
+    ex = jnp.where(g["channel"] == 0, contrib, 0.0)
+    inh = jnp.where(g["channel"] == 1, contrib, 0.0)
+    return (jax.ops.segment_sum(ex, g["post_idx"], num_segments=n_local),
+            jax.ops.segment_sum(inh, g["post_idx"], num_segments=n_local))
+
+
+def wire_bytes_per_step(net: StackedNetwork, mode: str = "area",
+                        wire: str = "packed") -> float:
+    """Per-shard spike-exchange bytes per step for a wire encoding."""
+    per = {"f32": 4.0, "u8": 1.0, "packed": 0.125}[wire]
+    if mode == "global":
+        return net.n_shards * net.n_local * per
+    return net.row_width * net.n_local * per + net.n_shards * net.b_pad * per
+
+
+def make_raw_distributed_step(mesh: Mesh, groups: Sequence[snn.LIFParams],
+                              cfg: DistributedConfig, *, max_delay: int,
+                              n_local: int, n_mirror: int):
+    """The shard_map'ed step as fn(state, consts) with consts as traced
+    operands - usable with ShapeDtypeStructs for production-scale dry-runs
+    (no graph materialization)."""
+    return _build_step(mesh, groups, cfg, max_delay, n_local, n_mirror)
+
+
+def make_distributed_step(net: StackedNetwork, mesh: Mesh,
+                          groups: Sequence[snn.LIFParams],
+                          cfg: DistributedConfig):
+    """Build the jit-able sharded step: DistState -> (DistState, spike bits).
+
+    All graph/metadata arrays are closed over as device-axis-sharded
+    constants.  The returned function is shard_map'ed over the mesh and can
+    be scanned or called per-step.
+    """
+    smapped = _build_step(mesh, groups, cfg, net.max_delay, net.n_local,
+                          net.n_mirror)
+    consts = dict(net.graph)
+    consts.update(
+        boundary_slots=net.boundary_slots,
+        mirror_is_intra=net.mirror_is_intra,
+        mirror_row_gather=net.mirror_row_gather,
+        mirror_remote_gather=net.mirror_remote_gather,
+        mirror_src_flat=net.mirror_src_flat,
+    )
+    consts_j = {k: jnp.asarray(v) for k, v in consts.items()}
+
+    def step(state: DistState):
+        return smapped(state, consts_j)
+
+    return step, consts_j
+
+
+def _build_step(mesh: Mesh, groups: Sequence[snn.LIFParams],
+                cfg: DistributedConfig, max_delay: int, n_local: int,
+                n_mirror: int):
+    table_np = np.asarray(snn.make_param_table(list(groups), cfg.engine.dt))
+    D = max_delay
+
+    def step_local(g, state: DistState):
+        """Body on ONE shard: every array already squeezed to per-shard."""
+        # edge/index arrays may arrive in compact dtypes (u16 indices, i8
+        # delays - §Perf: the static edge arrays dominate sweep traffic);
+        # compute in i32 regardless.
+        g = dict(g)
+        for k in ("pre_idx", "post_idx", "delay", "channel",
+                  "mirror_src_idx", "boundary_slots", "mirror_row_gather",
+                  "mirror_remote_gather", "mirror_src_flat"):
+            if k in g and g[k].dtype != jnp.int32:
+                g[k] = g[k].astype(jnp.int32)
+        # neuron-state dtype drives the math; WEIGHTS may be stored
+        # narrower (bf16 for non-plastic evaluation runs - §Perf C4) and
+        # promote at the multiply.
+        dtype = state.v_m.dtype
+        t = state.t
+
+        # ---- (1) exchange of last step's spikes (collective starts here) --
+        mirror_prev = _exchange(state.prev_bits, g, cfg)
+
+        # ---- (2) synaptic sweep ------------------------------------------
+        edge_delay = g["delay"]
+        if cfg.overlap:
+            # delays >= 2 from the (old) ring - independent of the exchange
+            row = jnp.mod(t - edge_delay, D)
+            arrived_old = jnp.take(state.ring.reshape(-1),
+                                   row * n_mirror + g["pre_idx"])
+            mask_old = (edge_delay >= 2).astype(dtype)
+            ex_o, in_o = _sweep_masked(g, state.weights, arrived_old,
+                                       mask_old, n_local, dtype)
+            # delay == 1 from the fresh exchange
+            arrived_new = jnp.take(mirror_prev, g["pre_idx"])
+            mask_new = (edge_delay == 1).astype(dtype)
+            ex_n, in_n = _sweep_masked(g, state.weights, arrived_new,
+                                       mask_new, n_local, dtype)
+            input_ex, input_in = ex_o + ex_n, in_o + in_n
+            arrived = (arrived_old * mask_old + arrived_new * mask_new)
+            ring = jax.lax.dynamic_update_index_in_dim(
+                state.ring, mirror_prev, jnp.mod(t - 1, D), axis=0)
+        else:
+            # naive schedule: write first, then one full sweep (the sweep
+            # then depends on the collective - no overlap possible)
+            ring = jax.lax.dynamic_update_index_in_dim(
+                state.ring, mirror_prev, jnp.mod(t - 1, D), axis=0)
+            row = jnp.mod(t - edge_delay, D)
+            arrived = jnp.take(ring.reshape(-1),
+                               row * n_mirror + g["pre_idx"])
+            mask = (edge_delay > 0).astype(dtype)
+            arrived = arrived * mask
+            input_ex, input_in = _sweep_masked(
+                g, state.weights, arrived, jnp.ones_like(mask), n_local,
+                dtype)
+
+        # ---- (3) external drive + neuron dynamics ------------------------
+        key = jax.random.wrap_key_data(state.key)
+        key, sub = jax.random.split(key)
+        if cfg.engine.external_drive:
+            lam = g["ext_rate"] * (cfg.engine.dt * 1e-3)
+            input_ex = input_ex + (g["ext_weight"]
+                                   * jax.random.poisson(sub, lam, (n_local,))
+                                   ).astype(dtype)
+        neurons = snn.NeuronState(
+            v_m=state.v_m, syn_ex=state.syn_ex, syn_in=state.syn_in,
+            ref_count=state.ref_count,
+            spike=jnp.zeros((n_local,), jnp.bool_), group_id=g["group_id"])
+        table = jnp.asarray(table_np, dtype)
+        neurons = snn.lif_step(neurons, table, input_ex, input_in,
+                               synapse_model=cfg.engine.synapse_model)
+        bits = neurons.spike
+
+        # ---- (4) plasticity ----------------------------------------------
+        if cfg.engine.stdp is not None:
+            traces = stdp_mod.TraceState(k_pre=state.k_pre,
+                                         k_post=state.k_post)
+            new_w = stdp_mod.stdp_edge_update(
+                state.weights, g["pre_idx"], g["post_idx"], arrived, bits,
+                traces, cfg.engine.stdp)
+            weights = jnp.where(g["plastic"], new_w, state.weights)
+            pre_arr = jax.ops.segment_max(arrived, g["pre_idx"],
+                                          num_segments=n_mirror)
+            traces = stdp_mod.update_traces(traces, cfg.engine.stdp,
+                                            cfg.engine.dt, pre_arr, bits)
+            k_pre, k_post = traces.k_pre, traces.k_post
+        else:
+            weights, k_pre, k_post = state.weights, state.k_pre, state.k_post
+
+        new_state = DistState(
+            v_m=neurons.v_m, syn_ex=neurons.syn_ex, syn_in=neurons.syn_in,
+            ref_count=neurons.ref_count, ring=ring, weights=weights,
+            k_pre=k_pre, k_post=k_post,
+            prev_bits=bits.astype(dtype), t=t + 1,
+            key=jax.random.key_data(key))
+        return new_state, bits
+
+    # ---- shard_map wrapper ----------------------------------------------
+    squeeze = lambda tree: jax.tree.map(lambda a: a[0], tree)
+    expand = lambda tree: jax.tree.map(lambda a: a[None], tree)
+
+    def sharded_step(state: DistState, consts_in):
+        g = squeeze(consts_in)
+        s = squeeze(state)
+        new_s, bits = step_local(g, s)
+        return expand(new_s), bits[None]
+
+    state_specs = P(cfg.axis_names)
+    return jax.shard_map(
+        sharded_step, mesh=mesh,
+        in_specs=(state_specs, state_specs),
+        out_specs=(state_specs, state_specs),
+        check_vma=False)

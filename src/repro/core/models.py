@@ -1,0 +1,194 @@
+"""The paper's two benchmark networks (§IV) as NetworkSpec factories.
+
+1. :func:`hpc_benchmark` - NEST's "Random balanced network HPC benchmark"
+   (verification case, §IV.A): a Brunel-style balanced random network with
+   fixed indegree, whose E->E synapses use multiplicative-depression /
+   power-law-potentiation STDP.  Firing must be asynchronous-irregular below
+   ~10 Hz.  Used to verify (a) nonlinear synaptic dynamics run race-free
+   under the indegree decomposition and (b) 1-shard vs N-shard equivalence.
+
+2. :func:`marmoset` - the evaluation case (§IV.B): a multi-area cortical
+   network in the style of the marmoset Paxinos connectome with
+   Potjans-Diesmann-like internals: per-area E/I populations, dense
+   intra-area connectivity, sparse inter-area E->E projections whose delays
+   derive from inter-areal distance (conduction velocity 3.5 mm/ms), and a
+   distance-decaying connection density (exponential distance rule standing
+   in for the FLN matrix; the real connectome files are network-fetched in
+   the paper and unavailable offline - structure and statistics follow the
+   published recipe).
+
+Both scale with a ``scale`` factor exactly like the paper's "normalized
+problem size" (scale=1 ~ 1M neurons, 3.8B synapses for the marmoset case).
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+from repro.core.builder import NetworkSpec, Population, Projection
+from repro.core.decomposition import AreaSpec
+from repro.core.snn import LIFParams
+from repro.core.stdp import STDPParams
+
+__all__ = ["hpc_benchmark", "marmoset", "HPC_STDP", "firing_rate_hz"]
+
+# dt = 0.1 ms everywhere (NEST default for these models)
+DT_MS = 0.1
+
+# STDP parameters of the hpc_benchmark E->E synapses (stdp_pl_synapse_hom).
+HPC_STDP = STDPParams(lam=0.1, alpha=0.0513, mu=0.4, w0=45.61,
+                      tau_plus=15.0, tau_minus=30.0, w_min=0.0, w_max=200.0)
+
+
+def _ball(rng: np.random.Generator, n: int, center, radius: float):
+    v = rng.normal(size=(n, 3))
+    v /= np.linalg.norm(v, axis=1, keepdims=True) + 1e-12
+    r = radius * rng.uniform(size=(n, 1)) ** (1.0 / 3.0)
+    return np.asarray(center, dtype=np.float64) + v * r
+
+
+def hpc_benchmark(scale: float = 1.0, *, stdp: bool = True,
+                  seed: int = 42) -> tuple[NetworkSpec, STDPParams | None]:
+    """Balanced random network; scale=1 -> 11250 neurons (NEST convention)."""
+    rng = np.random.default_rng(seed)
+    n = max(int(round(11250 * scale)), 20)
+    ne, ni = int(0.8 * n), n - int(0.8 * n)
+    eps = 0.1
+    k_e = max(1, min(int(eps * ne), ne - 1))
+    k_i = max(1, min(int(eps * ni), ni - 1))
+
+    je = 45.61       # pA (~0.15 mV PSP at these membrane params)
+    g = 5.0
+    ji = -g * je
+    delay_steps = int(round(1.5 / DT_MS))  # 1.5 ms
+    max_delay = delay_steps + 1
+
+    lif = LIFParams(tau_m=10.0, c_m=250.0, e_l=-65.0, v_th=-50.0,
+                    v_reset=-65.0, t_ref=0.5, tau_syn_ex=0.5, tau_syn_in=0.5)
+
+    # external drive: eta * nu_threshold through the same synapse weight;
+    # eta tuned so the network sits in the asynchronous-irregular regime
+    # below 10 Hz (the NEST reference band for this benchmark, §IV.A).
+    eta = 0.92
+    nu_thr_hz = 1e3 * (lif.v_th - lif.e_l) * lif.c_m / (
+        je * lif.tau_m * lif.tau_syn_ex)  # rate whose mean drive reaches theta
+    ext_rate = eta * nu_thr_hz
+
+    area = AreaSpec(name="net", n_neurons=n,
+                    positions=_ball(rng, n, (0, 0, 0), 1.0))
+    pops = [
+        Population("E", area=0, group=0, n=ne,
+                   ext_rate_hz=ext_rate, ext_weight=je),
+        Population("I", area=0, group=0, n=ni,
+                   ext_rate_hz=ext_rate, ext_weight=je),
+    ]
+    projections = [
+        Projection(0, 0, k_e, je, 0.0, delay_steps, delay_steps,
+                   channel=0, plastic=stdp),
+        Projection(0, 1, k_e, je, 0.0, delay_steps, delay_steps, channel=0),
+        Projection(1, 0, k_i, ji, 0.0, delay_steps, delay_steps, channel=1),
+        Projection(1, 1, k_i, ji, 0.0, delay_steps, delay_steps, channel=1),
+    ]
+    spec = NetworkSpec(areas=[area], groups=[lif], populations=pops,
+                       projections=projections, max_delay=max_delay,
+                       seed=seed)
+    return spec, (HPC_STDP if stdp else None)
+
+
+def marmoset(scale: float = 1.0, *, n_areas: int = 8,
+             seed: int = 7) -> NetworkSpec:
+    """Multi-area marmoset-style cortical network.
+
+    scale=1 -> ~1M neurons total across ``n_areas`` areas (paper's
+    normalized problem size 1); edges ~ 3.8B at full indegrees.  Tests and
+    CPU benchmarks use small scales; indegrees shrink proportionally below
+    the biological caps exactly as NEST's hpc_benchmark does.
+    """
+    rng = np.random.default_rng(seed)
+    # area centers on a cortical shell (radius 15 mm), sizes log-normal-ish
+    centers = _ball(rng, n_areas, (0, 0, 0), 1.0)
+    centers *= 15.0 / (np.linalg.norm(centers, axis=1, keepdims=True) + 1e-9)
+    rel = rng.lognormal(mean=0.0, sigma=0.35, size=n_areas)
+    rel /= rel.sum()
+    n_total = max(int(round(1_000_000 * scale)), 40 * n_areas)
+    sizes = np.maximum((rel * n_total).astype(np.int64), 20)
+
+    dist = np.linalg.norm(centers[:, None, :] - centers[None, :, :], axis=-1)
+    velocity = 3.5  # mm/ms
+    inter_delay_steps = np.maximum(
+        np.round(dist / velocity / DT_MS).astype(np.int64), 1)
+    max_delay = int(inter_delay_steps.max()) + int(round(2.0 / DT_MS)) + 1
+
+    exc = LIFParams(tau_m=10.0, c_m=250.0, e_l=-65.0, v_th=-50.0,
+                    v_reset=-65.0, t_ref=2.0, tau_syn_ex=0.5, tau_syn_in=0.5)
+    inh = LIFParams(tau_m=10.0, c_m=250.0, e_l=-65.0, v_th=-50.0,
+                    v_reset=-65.0, t_ref=1.0, tau_syn_ex=0.5, tau_syn_in=0.5)
+
+    je, g = 87.8, 4.0  # Potjans-Diesmann reference weight (pA) and balance
+    ji = -g * je
+    ext_rate = 8.0 * 2300.0  # 2300 ext synapses @ 8 Hz, collapsed rate
+    delay_intra_lo = int(round(0.5 / DT_MS))
+    delay_intra_hi = int(round(2.0 / DT_MS))
+
+    areas, pops, projections = [], [], []
+    lam_mm = 15.0  # exponential distance rule length constant
+    for a in range(n_areas):
+        n_a = int(sizes[a])
+        ne, ni = int(0.8 * n_a), n_a - int(0.8 * n_a)
+        areas.append(AreaSpec(
+            name=f"area{a}", n_neurons=n_a,
+            positions=_ball(rng, n_a, centers[a], 2.0)))
+        pe, pi = 2 * a, 2 * a + 1
+        # drive tuned to the fluctuation regime (~10-25 Hz population rates,
+        # the Potjans-Diesmann operating band)
+        pops.append(Population(f"A{a}E", area=a, group=0, n=ne,
+                               ext_rate_hz=ext_rate, ext_weight=je * 0.43))
+        pops.append(Population(f"A{a}I", area=a, group=1, n=ni,
+                               ext_rate_hz=ext_rate * 0.85,
+                               ext_weight=je * 0.43))
+        # intra-area Potjans-like indegrees (scaled with population size)
+        k_ee = max(1, min(int(0.10 * ne), ne - 1))
+        k_ei = max(1, min(int(0.10 * ne), ne))
+        k_ie = max(1, min(int(0.12 * ni), ni))
+        k_ii = max(1, min(int(0.12 * ni), ni - 1))
+        projections += [
+            Projection(pe, pe, k_ee, je, je * 0.1, delay_intra_lo,
+                       delay_intra_hi, channel=0),
+            Projection(pe, pi, k_ei, je, je * 0.1, delay_intra_lo,
+                       delay_intra_hi, channel=0),
+            Projection(pi, pe, k_ie, ji, abs(ji) * 0.1, delay_intra_lo,
+                       delay_intra_hi, channel=1),
+            Projection(pi, pi, k_ii, ji, abs(ji) * 0.1, delay_intra_lo,
+                       delay_intra_hi, channel=1),
+        ]
+
+    # inter-area E->E, density decays with distance (exponential rule)
+    for a in range(n_areas):
+        ne_a = pops[2 * a].n
+        for b in range(n_areas):
+            if a == b:
+                continue
+            w_ab = float(np.exp(-dist[a, b] / lam_mm))
+            k = int(round(0.02 * ne_a * w_ab))
+            if k < 1:
+                continue
+            d0 = int(inter_delay_steps[a, b])
+            projections.append(Projection(
+                2 * b, 2 * a, min(k, pops[2 * b].n), je * 0.8, je * 0.08,
+                d0, min(d0 + 5, max_delay), channel=0,
+                src_frac=0.15))  # cortico-cortical projection neurons
+
+    return NetworkSpec(areas=areas, groups=[exc, inh], populations=pops,
+                       projections=projections, max_delay=max_delay,
+                       seed=seed)
+
+
+def firing_rate_hz(spikes, n_real: int | None = None) -> float:
+    """Mean population firing rate from a (steps, n) spike-bit record."""
+    s = np.asarray(spikes)
+    steps, n = s.shape
+    if n_real is not None:
+        s = s[:, :n_real]
+        n = n_real
+    t_s = steps * DT_MS * 1e-3
+    return float(s.sum() / (n * t_s))

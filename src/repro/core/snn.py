@@ -1,0 +1,216 @@
+"""Neuron and synapse dynamics (paper §I.A, eqs. 1-3).
+
+Implements the leaky-integrate-and-fire (LIF) neuron with
+
+* **current-based exponential synapses** ("iaf_psc_exp" semantics) using the
+  Rotter-Diesmann *exact integration* propagators - the method the paper's
+  refs [21][22] prescribe and the one NEST uses for the Potjans-Diesmann
+  microcircuit the marmoset evaluation is built from; and
+* **conductance-based exponential synapses** per the paper's eq. (3)
+  (`I_syn = sum_j sum_f delta(t - t_j^f) W g_syn (u - E_syn)`), integrated
+  with exponential-Euler (exact integration does not exist for the
+  multiplicative coupling; this matches NEST's "cond_exp" treatment).
+
+All state lives in a flat :class:`NeuronState` pytree of ``(n,)`` arrays, and
+all heterogeneous parameters are per-*group* tables gathered through a
+``group_id`` vector, so one fused elementwise update serves mixed populations
+(exc/inh, per-area variants) without ragged code paths.  This is also exactly
+the layout the ``lif_step`` Pallas kernel consumes.
+
+Precision note (DESIGN.md §8): the paper runs fp64 on Fugaku; TPU v5e has no
+fp64, so the default here is fp32 with fp32 accumulation.  The CPU test suite
+re-runs verification in fp64 via ``jax.config.update('jax_enable_x64', True)``
+scoped fixtures to reproduce the paper's no-compression claim.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+__all__ = [
+    "LIFParams",
+    "NeuronState",
+    "make_param_table",
+    "init_state",
+    "lif_step",
+    "SynapseModel",
+]
+
+
+@dataclasses.dataclass(frozen=True)
+class LIFParams:
+    """Per-group LIF parameters (NEST naming, SI-ish units: mV, ms, pF, nS)."""
+
+    tau_m: float = 10.0        # membrane time constant [ms]
+    c_m: float = 250.0         # membrane capacitance [pF]
+    e_l: float = -65.0         # resting / leak potential [mV]
+    v_th: float = -50.0        # spike threshold [mV]
+    v_reset: float = -65.0     # reset potential [mV]
+    t_ref: float = 2.0         # absolute refractory period [ms]
+    tau_syn_ex: float = 0.5    # excitatory synaptic time constant [ms]
+    tau_syn_in: float = 0.5    # inhibitory synaptic time constant [ms]
+    # conductance-mode reversal potentials (paper eq. 3's E_syn)
+    e_ex: float = 0.0          # [mV]
+    e_in: float = -85.0        # [mV]
+    i_e: float = 0.0           # constant external current [pA]
+
+
+class SynapseModel:
+    CURRENT_EXP = "current_exp"
+    COND_EXP = "cond_exp"
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass
+class NeuronState:
+    """Flat per-neuron state; every leaf is shape (n,)."""
+
+    v_m: jax.Array          # membrane potential [mV]
+    syn_ex: jax.Array       # exc. synaptic current [pA] or conductance [nS]
+    syn_in: jax.Array       # inh. synaptic current [pA] or conductance [nS]
+    ref_count: jax.Array    # remaining refractory steps (int32)
+    spike: jax.Array        # bool: spiked at the *last* step
+    group_id: jax.Array     # int32 index into the parameter table
+
+
+# Parameter-table row layout (columns of the (G, NCOL) table). Keeping this a
+# plain float array (not a pytree of scalars) lets the Pallas kernel and the
+# jnp path share one gather.
+_COLS = (
+    "p_vv",      # exp(-dt / tau_m)
+    "p_ee",      # exp(-dt / tau_syn_ex)
+    "p_ii",      # exp(-dt / tau_syn_in)
+    "p_ve",      # exact-integration coupling: syn_ex -> v
+    "p_vi",      # exact-integration coupling: syn_in -> v
+    "p_vconst",  # e_l * (1 - p_vv) + R*(1-p_vv)*i_e  (leak + DC drive)
+    "v_th",
+    "v_reset",
+    "ref_steps",  # t_ref / dt, rounded
+    "e_ex",      # conductance mode only
+    "e_in",
+    "inv_cm_dt",  # dt / c_m (conductance exponential-Euler)
+)
+COL = {name: i for i, name in enumerate(_COLS)}
+NCOL = len(_COLS)
+
+
+def _couple(tau_syn: float, tau_m: float, c_m: float, dt: float) -> float:
+    """Exact-integration propagator entry P_{v,syn} (Rotter & Diesmann 1999).
+
+    For dv/dt = -v/tau_m + I/c_m, dI/dt = -I/tau_syn the exact update is
+      v(t+dt) = e^{-dt/tau_m} v + P_vI * I,
+      P_vI = (tau_syn tau_m)/(c_m (tau_m - tau_syn)) (e^{-dt/tau_m} - e^{-dt/tau_syn})
+    with the usual l'Hopital limit at tau_syn == tau_m.
+    """
+    if abs(tau_m - tau_syn) < 1e-9:
+        # l'Hopital limit tau_syn -> tau_m.
+        return float((dt / c_m) * np.exp(-dt / tau_m))
+    a = np.exp(-dt / tau_m) - np.exp(-dt / tau_syn)
+    return float(tau_syn * tau_m / (c_m * (tau_m - tau_syn)) * a)
+
+
+def make_param_table(groups: list[LIFParams], dt: float,
+                     dtype=jnp.float32) -> jax.Array:
+    """Precompute the (G, NCOL) propagator table for a list of neuron groups."""
+    rows = []
+    for g in groups:
+        p_vv = np.exp(-dt / g.tau_m)
+        r_m = g.tau_m / g.c_m  # membrane resistance [GOhm] in these units
+        rows.append([
+            p_vv,
+            np.exp(-dt / g.tau_syn_ex),
+            np.exp(-dt / g.tau_syn_in),
+            _couple(g.tau_syn_ex, g.tau_m, g.c_m, dt),
+            _couple(g.tau_syn_in, g.tau_m, g.c_m, dt),
+            g.e_l * (1.0 - p_vv) + r_m * (1.0 - p_vv) * g.i_e,
+            g.v_th,
+            g.v_reset,
+            max(1.0, round(g.t_ref / dt)),
+            g.e_ex,
+            g.e_in,
+            dt / g.c_m,
+        ])
+    return jnp.asarray(np.asarray(rows), dtype=dtype)
+
+
+def init_state(n: int, group_id: np.ndarray | jax.Array,
+               groups: list[LIFParams], *, v_init: np.ndarray | None = None,
+               dtype=jnp.float32) -> NeuronState:
+    e_l = np.asarray([g.e_l for g in groups], dtype=np.float64)
+    gid = np.asarray(group_id, dtype=np.int32)
+    v0 = e_l[gid] if v_init is None else np.asarray(v_init)
+    return NeuronState(
+        v_m=jnp.asarray(v0, dtype=dtype),
+        syn_ex=jnp.zeros((n,), dtype=dtype),
+        syn_in=jnp.zeros((n,), dtype=dtype),
+        ref_count=jnp.zeros((n,), dtype=jnp.int32),
+        spike=jnp.zeros((n,), dtype=jnp.bool_),
+        group_id=jnp.asarray(gid),
+    )
+
+
+def lif_step(
+    state: NeuronState,
+    table: jax.Array,
+    input_ex: jax.Array,
+    input_in: jax.Array,
+    *,
+    synapse_model: str = SynapseModel.CURRENT_EXP,
+    i_ext: jax.Array | None = None,
+) -> NeuronState:
+    """One dt of neuron dynamics. Pure elementwise; the jnp oracle for the
+    ``lif_step`` Pallas kernel.
+
+    ``input_ex`` / ``input_in`` are the per-neuron synaptic increments
+    accumulated by the synaptic sweep this step (pA for current mode, nS for
+    conductance mode; inhibitory increments arrive as positive magnitudes).
+    """
+    t = table[state.group_id]  # (n, NCOL) gather
+    p_vv, p_ee, p_ii = t[:, COL["p_vv"]], t[:, COL["p_ee"]], t[:, COL["p_ii"]]
+    v_th, v_reset = t[:, COL["v_th"]], t[:, COL["v_reset"]]
+    ref_steps = t[:, COL["ref_steps"]].astype(jnp.int32)
+
+    # Synaptic state decays exactly; new arrivals add AFTER propagation
+    # (NEST convention: a spike arriving at t affects v from t+dt on).
+    syn_ex = state.syn_ex * p_ee + input_ex
+    syn_in = state.syn_in * p_ii + input_in
+
+    if synapse_model == SynapseModel.CURRENT_EXP:
+        dv_syn = (state.syn_ex * t[:, COL["p_ve"]]
+                  + state.syn_in * t[:, COL["p_vi"]])
+        v_prop = state.v_m * p_vv + dv_syn + t[:, COL["p_vconst"]]
+    elif synapse_model == SynapseModel.COND_EXP:
+        # Exponential Euler on v with conductances frozen over dt:
+        # dv = dt/c_m * (g_ex (E_ex - v) + g_in (E_in - v)) + leak (exact).
+        i_cond = (state.syn_ex * (t[:, COL["e_ex"]] - state.v_m)
+                  - state.syn_in * (state.v_m - t[:, COL["e_in"]]))
+        v_prop = (state.v_m * p_vv + t[:, COL["p_vconst"]]
+                  + i_cond * t[:, COL["inv_cm_dt"]])
+    else:
+        raise ValueError(f"unknown synapse model {synapse_model!r}")
+
+    if i_ext is not None:
+        # external drive integrated with the same coupling as leak term
+        v_prop = v_prop + i_ext * t[:, COL["inv_cm_dt"]]
+
+    refractory = state.ref_count > 0
+    v_new = jnp.where(refractory, v_reset, v_prop)
+    spike = jnp.logical_and(jnp.logical_not(refractory), v_new >= v_th)
+    v_new = jnp.where(spike, v_reset, v_new)
+    ref_count = jnp.where(
+        spike, ref_steps,
+        jnp.maximum(state.ref_count - 1, 0).astype(jnp.int32))
+
+    return NeuronState(
+        v_m=v_new,
+        syn_ex=syn_ex,
+        syn_in=syn_in,
+        ref_count=ref_count,
+        spike=spike,
+        group_id=state.group_id,
+    )

@@ -1,0 +1,106 @@
+"""STDP: multiplicative depression + power-law potentiation (paper §IV.A).
+
+The verification case is NEST's ``hpc_benchmark``: a balanced random network
+whose E->E synapses use the homogeneous power-law STDP rule
+(``stdp_pl_synapse_hom``, Morrison/Aertsen/Diesmann 2007):
+
+    on a PRE spike  (arriving at the synapse):  dw = -lambda * alpha * w * K_post
+    on a POST spike:                            dw = +lambda * w0^(1-mu) * w^mu * K_pre
+
+where ``K_pre`` / ``K_post`` are exponentially-decaying spike traces with time
+constants ``tau_plus`` / ``tau_minus``.  The paper uses this case precisely to
+demonstrate that *nonlinear, stateful* per-edge updates stay race-free under
+the indegree decomposition: every synapse is owned by exactly one partition
+(the one owning its post neuron), so both update directions write disjoint
+memory - no mutex, no atomic.
+
+This module is the time-driven jnp formulation over the delay-bucketed edge
+layout of :mod:`repro.core.engine`:
+
+* per-neuron traces are updated once per step (decay + spike increment);
+* per-edge weight updates are masked elementwise ops over owner-sorted edge
+  arrays - exactly the access pattern of the ``stdp_update`` Pallas kernel,
+  for which :func:`stdp_edge_update` is the oracle.
+
+Timing semantics: depression is applied when the pre spike *arrives* at the
+synapse (axonal delay included, as in NEST's default "axonal" interpretation
+of the dendritic-delay bookkeeping), potentiation when the post neuron fires.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["STDPParams", "TraceState", "init_traces", "update_traces",
+           "stdp_edge_update"]
+
+
+@dataclasses.dataclass(frozen=True)
+class STDPParams:
+    lam: float = 0.1          # learning rate lambda
+    alpha: float = 0.0513     # asymmetry of depression
+    mu: float = 0.4           # potentiation weight exponent (power law)
+    w0: float = 1.0           # reference weight [pA]
+    tau_plus: float = 15.0    # pre-trace time constant [ms]
+    tau_minus: float = 30.0   # post-trace time constant [ms]
+    w_min: float = 0.0
+    w_max: float = 1e6
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass
+class TraceState:
+    """Exponential spike traces; (n_mirror,) for pre, (n_local,) for post."""
+
+    k_pre: jax.Array
+    k_post: jax.Array
+
+
+def init_traces(n_pre: int, n_post: int, dtype=jnp.float32) -> TraceState:
+    return TraceState(k_pre=jnp.zeros((n_pre,), dtype),
+                      k_post=jnp.zeros((n_post,), dtype))
+
+
+def update_traces(tr: TraceState, p: STDPParams, dt: float,
+                  pre_spike: jax.Array, post_spike: jax.Array) -> TraceState:
+    """Decay-then-increment trace update (order matches NEST archiving)."""
+    decay_pre = jnp.exp(jnp.asarray(-dt / p.tau_plus, tr.k_pre.dtype))
+    decay_post = jnp.exp(jnp.asarray(-dt / p.tau_minus, tr.k_post.dtype))
+    return TraceState(
+        k_pre=tr.k_pre * decay_pre + pre_spike.astype(tr.k_pre.dtype),
+        k_post=tr.k_post * decay_post + post_spike.astype(tr.k_post.dtype),
+    )
+
+
+def stdp_edge_update(
+    weights: jax.Array,      # (E,) current weights, owner-sorted
+    pre_idx: jax.Array,      # (E,) mirror index of pre neuron
+    post_idx: jax.Array,     # (E,) local index of post neuron
+    edge_arrived: jax.Array,  # (E,) per-EDGE: pre spike arriving this step
+    post_spike: jax.Array,   # (n_local,) bool: post neuron fired this step
+    traces: TraceState,
+    p: STDPParams,
+) -> jax.Array:
+    """One step of the pl-STDP rule on every owned edge (oracle for the
+    ``stdp_update`` kernel).  ``edge_arrived`` is per-edge because arrival
+    time depends on the edge's own delay (two edges sharing a pre neuron can
+    see the same spike at different steps).  Purely elementwise after two
+    trace gathers; the indegree layout guarantees each (edge, post) is
+    touched by one owner.
+    """
+    w = weights
+    dtype = w.dtype
+    pre_m = edge_arrived.astype(dtype)
+    post_m = post_spike[post_idx].astype(dtype)
+    k_post = traces.k_post[post_idx]
+    k_pre = traces.k_pre[pre_idx]
+
+    # Multiplicative depression on pre arrival.
+    w = w - pre_m * (p.lam * p.alpha) * w * k_post
+    # Power-law potentiation on post spike: lambda * w0^(1-mu) * w^mu * K_pre.
+    w_safe = jnp.maximum(w, 1e-12)  # power of non-positive guard
+    w = w + post_m * p.lam * (p.w0 ** (1.0 - p.mu)) * (w_safe ** p.mu) * k_pre
+    return jnp.clip(w, p.w_min, p.w_max)

@@ -1,0 +1,124 @@
+"""Pallas TPU kernel: fused flash attention (online softmax in VMEM).
+
+§Perf iteration 5: the roofline iterations isolated the residual train
+memory term to un-fused attention score traffic - XLA materializes the
+fp32 (S, T) scores (and their mask/selects/transposes) in HBM between
+fusions, and chunking at the XLA level merely re-materializes block scores
+(EXPERIMENTS.md §Perf A4, refuted).  The fix is structural: fuse the
+online-softmax loop in VMEM so per-layer attention traffic drops from
+O(S·T) to O((S+T)·dh).
+
+Layout: inputs pre-flattened to (B*H, S, dh) / (B*Hkv, T, dh); grid =
+(B*H, nq, nk) with the kv dim iterated fastest; each (bh, qi) revisits its
+output block across the nk steps, carrying the running (max, sum, acc)
+triple in VMEM scratch - the canonical TPU flash pattern.  GQA folds the
+query-group into the kv head via the BlockSpec index map.
+
+Validated in interpret mode against the system's own `_sdpa` oracle for
+causal and bidirectional masks, GQA group sizes, and ragged tails
+(tests/test_flash_attention.py).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+__all__ = ["flash_attention"]
+
+NEG_INF = -1e30
+
+
+def _kernel(q_ref, k_ref, v_ref, o_ref, m_ref, l_ref, acc_ref, *,
+            scale: float, causal: bool, qc: int, kc: int, nk: int,
+            t_real: int):
+    ki = pl.program_id(2)
+    qi = pl.program_id(1)
+
+    @pl.when(ki == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    q = q_ref[0].astype(jnp.float32)            # (qc, dh)
+    k = k_ref[0].astype(jnp.float32)            # (kc, dh)
+    v = v_ref[0].astype(jnp.float32)            # (kc, dv)
+    s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                            preferred_element_type=jnp.float32) * scale
+
+    kv_pos = ki * kc + jax.lax.broadcasted_iota(jnp.int32, (qc, kc), 1)
+    valid = kv_pos < t_real
+    if causal:
+        q_pos = qi * qc + jax.lax.broadcasted_iota(jnp.int32, (qc, kc), 0)
+        valid = jnp.logical_and(valid, q_pos >= kv_pos)
+    s = jnp.where(valid, s, NEG_INF)
+
+    m_prev = m_ref[...]
+    m_new = jnp.maximum(m_prev, s.max(axis=-1))
+    p = jnp.exp(s - m_new[:, None])
+    corr = jnp.exp(m_prev - m_new)
+    l_ref[...] = l_ref[...] * corr + p.sum(axis=-1)
+    acc_ref[...] = acc_ref[...] * corr[:, None] + jax.lax.dot(
+        p.astype(v.dtype), v, preferred_element_type=jnp.float32)
+    m_ref[...] = m_new
+
+    @pl.when(ki == nk - 1)
+    def _finalize():
+        o_ref[0] = (acc_ref[...] /
+                    jnp.maximum(l_ref[...], 1e-30)[:, None]
+                    ).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("causal", "q_chunk",
+                                             "kv_chunk", "interpret"))
+def flash_attention(q, k, v, *, causal: bool = True,
+                    q_chunk: int = 512, kv_chunk: int = 512,
+                    interpret: bool = True):
+    """q: (B, S, H, dh); k/v: (B, T, Hk, dh|dv) -> (B, S, H*dv)."""
+    b, s, h, dh = q.shape
+    t, hk, dv = k.shape[1], k.shape[2], v.shape[-1]
+    group = h // hk
+    scale = 1.0 / np.sqrt(dh)
+
+    qc = min(q_chunk, s)
+    kc = min(kv_chunk, t)
+    nq, nk = -(-s // qc), -(-t // kc)
+    sp, tp = nq * qc, nk * kc
+    qf = jnp.pad(q, ((0, 0), (0, sp - s), (0, 0), (0, 0)))
+    kf = jnp.pad(k, ((0, 0), (0, tp - t), (0, 0), (0, 0)))
+    vf = jnp.pad(v, ((0, 0), (0, tp - t), (0, 0), (0, 0)))
+    qf = qf.transpose(0, 2, 1, 3).reshape(b * h, sp, dh)
+    kf = kf.transpose(0, 2, 1, 3).reshape(b * hk, tp, dh)
+    vf = vf.transpose(0, 2, 1, 3).reshape(b * hk, tp, dv)
+
+    kern = functools.partial(_kernel, scale=scale, causal=causal, qc=qc,
+                             kc=kc, nk=nk, t_real=t)
+    out = pl.pallas_call(
+        kern,
+        grid=(b * h, nq, nk),
+        in_specs=[
+            pl.BlockSpec((1, qc, dh), lambda bh, qi, ki: (bh, qi, 0)),
+            pl.BlockSpec((1, kc, dh),
+                         lambda bh, qi, ki, g=group, hh=h, hkk=hk:
+                         ((bh // hh) * hkk + (bh % hh) // g, ki, 0)),
+            pl.BlockSpec((1, kc, dv),
+                         lambda bh, qi, ki, g=group, hh=h, hkk=hk:
+                         ((bh // hh) * hkk + (bh % hh) // g, ki, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, qc, dv), lambda bh, qi, ki: (bh, qi, 0)),
+        out_shape=jax.ShapeDtypeStruct((b * h, sp, dv), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((qc,), jnp.float32),
+            pltpu.VMEM((qc,), jnp.float32),
+            pltpu.VMEM((qc, dv), jnp.float32),
+        ],
+        interpret=interpret,
+    )(qf, kf, vf)
+    out = out.reshape(b, h, sp, dv)[:, :, :s].transpose(0, 2, 1, 3)
+    return out.reshape(b, s, h * dv)

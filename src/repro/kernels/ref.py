@@ -1,0 +1,62 @@
+"""Pure-jnp oracles for every Pallas kernel (the ``ref.py`` contract).
+
+These are thin re-exports/adapters of the engine's own formulations so the
+kernels are validated against the exact math the system runs in its XLA
+path - one source of truth, two executions.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import snn
+from repro.core.stdp import STDPParams, TraceState, stdp_edge_update
+
+__all__ = ["synaptic_gather_ref", "lif_step_ref", "stdp_update_ref"]
+
+
+def synaptic_gather_ref(pre_idx, post_rel, weight, delay, channel, ring, t,
+                        *, max_delay: int, pb: int):
+    """Blocked layout (NB, EB) -> (i_ex, i_in) each (NB*PB,) via segment_sum."""
+    nb, eb = pre_idx.shape
+    d, m = ring.shape
+    post_global = (jnp.arange(nb, dtype=jnp.int32)[:, None] * pb
+                   + post_rel).reshape(-1)
+    pre = pre_idx.reshape(-1)
+    w = weight.reshape(-1)
+    dl = delay.reshape(-1)
+    ch = channel.reshape(-1)
+    row = jnp.mod(t.astype(jnp.int32) - dl, max_delay)
+    arrived = jnp.take(ring.reshape(-1), row * m + pre)
+    contrib = w * arrived * (dl > 0)
+    n_out = nb * pb
+    i_ex = jax.ops.segment_sum(jnp.where(ch == 0, contrib, 0.0), post_global,
+                               num_segments=n_out)
+    i_in = jax.ops.segment_sum(jnp.where(ch == 1, contrib, 0.0), post_global,
+                               num_segments=n_out)
+    return i_ex, i_in
+
+
+def lif_step_ref(v, syn_ex, syn_in, ref_count, group_id, input_ex, input_in,
+                 table, *, cond: bool = False):
+    """Adapter over :func:`repro.core.snn.lif_step` (the system's own path)."""
+    state = snn.NeuronState(
+        v_m=v, syn_ex=syn_ex, syn_in=syn_in, ref_count=ref_count,
+        spike=jnp.zeros(v.shape, jnp.bool_), group_id=group_id)
+    model = snn.SynapseModel.COND_EXP if cond else \
+        snn.SynapseModel.CURRENT_EXP
+    out = snn.lif_step(state, table, input_ex, input_in,
+                       synapse_model=model)
+    return out.v_m, out.syn_ex, out.syn_in, out.ref_count, out.spike
+
+
+def stdp_update_ref(weights, pre_idx, post_idx, plastic, arrived, post_spike,
+                    k_pre, k_post, *, params):
+    lam, alpha, mu, w0, wmin, wmax = params
+    p = STDPParams(lam=lam, alpha=alpha, mu=mu, w0=w0, w_min=wmin,
+                   w_max=wmax)
+    traces = TraceState(k_pre=k_pre, k_post=k_post)
+    new_w = stdp_edge_update(weights, pre_idx, post_idx, arrived,
+                             post_spike.astype(bool), traces, p)
+    return jnp.where(plastic, new_w, weights)

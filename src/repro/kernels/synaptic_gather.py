@@ -1,0 +1,105 @@
+"""Pallas TPU kernel: delay-bucketed, indegree-owned synaptic accumulation.
+
+This is the paper's hotspot (synaptic interactions on edges, §III.B) adapted
+to the TPU memory hierarchy (DESIGN.md §2):
+
+* the grid iterates over **post-neuron row blocks** - the Pallas analogue of
+  CORTEX's thread ownership.  Grid cell ``i`` may write ONLY output rows
+  ``[i*PB, (i+1)*PB)``; by eq. 14 those rows' edges are disjoint from every
+  other cell's, so the kernel is race-free *structurally* - no mutex, no
+  atomic, no scatter;
+* edges arrive pre-sorted by (post_block, delay, post) and padded to a
+  uniform ``EB`` per block (ELL-of-blocks), the Fig. 12 layout;
+* the spike ring buffer ``(D, M)`` lives wholly in VMEM (the decomposition
+  keeps per-shard mirror tables small - that is exactly what Area-Processes
+  Mapping buys, §III.A); per-edge arrivals are a flat VMEM gather;
+* the per-block reduction uses a **one-hot matmul** (``contrib @ onehot``)
+  so the accumulation runs on the MXU instead of a serial scatter - the
+  TPU-native replacement for the CPU's owner-thread loop.
+
+VMEM budget per grid cell: ring D*M*4 + 5 edge arrays EB*4 + onehot EB*PB*4.
+Defaults (D<=64, M<=32768, EB=2048, PB=256) stay under ~12 MiB.
+
+Validated against :func:`repro.kernels.ref.synaptic_gather_ref` in
+``interpret=True`` mode (this container is CPU-only; TPU is the target).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+__all__ = ["synaptic_gather", "DEFAULT_EB", "DEFAULT_PB"]
+
+DEFAULT_EB = 2048   # edges per post-block (padded)
+DEFAULT_PB = 256    # post neurons per block
+
+
+def _kernel(pre_ref, post_rel_ref, w_ref, delay_ref, chan_ref, ring_ref,
+            t_ref, ex_ref, in_ref, *, max_delay: int, n_mirror: int,
+            pb: int):
+    t = t_ref[0]
+    pre = pre_ref[...][0]          # (EB,) int32 mirror index
+    post_rel = post_rel_ref[...][0]  # (EB,) int32 in [0, PB)
+    w = w_ref[...][0]              # (EB,) f32
+    delay = delay_ref[...][0]      # (EB,) int32; 0 = padding
+    chan = chan_ref[...][0]        # (EB,) int32
+
+    # arrivals: ring[(t - d) mod D, pre]  (flat VMEM gather)
+    row = jnp.mod(t - delay, max_delay)
+    flat = ring_ref[...].reshape(-1)
+    arrived = jnp.take(flat, row * n_mirror + pre, axis=0)
+    live = (delay > 0).astype(w.dtype)
+    contrib = w * arrived * live
+
+    # one-hot reduction on the MXU: (1, EB) @ (EB, PB) -> (1, PB)
+    onehot = (post_rel[:, None] ==
+              jax.lax.broadcasted_iota(jnp.int32, (1, pb), 1)
+              ).astype(w.dtype)                      # (EB, PB)
+    ex = jnp.where(chan == 0, contrib, 0.0)[None, :]
+    inh = jnp.where(chan == 1, contrib, 0.0)[None, :]
+    ex_ref[...] = jax.lax.dot(ex, onehot,
+                              preferred_element_type=jnp.float32)
+    in_ref[...] = jax.lax.dot(inh, onehot,
+                              preferred_element_type=jnp.float32)
+
+
+@functools.partial(jax.jit, static_argnames=("max_delay", "pb",
+                                             "interpret"))
+def synaptic_gather(pre_idx, post_rel, weight, delay, channel, ring, t, *,
+                    max_delay: int, pb: int = DEFAULT_PB,
+                    interpret: bool = True):
+    """Blocked edge arrays (NB, EB) -> (i_ex, i_in) each (NB*PB,).
+
+    Args mirror the blocked layout from :func:`repro.kernels.ops.blocked_layout`.
+    ``ring`` is (D, M) f32; ``t`` a scalar int32 array.
+    """
+    nb, eb = pre_idx.shape
+    d, m = ring.shape
+    assert d == max_delay
+    kern = functools.partial(_kernel, max_delay=max_delay, n_mirror=m,
+                             pb=pb)
+    edge_spec = pl.BlockSpec((1, eb), lambda i: (i, 0))
+    out_ex, out_in = pl.pallas_call(
+        kern,
+        grid=(nb,),
+        in_specs=[
+            edge_spec, edge_spec, edge_spec, edge_spec, edge_spec,
+            pl.BlockSpec((d, m), lambda i: (0, 0)),   # full ring, all cells
+            pl.BlockSpec(memory_space=pl.ANY),        # t scalar
+        ],
+        out_specs=[
+            pl.BlockSpec((1, pb), lambda i: (i, 0)),
+            pl.BlockSpec((1, pb), lambda i: (i, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((nb, pb), jnp.float32),
+            jax.ShapeDtypeStruct((nb, pb), jnp.float32),
+        ],
+        interpret=interpret,
+    )(pre_idx, post_rel, weight, delay, channel, ring,
+      t.reshape(1).astype(jnp.int32))
+    return out_ex.reshape(nb * pb), out_in.reshape(nb * pb)

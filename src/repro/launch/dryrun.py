@@ -1,0 +1,278 @@
+import os
+os.environ.setdefault("XLA_FLAGS", "--xla_force_host_platform_device_count=512")
+"""Multi-pod dry-run: lower + compile every (arch x shape x mesh) cell.
+
+The two lines above run before ANY other import - jax locks the device count
+at first init, and the dry-run needs 512 placeholder host devices to build
+the production meshes.  (Tests/benches import this module lazily and keep
+their own 1-device world; ``setdefault`` keeps an operator override.)
+
+For every cell this driver:
+  1. builds the step function (train / prefill / decode per the shape kind),
+  2. attaches shardings (params via rules, batch via batch_spec, caches via
+     cache_specs) to ShapeDtypeStruct stand-ins - no real allocation,
+  3. ``jit(...).lower(...).compile()`` under the mesh,
+  4. records ``memory_analysis()`` (proves the per-device footprint),
+     ``cost_analysis()`` (FLOPs / bytes for §Roofline) and the
+     collective-bytes histogram parsed from the partitioned HLO.
+
+Results go to ``experiments/dryrun_<mesh>.json`` and feed
+EXPERIMENTS.md §Dry-run / §Roofline.
+
+Usage:
+    PYTHONPATH=src python -m repro.launch.dryrun [--arch A] [--shape S]
+        [--multi-pod] [--all]
+"""
+
+import argparse
+import dataclasses
+import json
+import time
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro import configs
+from repro.configs.base import ModelConfig, ShapeConfig, TrainConfig
+from repro.configs.shapes import SHAPES, shape_applicable
+from repro.launch.mesh import make_production_mesh
+from repro.models.model import build_model
+from repro.sharding import rules
+from repro.train.loop import make_train_step
+from repro.train.optimizer import init_opt_state
+from repro.utils.hlo import collective_bytes
+
+__all__ = ["input_specs", "build_cell", "run_cell", "train_config_for",
+           "DEFAULT_RESULT_DIR"]
+
+DEFAULT_RESULT_DIR = "experiments"
+
+
+def train_config_for(cfg: ModelConfig) -> TrainConfig:
+    """Per-arch optimizer policy: AdamW fp32 everywhere except the 671B
+    (Adafactor + bf16 params - fp32 AdamW state cannot fit 256x16GB;
+    EXPERIMENTS.md §Dry-run)."""
+    if cfg.moe is not None:
+        # MoE: expert weights are expert-RESIDENT (replicated over the
+        # axes E doesn't cover), so fp32 AdamW state would replicate too -
+        # Adafactor + bf16 params keeps the resident copy affordable
+        # (deepseek additionally needs bf16 grad accumulation).
+        return TrainConfig(optimizer="adafactor", param_dtype="bfloat16",
+                           acc_dtype="bfloat16")
+    # NOTE §Perf iteration 4 (refuted): gather_once=True did not reduce
+    # collective bytes - XLA already hoists the loop-invariant param
+    # all-gathers out of the microbatch scan; the flag remains available
+    # for TPU-side validation.
+    return TrainConfig(optimizer="adamw", param_dtype="float32")
+
+
+def _sds(shape, dtype, sharding=None):
+    return jax.ShapeDtypeStruct(shape, dtype, sharding=sharding)
+
+
+def input_specs(cfg: ModelConfig, shape: ShapeConfig, mesh) -> dict[str, Any]:
+    """ShapeDtypeStruct stand-ins for every model input of this cell."""
+    b = shape.global_batch
+    ctx = rules.MeshCtx(mesh)
+    bspec = (rules.batch_spec(mesh)
+             if b % max(ctx.axis_size("batch"), 1) == 0 else P())
+    bs = NamedSharding(mesh, bspec)
+    out: dict[str, Any] = {}
+    if shape.kind == "train":
+        out["tokens"] = _sds((b, shape.seq_len + 1), jnp.int32, bs)
+    elif shape.kind == "prefill":
+        out["tokens"] = _sds((b, shape.seq_len), jnp.int32, bs)
+    elif shape.kind == "decode":
+        out["token"] = _sds((b,), jnp.int32, bs)
+        out["pos"] = _sds((b,), jnp.int32, bs)
+    if cfg.family == "audio" and shape.kind in ("train", "prefill"):
+        out["frames"] = _sds((b, cfg.encoder_seq, cfg.d_model),
+                             jnp.dtype(cfg.dtype), bs)
+    if cfg.family == "vlm" and shape.kind in ("train", "prefill"):
+        out["patches"] = _sds((b, cfg.n_prefix_embeds, cfg.d_model),
+                              jnp.dtype(cfg.dtype), bs)
+    return out
+
+
+def _with_shardings(tree_sds, tree_shardings):
+    return jax.tree.map(
+        lambda s, sh: jax.ShapeDtypeStruct(s.shape, s.dtype, sharding=sh),
+        tree_sds, tree_shardings)
+
+
+def _microbatches(shape: ShapeConfig, mesh) -> int:
+    ctx = rules.MeshCtx(mesh)
+    bsz = ctx.axis_size("batch")
+    return max(1, min(shape.microbatches, shape.global_batch // bsz))
+
+
+def _shardings_of(tree_sds):
+    return jax.tree.map(lambda s: s.sharding, tree_sds)
+
+
+def build_cell(cfg: ModelConfig, shape: ShapeConfig, mesh):
+    """Returns (fn, args_sds, donate, out_shardings) - ready for
+    jit(fn, out_shardings=...).lower(*args_sds)."""
+    model = build_model(cfg)
+    params_sds = jax.eval_shape(
+        lambda: model.init(jax.random.key(0),
+                           dtype=jnp.dtype(train_config_for(cfg).param_dtype
+                                           if shape.kind == "train"
+                                           else cfg.dtype)))
+    params_sh = rules.param_specs(mesh, params_sds)
+    params_sds = _with_shardings(params_sds, params_sh)
+    batch_sds = input_specs(cfg, shape, mesh)
+
+    if shape.kind == "train":
+        tcfg = train_config_for(cfg)
+        mbs = _microbatches(shape, mesh)
+        step_fn = make_train_step(model, tcfg, microbatches=mbs)
+        opt_sds = jax.eval_shape(lambda p: init_opt_state(tcfg, p),
+                                 params_sds)
+        opt_sh = rules.param_specs(mesh, opt_sds)
+        opt_sds = _with_shardings(opt_sds, opt_sh)
+        step_sds = _sds((), jnp.int32, NamedSharding(mesh, P()))
+
+        def fn(params, opt_state, batch, step):
+            with rules.use_mesh(mesh):
+                return step_fn(params, opt_state, batch, step)
+
+        # params/opt outputs inherit input shardings through the update
+        # chain; metrics are scalars - let XLA infer all train outputs.
+        return fn, (params_sds, opt_sds, batch_sds, step_sds), (0, 1), None
+
+    seq = shape.seq_len
+    if cfg.family == "vlm":
+        seq += cfg.n_prefix_embeds  # prefix patch embeds occupy cache slots
+    cache_sds = jax.eval_shape(
+        lambda: model.init_cache(shape.global_batch, seq,
+                                 dtype=jnp.bfloat16))
+    seq_shard = shape.global_batch == 1
+    cache_sh = rules.cache_specs(mesh, cache_sds, seq_shard=seq_shard)
+    cache_sds = _with_shardings(cache_sds, cache_sh)
+
+    # logits (B, ...) batch-sharded only when B divides the batch axes
+    ctx = rules.MeshCtx(mesh)
+    bdiv = shape.global_batch % max(ctx.axis_size("batch"), 1) == 0
+    logits_sh = NamedSharding(
+        mesh, rules.batch_spec(mesh) if bdiv else P())
+    if shape.kind == "prefill":
+        def fn(params, batch, cache):
+            with rules.use_mesh(mesh):
+                return model.prefill(params, batch, cache)
+        out_sh = (logits_sh, _shardings_of(cache_sds))
+        return fn, (params_sds, batch_sds, cache_sds), (2,), out_sh
+
+    def fn(params, cache, token, pos):
+        with rules.use_mesh(mesh):
+            return model.decode(params, cache, token, pos)
+    out_sh = (logits_sh, _shardings_of(cache_sds))
+    return fn, (params_sds, cache_sds, batch_sds["token"],
+                batch_sds["pos"]), (1,), out_sh
+
+
+def run_cell(arch: str, shape_name: str, *, multi_pod: bool = False,
+             mesh=None, reduced: bool = False) -> dict[str, Any]:
+    """Lower + compile one cell; returns the §Dry-run record."""
+    cfg = configs.get_smoke(arch) if reduced else configs.get(arch)
+    shape = SHAPES[shape_name]
+    rec: dict[str, Any] = {
+        "arch": arch, "shape": shape_name,
+        "mesh": "2x16x16" if multi_pod else "16x16",
+    }
+    if not shape_applicable(cfg.family, shape_name):
+        rec["status"] = "skipped"
+        rec["reason"] = (f"{cfg.family} family: full attention is "
+                         "quadratic at 500k; sub-quadratic archs only "
+                         "(DESIGN.md §4)")
+        return rec
+    mesh = mesh if mesh is not None else make_production_mesh(
+        multi_pod=multi_pod)
+    try:
+        fn, args, donate, out_sh = build_cell(cfg, shape, mesh)
+        t0 = time.time()
+        with rules.use_mesh(mesh):
+            lowered = jax.jit(fn, donate_argnums=donate,
+                              out_shardings=out_sh).lower(*args)
+        rec["lower_s"] = round(time.time() - t0, 2)
+        t0 = time.time()
+        compiled = lowered.compile()
+        rec["compile_s"] = round(time.time() - t0, 2)
+
+        ma = compiled.memory_analysis()
+        if ma is not None:
+            rec["memory"] = {
+                "argument_bytes": int(ma.argument_size_in_bytes),
+                "output_bytes": int(ma.output_size_in_bytes),
+                "temp_bytes": int(ma.temp_size_in_bytes),
+                "alias_bytes": int(ma.alias_size_in_bytes),
+                # donated args alias outputs; live footprint per device:
+                "peak_bytes": int(ma.argument_size_in_bytes
+                                  + ma.output_size_in_bytes
+                                  + ma.temp_size_in_bytes
+                                  - ma.alias_size_in_bytes),
+            }
+        ca = compiled.cost_analysis()
+        if isinstance(ca, list):
+            ca = ca[0] if ca else None
+        if ca:
+            rec["cost"] = {
+                "flops": float(ca.get("flops", -1)),
+                "bytes_accessed": float(ca.get("bytes accessed", -1)),
+                "transcendentals": float(ca.get("transcendentals", 0)),
+            }
+        rec["collectives"] = collective_bytes(compiled.as_text())
+        rec["status"] = "ok"
+    except Exception as e:  # noqa: BLE001 - report, don't crash the sweep
+        rec["status"] = "error"
+        rec["error"] = f"{type(e).__name__}: {e}"[:500]
+    return rec
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None)
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--both-meshes", action="store_true")
+    ap.add_argument("--out", default=None)
+    args = ap.parse_args()
+
+    archs = [args.arch] if args.arch else list(configs.ARCH_NAMES)
+    shapes = [args.shape] if args.shape else list(SHAPES)
+    meshes = [False, True] if args.both_meshes else [args.multi_pod]
+
+    results = []
+    for mp in meshes:
+        mesh = make_production_mesh(multi_pod=mp)
+        for arch in archs:
+            for shape in shapes:
+                rec = run_cell(arch, shape, multi_pod=mp, mesh=mesh)
+                results.append(rec)
+                mem = rec.get("memory", {}).get("peak_bytes", 0) / 2**30
+                cps = rec.get("compile_s", "-")
+                print(f"[{rec['mesh']}] {arch:22s} {shape:12s} "
+                      f"{rec['status']:8s} compile={cps}s "
+                      f"peak/dev={mem:.2f}GiB "
+                      f"{rec.get('reason', rec.get('error', ''))[:60]}",
+                      flush=True)
+
+    os.makedirs(DEFAULT_RESULT_DIR, exist_ok=True)
+    out = args.out or os.path.join(
+        DEFAULT_RESULT_DIR,
+        f"dryrun_{'multi' if meshes[-1] else 'single'}.json")
+    with open(out, "w") as f:
+        json.dump(results, f, indent=1)
+    n_ok = sum(r["status"] == "ok" for r in results)
+    n_skip = sum(r["status"] == "skipped" for r in results)
+    n_err = sum(r["status"] == "error" for r in results)
+    print(f"\nDRY-RUN: ok={n_ok} skipped={n_skip} error={n_err} -> {out}")
+    if n_err:
+        raise SystemExit(1)
+
+
+if __name__ == "__main__":
+    main()

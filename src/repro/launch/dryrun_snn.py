@@ -1,0 +1,164 @@
+import os
+os.environ.setdefault("XLA_FLAGS", "--xla_force_host_platform_device_count=512")
+"""Production-scale dry-run + roofline for the CORTEX SNN engine itself.
+
+The LM cells prove the substrate; THIS is the paper's own workload at the
+paper's own scale: the marmoset benchmark's "normalized problem size 1"
+(1M neurons, 3.8B synapses) and beyond, decomposed onto the production
+meshes.  Graphs are never materialized - the step lowers from
+ShapeDtypeStructs whose shapes come from the decomposition arithmetic
+(edges/shard, mirrors/shard, boundary widths), exactly like the LM dry-run.
+
+Reports per (scale x mesh x wire-encoding): compile ok, per-device memory,
+the three roofline terms, and the spike-exchange traffic for f32 vs packed
+wires (§Perf iteration on the paper's own bottleneck).
+
+    PYTHONPATH=src python -m repro.launch.dryrun_snn
+"""
+
+import argparse
+import json
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.core import snn
+from repro.core.distributed import (DistributedConfig, DistState,
+                                    make_raw_distributed_step)
+from repro.core.engine import EngineConfig
+from repro.launch.mesh import make_production_mesh
+from repro.utils.hlo_analysis import analyze_hlo
+
+PEAK_FLOPS = 197e12
+HBM_BW = 819e9
+ICI_BW = 50e9
+
+
+def shard_dims(n_neurons: int, n_edges: int, n_shards: int,
+               row_width: int, *, max_delay: int = 64,
+               remote_frac: float = 0.25, boundary_frac: float = 0.15):
+    """Decomposition arithmetic -> per-shard static shapes (padded)."""
+    pad = lambda n, m=128: ((n + m - 1) // m) * m
+    n_local = pad(-(-n_neurons // n_shards))
+    e = pad(-(-n_edges // n_shards))
+    n_mirror = pad(int(n_local * (1.0 + remote_frac)))
+    b_pad = pad(max(int(n_local * boundary_frac), 8))
+    return dict(n_local=n_local, n_edges=e, n_mirror=n_mirror, b_pad=b_pad,
+                max_delay=max_delay)
+
+
+def state_and_consts_sds(dims, mesh, axes, *, compact: bool = False):
+    """SDS stand-ins.  ``compact`` stores the static edge arrays in the
+    narrowest dtype their range allows (u16 mirror/post ids, i8 delays and
+    channels) - the edge sweep is memory-bound, so edge bytes ARE the step
+    time (§Perf iteration)."""
+    S = mesh.devices.size
+    sh = NamedSharding(mesh, P(axes))
+    nl, nm, e, b, D = (dims["n_local"], dims["n_mirror"], dims["n_edges"],
+                      dims["b_pad"], dims["max_delay"])
+    f32 = jnp.float32
+    i32 = jnp.int32
+    idx_t = jnp.uint16 if compact and nm <= 65535 else i32
+    small_t = jnp.int8 if compact else i32
+    sds = lambda shape, dt: jax.ShapeDtypeStruct((S,) + shape, dt,
+                                                 sharding=sh)
+    state = DistState(
+        v_m=sds((nl,), f32), syn_ex=sds((nl,), f32), syn_in=sds((nl,), f32),
+        ref_count=sds((nl,), i32), ring=sds((D, nm), f32),
+        weights=sds((e,), f32), k_pre=sds((nm,), f32), k_post=sds((nl,), f32),
+        prev_bits=sds((nl,), f32), t=sds((), i32),
+        key=sds((2,), jnp.uint32))
+    consts = dict(
+        pre_idx=sds((e,), idx_t), post_idx=sds((e,), idx_t),
+        delay=sds((e,), small_t), channel=sds((e,), small_t),
+        plastic=sds((e,), jnp.bool_), weight_init=sds((e,), f32),
+        group_id=sds((nl,), i32), ext_rate=sds((nl,), f32),
+        ext_weight=sds((nl,), f32), mirror_src_idx=sds((nm,), idx_t),
+        boundary_slots=sds((b,), idx_t), mirror_is_intra=sds((nm,), jnp.bool_),
+        mirror_row_gather=sds((nm,), i32),
+        mirror_remote_gather=sds((nm,), i32), mirror_src_flat=sds((nm,), i32),
+    )
+    return state, consts
+
+
+def run_cell(scale: float, multi_pod: bool, wire: str, *, stdp: bool = True,
+             compact: bool = False, overlap: bool = True):
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    axes = mesh.axis_names
+    S = mesh.devices.size
+    n_neurons = int(1_000_000 * scale)
+    n_edges = int(3_800_000_000 * scale)   # paper: 3.8B synapses at size 1
+    dims = shard_dims(n_neurons, n_edges, S, mesh.shape["model"])
+    from repro.core.models import HPC_STDP
+    cfg = DistributedConfig(
+        engine=EngineConfig(dt=0.1, stdp=HPC_STDP if stdp else None),
+        comm_mode="area", overlap=overlap, axis_names=axes,
+        spike_wire=wire)
+    groups = [snn.LIFParams(), snn.LIFParams(t_ref=1.0)]
+    step = make_raw_distributed_step(mesh, groups, cfg,
+                                     max_delay=dims["max_delay"],
+                                     n_local=dims["n_local"],
+                                     n_mirror=dims["n_mirror"])
+    state_sds, consts_sds = state_and_consts_sds(dims, mesh, axes,
+                                                 compact=compact)
+    t0 = time.time()
+    compiled = jax.jit(step, donate_argnums=(0,)).lower(
+        state_sds, consts_sds).compile()
+    costs = analyze_hlo(compiled.as_text())
+    ma = compiled.memory_analysis()
+    rec = dict(
+        scale=scale,
+        mesh="2x16x16" if multi_pod else "16x16", wire=wire,
+        compact=compact, overlap=overlap,
+        n_neurons=n_neurons, n_edges_global=n_edges, **dims,
+        compile_s=round(time.time() - t0, 1),
+        peak_gib=round((ma.argument_size_in_bytes + ma.output_size_in_bytes
+                        + ma.temp_size_in_bytes - ma.alias_size_in_bytes)
+                       / 2**30, 3),
+        flops_per_chip=costs.flops,
+        traffic_bytes=costs.traffic_bytes,
+        collective_bytes=costs.collective_bytes,
+        compute_s=costs.flops / PEAK_FLOPS,
+        memory_s=costs.traffic_bytes / HBM_BW,
+        collective_s=costs.collective_bytes / ICI_BW,
+    )
+    terms = {k: rec[k] for k in ("compute_s", "memory_s", "collective_s")}
+    rec["dominant"] = max(terms, key=terms.get)
+    return rec
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out", default="experiments/dryrun_snn.json")
+    args = ap.parse_args()
+    results = []
+    # (wire, compact, overlap): paper-faithful baseline -> each §Perf
+    # iteration -> the final optimized config (overlap OFF once the wire
+    # is packed; EXPERIMENTS.md §Perf C3)
+    variants = (("f32", False, True), ("packed", False, True),
+                ("packed", True, True), ("packed", True, False))
+    for multi_pod in (False, True):
+        for scale in (1.0, 4.0):
+            for wire, compact, overlap in variants:
+                rec = run_cell(scale, multi_pod, wire, compact=compact,
+                               overlap=overlap)
+                results.append(rec)
+                print(f"[{'2x16x16' if multi_pod else '16x16'}] scale={scale} "
+                      f"wire={wire:6s} compact={int(compact)} "
+                      f"overlap={int(overlap)} "
+                      f"peak={rec['peak_gib']:.2f}GiB "
+                      f"c={rec['compute_s']*1e6:8.1f}us "
+                      f"m={rec['memory_s']*1e6:8.1f}us "
+                      f"n={rec['collective_s']*1e6:8.1f}us "
+                      f"dom={rec['dominant']}", flush=True)
+    os.makedirs(os.path.dirname(args.out) or ".", exist_ok=True)
+    with open(args.out, "w") as f:
+        json.dump(results, f, indent=1)
+    print(f"-> {args.out}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,37 @@
+"""Production mesh builders.
+
+``make_production_mesh`` is a FUNCTION (never a module-level constant) so
+importing this module touches no jax device state; only the dry-run process
+sets ``XLA_FLAGS=--xla_force_host_platform_device_count=512`` before its
+first jax import.
+
+Axis semantics (DESIGN.md §6):
+    pod    - data parallel across pods; only gradient all-reduce crosses it
+    data   - batch sharding + FSDP within a pod (+ sequence-sharded KV for
+             the 500k decode cells)
+    model  - tensor/expert parallelism (heads, ffn-hidden, vocab, experts)
+For the SNN engine the same axes carry the paper's decomposition:
+(pod, data) rows = Area-Processes groups, model = multisection cells.
+"""
+
+from __future__ import annotations
+
+import jax
+
+__all__ = ["make_production_mesh", "make_test_mesh", "POD_SHAPE",
+           "SINGLE_POD_SHAPE"]
+
+SINGLE_POD_SHAPE = (16, 16)              # 256 chips (one v5e pod)
+POD_SHAPE = (2, 16, 16)                  # 2 pods = 512 chips
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = POD_SHAPE if multi_pod else SINGLE_POD_SHAPE
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_test_mesh(shape=(2, 2), axes=("data", "model")):
+    """Small host-device mesh for CPU integration tests (requires
+    XLA_FLAGS=--xla_force_host_platform_device_count>=prod(shape))."""
+    return jax.make_mesh(shape, axes)

@@ -1,0 +1,361 @@
+"""Attention: GQA (with RoPE, optional bias / qk-norm) and DeepSeek-style MLA.
+
+Three entry points per flavor:
+
+* ``*_train``   - full-sequence causal attention (also used for prefill,
+                  which additionally returns the cache);
+* ``*_decode``  - one-token step against a static-length KV cache.
+
+GQA cache layout: ``k/v: (B, S_max, H_kv, dh)``, position-indexed writes.
+MLA cache layout: the *compressed* ``c_kv: (B, S_max, r_kv)`` plus the shared
+rope key ``k_rope: (B, S_max, r_rope)`` - the point of MLA is that only
+``r_kv + r_rope`` floats per token are cached; at decode the query is
+*absorbed* through ``w_uk`` so attention runs directly in the compressed
+space (never materializing per-head K).
+
+Long-context decode (the ``long_500k`` shape) supports sequence-sharded KV:
+each data shard holds a slice of the cache and computes partial attention
+(max/sum-exp terms); partials are combined with a distributed
+log-sum-exp - flash-decoding adapted to the mesh (used via
+``sharding.rules.SEQ_SHARD_KV``).  This path is exercised by the hybrid
+archs; pure full-attention archs skip the 500k shape (DESIGN.md §4).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models.layers import apply_rope, init_linear, linear, init_norm, \
+    rms_norm
+
+__all__ = ["gqa_init", "gqa_train", "gqa_prefill", "gqa_decode",
+           "mla_init", "mla_train", "mla_prefill", "mla_decode",
+           "init_gqa_cache", "init_mla_cache"]
+
+NEG_INF = -1e30
+
+
+# ---------------------------------------------------------------------------
+# GQA
+# ---------------------------------------------------------------------------
+
+def gqa_init(key, cfg, dtype=jnp.float32):
+    d, h, hk, dh = cfg.d_model, cfg.n_heads, cfg.n_kv_heads, \
+        cfg.resolved_head_dim
+    ks = jax.random.split(key, 6)
+    p = {
+        "wq": init_linear(ks[0], d, h * dh, bias=cfg.qkv_bias, dtype=dtype),
+        "wk": init_linear(ks[1], d, hk * dh, bias=cfg.qkv_bias, dtype=dtype),
+        "wv": init_linear(ks[2], d, hk * dh, bias=cfg.qkv_bias, dtype=dtype),
+        "wo": init_linear(ks[3], h * dh, d, dtype=dtype),
+    }
+    if cfg.qk_norm:
+        p["q_norm"] = init_norm(dh)
+        p["k_norm"] = init_norm(dh)
+    return p
+
+
+def _qkv(p, cfg, x, positions, compute_dtype, *, rope=True):
+    b, s, _ = x.shape
+    h, hk, dh = cfg.n_heads, cfg.n_kv_heads, cfg.resolved_head_dim
+    q = linear(p["wq"], x, compute_dtype).reshape(b, s, h, dh)
+    k = linear(p["wk"], x, compute_dtype).reshape(b, s, hk, dh)
+    v = linear(p["wv"], x, compute_dtype).reshape(b, s, hk, dh)
+    if cfg.qk_norm:
+        q = rms_norm(p["q_norm"], q)
+        k = rms_norm(p["k_norm"], k)
+    if rope:
+        q = apply_rope(q, positions, cfg.rope_theta)
+        k = apply_rope(k, positions, cfg.rope_theta)
+    return q, k, v
+
+
+# Above this many score elements per device, switch to the chunked
+# (online-softmax / flash-style) path so S x T logits never materialize.
+# 2048^2 puts the train_4k cells on the chunked path (§Perf iteration:
+# the f32 S x S score/mask/transpose chain dominated train memory terms).
+CHUNK_THRESHOLD = 4096 * 4096 + 1
+Q_CHUNK = 1024
+KV_CHUNK = 1024
+
+
+def _sdpa(q, k, v, mask, *, scale, causal_hint=False):
+    """q: (B,S,H,dh), k/v: (B,T,Hk,dh) grouped; mask: (B,1,S,T) or None.
+
+    Dispatches to the chunked path when the score matrix would be large -
+    the XLA analogue of flash attention: lax.scan over KV blocks with a
+    running (max, sum, acc) triple, so peak memory is O(q_chunk x kv_chunk)
+    instead of O(S x T).  (A Pallas flash kernel would fuse further; on the
+    dry-run path we stay in pure XLA - DESIGN.md §7.)
+    """
+    s, t = q.shape[1], k.shape[1]
+    if s > 1 and s * t > CHUNK_THRESHOLD:
+        return _sdpa_chunked(q, k, v, scale=scale,
+                             causal=(mask is not None or causal_hint))
+    b, h, dh = q.shape[0], q.shape[2], q.shape[3]
+    hk, dv = k.shape[2], v.shape[-1]
+    group = h // hk
+    qg = q.reshape(b, s, hk, group, dh)
+    logits = jnp.einsum("bshgd,bthd->bhgst", qg, k,
+                        preferred_element_type=jnp.float32) * scale
+    if mask is not None:
+        logits = jnp.where(mask[:, :, None], logits, NEG_INF)
+    w = jax.nn.softmax(logits.astype(jnp.float32), axis=-1)
+    out = jnp.einsum("bhgst,bthd->bshgd", w.astype(q.dtype), v,
+                     preferred_element_type=jnp.float32)
+    return out.reshape(b, s, h * dv).astype(q.dtype)
+
+
+def _sdpa_chunked(q, k, v, *, scale, causal=True,
+                  q_chunk=Q_CHUNK, kv_chunk=KV_CHUNK):
+    """Online-softmax attention; q: (B,S,H,dh), k/v: (B,T,Hk,dh)."""
+    b, s, h, dh = q.shape
+    t, hk, dv = k.shape[1], k.shape[2], v.shape[-1]
+    group = h // hk
+    qc = min(q_chunk, s)
+    kc = min(kv_chunk, t)
+    nq, nk = -(-s // qc), -(-t // kc)
+    pad_q, pad_k = nq * qc - s, nk * kc - t
+    qp = jnp.pad(q, ((0, 0), (0, pad_q), (0, 0), (0, 0))) if pad_q else q
+    kp = jnp.pad(k, ((0, 0), (0, pad_k), (0, 0), (0, 0))) if pad_k else k
+    vp = jnp.pad(v, ((0, 0), (0, pad_k), (0, 0), (0, 0))) if pad_k else v
+    qg = qp.reshape(b, nq, qc, hk, group, dh).transpose(1, 0, 3, 4, 2, 5)
+    kg = kp.reshape(b, nk, kc, hk, dh).transpose(1, 0, 3, 2, 4)
+    vg = vp.reshape(b, nk, kc, hk, dv).transpose(1, 0, 3, 2, 4)
+    # (nq, B, Hk, G, qc, dh), (nk, B, Hk, kc, dh)
+
+    def q_block(qi, qb):
+        q_pos = qi * qc + jnp.arange(qc)
+
+        def kv_block(carry, inp):
+            m, l, acc = carry
+            ki, kb, vb = inp
+            sc = jnp.einsum("bhgqd,bhkd->bhgqk", qb, kb,
+                            preferred_element_type=jnp.float32) * scale
+            kv_pos = ki * kc + jnp.arange(kc)
+            valid = kv_pos[None, :] < t
+            if causal:
+                valid = valid & (q_pos[:, None] >= kv_pos[None, :])
+            sc = jnp.where(valid[None, None, None], sc, NEG_INF)
+            m_new = jnp.maximum(m, sc.max(-1))
+            p = jnp.exp(sc - m_new[..., None])
+            corr = jnp.exp(m - m_new)
+            l = l * corr + p.sum(-1)
+            acc = acc * corr[..., None] + jnp.einsum(
+                "bhgqk,bhkd->bhgqd", p.astype(qb.dtype), vb,
+                preferred_element_type=jnp.float32)
+            return (m_new, l, acc), None
+
+        m0 = jnp.full((b, hk, group, qc), NEG_INF, jnp.float32)
+        l0 = jnp.zeros((b, hk, group, qc), jnp.float32)
+        a0 = jnp.zeros((b, hk, group, qc, dv), jnp.float32)
+        (m, l, acc), _ = jax.lax.scan(
+            kv_block, (m0, l0, a0),
+            (jnp.arange(nk), kg, vg))
+        return acc / jnp.maximum(l, 1e-30)[..., None]
+
+    outs = jax.lax.map(lambda inp: q_block(inp[0], inp[1]),
+                       (jnp.arange(nq), qg))
+    # (nq, B, Hk, G, qc, dv) -> (B, S, H*dv)
+    out = outs.transpose(1, 0, 4, 2, 3, 5).reshape(b, nq * qc, h * dv)
+    return out[:, :s].astype(q.dtype)
+
+
+def _causal_mask(b, s):
+    m = jnp.tril(jnp.ones((s, s), jnp.bool_))
+    return jnp.broadcast_to(m, (b, 1, s, s))
+
+
+def gqa_train(p, cfg, x, positions, compute_dtype=jnp.bfloat16, *,
+              causal=True):
+    q, k, v = _qkv(p, cfg, x, positions, compute_dtype)
+    mask = _causal_mask(x.shape[0], x.shape[1]) if causal else None
+    scale = 1.0 / np.sqrt(cfg.resolved_head_dim)
+    out = _sdpa(q, k, v, mask, scale=scale)
+    return linear(p["wo"], out, compute_dtype)
+
+
+def init_gqa_cache(cfg, batch: int, max_len: int, dtype=jnp.bfloat16):
+    hk, dh = cfg.n_kv_heads, cfg.resolved_head_dim
+    return {
+        "k": jnp.zeros((batch, max_len, hk, dh), dtype),
+        "v": jnp.zeros((batch, max_len, hk, dh), dtype),
+    }
+
+
+def gqa_prefill(p, cfg, x, positions, cache, compute_dtype=jnp.bfloat16):
+    """Full causal pass that also fills cache[:, :S]."""
+    q, k, v = _qkv(p, cfg, x, positions, compute_dtype)
+    s = x.shape[1]
+    cache = {
+        "k": jax.lax.dynamic_update_slice_in_dim(
+            cache["k"], k.astype(cache["k"].dtype), 0, axis=1),
+        "v": jax.lax.dynamic_update_slice_in_dim(
+            cache["v"], v.astype(cache["v"].dtype), 0, axis=1),
+    }
+    mask = _causal_mask(x.shape[0], s)
+    out = _sdpa(q, k, v, mask, scale=1.0 / np.sqrt(cfg.resolved_head_dim))
+    return linear(p["wo"], out, compute_dtype), cache
+
+
+def gqa_decode(p, cfg, x, pos, cache, compute_dtype=jnp.bfloat16):
+    """x: (B, 1, d); pos: (B,) current positions; attends to cache[:pos]."""
+    b = x.shape[0]
+    q, k, v = _qkv(p, cfg, x, pos[:, None], compute_dtype)
+    cache = {
+        "k": _write_at(cache["k"], k, pos),
+        "v": _write_at(cache["v"], v, pos),
+    }
+    t = cache["k"].shape[1]
+    valid = (jnp.arange(t)[None, :] <= pos[:, None])  # (B, T)
+    mask = valid[:, None, None, :]
+    out = _sdpa(q, cache["k"].astype(q.dtype), cache["v"].astype(q.dtype),
+                mask, scale=1.0 / np.sqrt(cfg.resolved_head_dim))
+    return linear(p["wo"], out, compute_dtype), cache
+
+
+def _write_at(buf, val, pos):
+    """buf: (B, T, ...); val: (B, 1, ...); in-place row write at per-row pos.
+
+    vmapped dynamic-update-slice lowers to an in-place scatter - O(row)
+    traffic instead of the O(B*T*...) full-cache rewrite a one-hot
+    multiply would cost (§Perf iteration 1: 4x KV-traffic reduction on
+    decode).
+    """
+    def one(b, v, p):
+        return jax.lax.dynamic_update_slice_in_dim(
+            b, v.astype(b.dtype), p, axis=0)
+    return jax.vmap(one)(buf, val, pos)
+
+
+# ---------------------------------------------------------------------------
+# MLA (DeepSeek-V2/V3 multi-head latent attention)
+# ---------------------------------------------------------------------------
+
+def mla_init(key, cfg, dtype=jnp.float32):
+    m = cfg.mla
+    d, h = cfg.d_model, cfg.n_heads
+    ks = jax.random.split(key, 8)
+    return {
+        "wq_a": init_linear(ks[0], d, m.q_lora_rank, dtype=dtype),
+        "q_a_norm": init_norm(m.q_lora_rank),
+        "wq_b": init_linear(ks[1], m.q_lora_rank,
+                            h * (m.qk_nope_dim + m.qk_rope_dim), dtype=dtype),
+        "wkv_a": init_linear(ks[2], d, m.kv_lora_rank + m.qk_rope_dim,
+                             dtype=dtype),
+        "kv_a_norm": init_norm(m.kv_lora_rank),
+        "wkv_b": init_linear(ks[3], m.kv_lora_rank,
+                             h * (m.qk_nope_dim + m.v_head_dim), dtype=dtype),
+        "wo": init_linear(ks[4], h * m.v_head_dim, d, dtype=dtype),
+    }
+
+
+def _mla_q(p, cfg, x, positions, compute_dtype):
+    m = cfg.mla
+    b, s, _ = x.shape
+    h = cfg.n_heads
+    q = linear(p["wq_b"],
+               rms_norm(p["q_a_norm"], linear(p["wq_a"], x, compute_dtype)),
+               compute_dtype).reshape(b, s, h, m.qk_nope_dim + m.qk_rope_dim)
+    q_nope, q_rope = jnp.split(q, [m.qk_nope_dim], axis=-1)
+    q_rope = apply_rope(q_rope, positions, cfg.rope_theta)
+    return q_nope, q_rope
+
+
+def _mla_ckv(p, cfg, x, positions, compute_dtype):
+    m = cfg.mla
+    ckv = linear(p["wkv_a"], x, compute_dtype)
+    c_kv, k_rope = jnp.split(ckv, [m.kv_lora_rank], axis=-1)
+    c_kv = rms_norm(p["kv_a_norm"], c_kv)
+    # shared (single-head) rope key
+    k_rope = apply_rope(k_rope[:, :, None, :], positions,
+                        cfg.rope_theta)[:, :, 0, :]
+    return c_kv, k_rope
+
+
+def mla_train(p, cfg, x, positions, compute_dtype=jnp.bfloat16):
+    """Concat (nope ++ rope) q/k and run the shared (chunk-capable) SDPA -
+    the rope key is broadcast across heads (MQA-like share)."""
+    m = cfg.mla
+    b, s, _ = x.shape
+    h = cfg.n_heads
+    q_nope, q_rope = _mla_q(p, cfg, x, positions, compute_dtype)
+    c_kv, k_rope = _mla_ckv(p, cfg, x, positions, compute_dtype)
+    kv = linear(p["wkv_b"], c_kv, compute_dtype).reshape(
+        b, s, h, m.qk_nope_dim + m.v_head_dim)
+    k_nope, v = jnp.split(kv, [m.qk_nope_dim], axis=-1)
+    q_cat = jnp.concatenate([q_nope, q_rope], axis=-1)
+    k_cat = jnp.concatenate(
+        [k_nope, jnp.broadcast_to(k_rope[:, :, None, :],
+                                  (b, s, h, m.qk_rope_dim))], axis=-1)
+    scale = 1.0 / np.sqrt(m.qk_nope_dim + m.qk_rope_dim)
+    mask = _causal_mask(b, s)
+    out = _sdpa(q_cat, k_cat, v, mask, scale=scale)
+    return linear(p["wo"], out, compute_dtype)
+
+
+def init_mla_cache(cfg, batch: int, max_len: int, dtype=jnp.bfloat16):
+    m = cfg.mla
+    return {
+        "c_kv": jnp.zeros((batch, max_len, m.kv_lora_rank), dtype),
+        "k_rope": jnp.zeros((batch, max_len, m.qk_rope_dim), dtype),
+    }
+
+
+def mla_prefill(p, cfg, x, positions, cache, compute_dtype=jnp.bfloat16):
+    c_kv, k_rope = _mla_ckv(p, cfg, x, positions, compute_dtype)
+    cache = {
+        "c_kv": jax.lax.dynamic_update_slice_in_dim(
+            cache["c_kv"], c_kv.astype(cache["c_kv"].dtype), 0, axis=1),
+        "k_rope": jax.lax.dynamic_update_slice_in_dim(
+            cache["k_rope"], k_rope.astype(cache["k_rope"].dtype), 0, axis=1),
+    }
+    return mla_train(p, cfg, x, positions, compute_dtype), cache
+
+
+def mla_decode(p, cfg, x, pos, cache, compute_dtype=jnp.bfloat16):
+    """Absorbed decode: attention runs in the compressed c_kv space.
+
+    q_absorbed[h, r] = q_nope[h, :] @ w_uk[h]  (w_uk = first qk_nope rows of
+    wkv_b per head), so logits = q_absorbed . c_kv + q_rope . k_rope and the
+    value readout is (attn @ c_kv) @ w_uv - per-token work is O(r_kv) per
+    head instead of O(dh * S) cache traffic.  This is DeepSeek's deployment
+    trick and the memory-roofline win measured in §Perf.
+    """
+    m = cfg.mla
+    b = x.shape[0]
+    h = cfg.n_heads
+    q_nope, q_rope = _mla_q(p, cfg, x, pos[:, None], compute_dtype)
+    c_kv_new, k_rope_new = _mla_ckv(p, cfg, x, pos[:, None], compute_dtype)
+    cache = {
+        "c_kv": _write_at(cache["c_kv"], c_kv_new, pos),
+        "k_rope": _write_at(cache["k_rope"], k_rope_new, pos),
+    }
+    # unpack wkv_b into per-head absorb matrices
+    wkv_b = p["wkv_b"]["w"].astype(compute_dtype).reshape(
+        m.kv_lora_rank, h, m.qk_nope_dim + m.v_head_dim)
+    w_uk = wkv_b[:, :, :m.qk_nope_dim]      # (r, h, dn)
+    w_uv = wkv_b[:, :, m.qk_nope_dim:]      # (r, h, dv)
+    q_abs = jnp.einsum("bshd,rhd->bshr", q_nope, w_uk,
+                       preferred_element_type=jnp.float32).astype(x.dtype)
+    ckv = cache["c_kv"].astype(x.dtype)      # (b, T, r)
+    krope = cache["k_rope"].astype(x.dtype)  # (b, T, rr)
+    t = ckv.shape[1]
+    scale = 1.0 / np.sqrt(m.qk_nope_dim + m.qk_rope_dim)
+    logits = (jnp.einsum("bshr,btr->bhst", q_abs, ckv,
+                         preferred_element_type=jnp.float32)
+              + jnp.einsum("bshd,btd->bhst", q_rope, krope,
+                           preferred_element_type=jnp.float32)) * scale
+    valid = (jnp.arange(t)[None, :] <= pos[:, None])
+    logits = jnp.where(valid[:, None, None, :], logits, NEG_INF)
+    w = jax.nn.softmax(logits.astype(jnp.float32), axis=-1).astype(x.dtype)
+    ctx = jnp.einsum("bhst,btr->bshr", w, ckv,
+                     preferred_element_type=jnp.float32).astype(x.dtype)
+    out = jnp.einsum("bshr,rhd->bshd", ctx, w_uv,
+                     preferred_element_type=jnp.float32)
+    out = out.reshape(b, 1, h * m.v_head_dim).astype(x.dtype)
+    return linear(p["wo"], out, compute_dtype), cache

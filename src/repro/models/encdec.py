@@ -1,0 +1,218 @@
+"""Encoder-decoder backbone (Whisper-style) with a stub audio frontend.
+
+Per the assignment, the conv/mel frontend is a STUB: ``input_specs()``
+supplies precomputed frame embeddings ``(B, encoder_seq, d_model)``.  The
+encoder is a bidirectional transformer over those frames; the decoder is a
+causal LM with cross-attention whose cross K/V are computed once at prefill
+and cached (the standard serving layout).  Whisper conventions: LayerNorm,
+GELU MLP, learned decoder positions, no RoPE.
+"""
+
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ModelConfig
+from repro.models import attention as attn
+from repro.models.layers import (embed_init, init_norm, linear, mlp_apply,
+                                 mlp_init, norm_apply, init_linear)
+from repro.sharding.rules import shard_act
+
+__all__ = ["init_params", "encode", "forward", "init_cache", "prefill",
+           "decode_step"]
+
+
+def _enc_layer_init(key, cfg, dtype):
+    ks = jax.random.split(key, 2)
+    return {
+        "norm1": init_norm(cfg.d_model, cfg.norm),
+        "attn": attn.gqa_init(ks[0], cfg, dtype),
+        "norm2": init_norm(cfg.d_model, cfg.norm),
+        "mlp": mlp_init(ks[1], cfg.d_model, cfg.d_ff, cfg.mlp, dtype),
+    }
+
+
+def _dec_layer_init(key, cfg, dtype):
+    ks = jax.random.split(key, 3)
+    return {
+        "norm1": init_norm(cfg.d_model, cfg.norm),
+        "self_attn": attn.gqa_init(ks[0], cfg, dtype),
+        "norm_x": init_norm(cfg.d_model, cfg.norm),
+        "cross": attn.gqa_init(ks[1], cfg, dtype),
+        "norm2": init_norm(cfg.d_model, cfg.norm),
+        "mlp": mlp_init(ks[2], cfg.d_model, cfg.d_ff, cfg.mlp, dtype),
+    }
+
+
+def init_params(key, cfg: ModelConfig, dtype=jnp.float32):
+    ks = jax.random.split(key, 6)
+    enc_keys = jax.random.split(ks[0], cfg.encoder_layers)
+    dec_keys = jax.random.split(ks[1], cfg.n_layers)
+    return {
+        "embed": embed_init(ks[2], cfg.vocab_size, cfg.d_model, dtype),
+        "pos_dec": {"table": (jax.random.normal(ks[3],
+                                                (cfg.max_seq, cfg.d_model))
+                              * 0.01).astype(dtype)},
+        "encoder": jax.vmap(lambda k: _enc_layer_init(k, cfg, dtype))(
+            enc_keys),
+        "enc_norm": init_norm(cfg.d_model, cfg.norm),
+        "decoder": jax.vmap(lambda k: _dec_layer_init(k, cfg, dtype))(
+            dec_keys),
+        "final_norm": init_norm(cfg.d_model, cfg.norm),
+    }
+
+
+def encode(params, cfg: ModelConfig, frames):
+    """frames: (B, S_enc, d) stub embeddings -> encoder memory."""
+    compute_dtype = jnp.dtype(cfg.dtype)
+    x = shard_act(frames.astype(compute_dtype), "btd")
+    b, s, _ = x.shape
+    positions = jnp.broadcast_to(jnp.arange(s), (b, s))
+
+    def body(x, p):
+        h = norm_apply(p["norm1"], x, cfg.norm)
+        x = x + attn.gqa_train(p["attn"], cfg, h, positions, compute_dtype,
+                               causal=False)
+        h2 = norm_apply(p["norm2"], x, cfg.norm)
+        x = x + mlp_apply(p["mlp"], h2, cfg.mlp, compute_dtype)
+        return shard_act(x, "btd"), None
+
+    x, _ = jax.lax.scan(body, x, params["encoder"])
+    return norm_apply(params["enc_norm"], x, cfg.norm)
+
+
+def _cross_attend(p, cfg, x, memory, compute_dtype):
+    """Cross-attention: q from x, k/v from encoder memory, no mask/rope."""
+    b, s, _ = x.shape
+    h, hk, dh = cfg.n_heads, cfg.n_kv_heads, cfg.resolved_head_dim
+    q = linear(p["wq"], x, compute_dtype).reshape(b, s, h, dh)
+    k = linear(p["wk"], memory, compute_dtype).reshape(
+        b, memory.shape[1], hk, dh)
+    v = linear(p["wv"], memory, compute_dtype).reshape(
+        b, memory.shape[1], hk, dh)
+    out = attn._sdpa(q, k, v, None, scale=1.0 / np.sqrt(dh))
+    return linear(p["wo"], out, compute_dtype)
+
+
+def _cross_attend_cached(p, cfg, x, kv, compute_dtype):
+    b, s, _ = x.shape
+    h, dh = cfg.n_heads, cfg.resolved_head_dim
+    q = linear(p["wq"], x, compute_dtype).reshape(b, s, h, dh)
+    out = attn._sdpa(q, kv["k"].astype(q.dtype), kv["v"].astype(q.dtype),
+                     None, scale=1.0 / np.sqrt(dh))
+    return linear(p["wo"], out, compute_dtype)
+
+
+def forward(params, cfg: ModelConfig, tokens, frames):
+    """Teacher-forced training pass -> logits (B, S_dec, vocab)."""
+    compute_dtype = jnp.dtype(cfg.dtype)
+    memory = encode(params, cfg, frames)
+    b, s = tokens.shape
+    x = jnp.take(params["embed"]["table"], tokens, axis=0)
+    x = (x + params["pos_dec"]["table"][:s]).astype(compute_dtype)
+    x = shard_act(x, "btd")
+    positions = jnp.broadcast_to(jnp.arange(s), (b, s))
+
+    def body(x, p):
+        h = norm_apply(p["norm1"], x, cfg.norm)
+        x = x + attn.gqa_train(p["self_attn"], cfg, h, positions,
+                               compute_dtype)
+        hx = norm_apply(p["norm_x"], x, cfg.norm)
+        x = x + _cross_attend(p["cross"], cfg, hx, memory, compute_dtype)
+        h2 = norm_apply(p["norm2"], x, cfg.norm)
+        x = x + mlp_apply(p["mlp"], h2, cfg.mlp, compute_dtype)
+        return shard_act(x, "btd"), None
+
+    body = jax.checkpoint(body)
+    x, _ = jax.lax.scan(body, x, params["decoder"])
+    x = norm_apply(params["final_norm"], x, cfg.norm)
+    logits = jnp.einsum("btd,vd->btv", x.astype(compute_dtype),
+                        params["embed"]["table"].astype(compute_dtype),
+                        preferred_element_type=jnp.float32)
+    return shard_act(logits, "btv"), {"load_balance_loss": 0.0}
+
+
+def init_cache(cfg: ModelConfig, batch: int, max_len: int,
+               dtype=jnp.bfloat16):
+    hk, dh = cfg.n_kv_heads, cfg.resolved_head_dim
+    L = cfg.n_layers
+    return {
+        "self": jax.tree.map(
+            lambda l: jnp.zeros((L,) + l.shape, l.dtype),
+            attn.init_gqa_cache(cfg, batch, max_len, dtype)),
+        "cross_kv": {
+            "k": jnp.zeros((L, batch, cfg.encoder_seq, hk, dh), dtype),
+            "v": jnp.zeros((L, batch, cfg.encoder_seq, hk, dh), dtype),
+        },
+    }
+
+
+def prefill(params, cfg: ModelConfig, tokens, frames, cache):
+    """Encode + teacher-forced pass that fills self & cross caches."""
+    compute_dtype = jnp.dtype(cfg.dtype)
+    memory = encode(params, cfg, frames)
+    b, s = tokens.shape
+    x = jnp.take(params["embed"]["table"], tokens, axis=0)
+    x = (x + params["pos_dec"]["table"][:s]).astype(compute_dtype)
+    positions = jnp.broadcast_to(jnp.arange(s), (b, s))
+    hk, dh = cfg.n_kv_heads, cfg.resolved_head_dim
+
+    def body(x, slc):
+        p, self_c = slc
+        h = norm_apply(p["norm1"], x, cfg.norm)
+        mix, self_c = attn.gqa_prefill(p["self_attn"], cfg, h, positions,
+                                       self_c, compute_dtype)
+        x = x + mix
+        hx = norm_apply(p["norm_x"], x, cfg.norm)
+        k = linear(p["cross"]["wk"], memory, compute_dtype).reshape(
+            b, memory.shape[1], hk, dh)
+        v = linear(p["cross"]["wv"], memory, compute_dtype).reshape(
+            b, memory.shape[1], hk, dh)
+        kv = {"k": k.astype(self_c["k"].dtype),
+              "v": v.astype(self_c["v"].dtype)}
+        x = x + _cross_attend_cached(p["cross"], cfg, hx, kv, compute_dtype)
+        h2 = norm_apply(p["norm2"], x, cfg.norm)
+        x = x + mlp_apply(p["mlp"], h2, cfg.mlp, compute_dtype)
+        return x, (self_c, kv)
+
+    x, (self_cache, cross_kv) = jax.lax.scan(
+        body, x, (params["decoder"], cache["self"]))
+    cache = {"self": self_cache, "cross_kv": cross_kv}
+    x = norm_apply(params["final_norm"], x[:, -1:, :], cfg.norm)
+    logits = jnp.einsum("btd,vd->btv", x.astype(compute_dtype),
+                        params["embed"]["table"].astype(compute_dtype),
+                        preferred_element_type=jnp.float32)
+    return logits, cache
+
+
+def decode_step(params, cfg: ModelConfig, token, pos, cache):
+    compute_dtype = jnp.dtype(cfg.dtype)
+    b = token.shape[0]
+    x = jnp.take(params["embed"]["table"], token[:, None], axis=0)
+    pos_emb = jnp.take(params["pos_dec"]["table"], pos, axis=0)[:, None, :]
+    x = (x + pos_emb).astype(compute_dtype)
+
+    def body(x, slc):
+        p, self_c, kv = slc
+        h = norm_apply(p["norm1"], x, cfg.norm)
+        mix, self_c = attn.gqa_decode(p["self_attn"], cfg, h, pos, self_c,
+                                      compute_dtype)
+        x = x + mix
+        hx = norm_apply(p["norm_x"], x, cfg.norm)
+        x = x + _cross_attend_cached(p["cross"], cfg, hx, kv, compute_dtype)
+        h2 = norm_apply(p["norm2"], x, cfg.norm)
+        x = x + mlp_apply(p["mlp"], h2, cfg.mlp, compute_dtype)
+        return x, self_c
+
+    x, self_cache = jax.lax.scan(
+        body, x, (params["decoder"], cache["self"], cache["cross_kv"]))
+    cache = {"self": self_cache, "cross_kv": cache["cross_kv"]}
+    x = norm_apply(params["final_norm"], x, cfg.norm)
+    logits = jnp.einsum("btd,vd->btv", x.astype(compute_dtype),
+                        params["embed"]["table"].astype(compute_dtype),
+                        preferred_element_type=jnp.float32)
+    return logits[:, 0], cache

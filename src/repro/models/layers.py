@@ -1,0 +1,105 @@
+"""Shared building blocks: norms, embeddings, MLPs, RoPE.
+
+Parameter convention: plain nested-dict pytrees; every matrix is stored
+``(d_in, d_out)`` (or ``(heads, d_in, d_out)``), named so the sharding rules
+in :mod:`repro.sharding.rules` can pattern-match on the path.  Norm/router
+math runs in fp32; matmuls run in the config compute dtype with fp32
+accumulation (``preferred_element_type``).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+__all__ = ["rms_norm", "layer_norm", "init_norm", "init_linear", "linear",
+           "mlp_init", "mlp_apply", "rope_freqs", "apply_rope", "embed_init"]
+
+
+def init_norm(d: int, kind: str = "rmsnorm"):
+    p = {"scale": jnp.ones((d,), jnp.float32)}
+    if kind == "layernorm":
+        p["bias"] = jnp.zeros((d,), jnp.float32)
+    return p
+
+
+def rms_norm(p, x, eps: float = 1e-6):
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(xf * xf, axis=-1, keepdims=True)
+    y = xf * jax.lax.rsqrt(var + eps) * p["scale"]
+    return y.astype(x.dtype)
+
+
+def layer_norm(p, x, eps: float = 1e-5):
+    xf = x.astype(jnp.float32)
+    mu = jnp.mean(xf, axis=-1, keepdims=True)
+    var = jnp.var(xf, axis=-1, keepdims=True)
+    y = (xf - mu) * jax.lax.rsqrt(var + eps) * p["scale"] + p["bias"]
+    return y.astype(x.dtype)
+
+
+def norm_apply(p, x, kind: str):
+    return rms_norm(p, x) if kind == "rmsnorm" else layer_norm(p, x)
+
+
+def init_linear(key, d_in: int, d_out: int, *, bias: bool = False,
+                scale: float | None = None, dtype=jnp.float32):
+    scale = scale if scale is not None else 1.0 / np.sqrt(d_in)
+    p = {"w": (jax.random.normal(key, (d_in, d_out)) * scale).astype(dtype)}
+    if bias:
+        p["b"] = jnp.zeros((d_out,), dtype)
+    return p
+
+
+def linear(p, x, compute_dtype=jnp.bfloat16):
+    y = jnp.einsum("...i,io->...o", x.astype(compute_dtype),
+                   p["w"].astype(compute_dtype),
+                   preferred_element_type=jnp.float32)
+    if "b" in p:
+        y = y + p["b"].astype(jnp.float32)
+    return y.astype(compute_dtype)
+
+
+def mlp_init(key, d: int, d_ff: int, kind: str, dtype=jnp.float32):
+    ks = jax.random.split(key, 3)
+    if kind == "swiglu":
+        return {
+            "wi_gate": init_linear(ks[0], d, d_ff, dtype=dtype),
+            "wi_up": init_linear(ks[1], d, d_ff, dtype=dtype),
+            "wo": init_linear(ks[2], d_ff, d, dtype=dtype),
+        }
+    return {
+        "wi": init_linear(ks[0], d, d_ff, dtype=dtype),
+        "wo": init_linear(ks[1], d_ff, d, dtype=dtype),
+    }
+
+
+def mlp_apply(p, x, kind: str, compute_dtype=jnp.bfloat16):
+    if kind == "swiglu":
+        g = linear(p["wi_gate"], x, compute_dtype)
+        u = linear(p["wi_up"], x, compute_dtype)
+        return linear(p["wo"], jax.nn.silu(g) * u, compute_dtype)
+    h = jax.nn.gelu(linear(p["wi"], x, compute_dtype))
+    return linear(p["wo"], h, compute_dtype)
+
+
+def embed_init(key, vocab: int, d: int, dtype=jnp.float32):
+    return {"table": (jax.random.normal(key, (vocab, d)) * 0.02).astype(dtype)}
+
+
+def rope_freqs(head_dim: int, theta: float):
+    """(head_dim/2,) inverse frequencies."""
+    return 1.0 / (theta ** (np.arange(0, head_dim, 2) / head_dim))
+
+
+def apply_rope(x, positions, theta: float):
+    """x: (..., S, H, dh) rotated pairwise; positions: broadcastable (..., S)."""
+    dh = x.shape[-1]
+    inv = jnp.asarray(rope_freqs(dh, theta), jnp.float32)
+    ang = positions[..., :, None].astype(jnp.float32) * inv  # (..., S, dh/2)
+    cos = jnp.cos(ang)[..., :, None, :]
+    sin = jnp.sin(ang)[..., :, None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
+    return out.astype(x.dtype)

@@ -1,0 +1,161 @@
+"""Mamba (S6) selective-state-space mixer - the Jamba hybrid's workhorse.
+
+Training/prefill uses a **chunked sequential scan**: an outer ``lax.scan``
+over chunks carries the (B, d_inner, d_state) SSM state between chunks; the
+chunk body (inner scan) is wrapped in ``jax.checkpoint`` so the backward pass
+rematerializes inside chunks and only chunk-boundary states plus chunk inputs
+are saved - O(T/chunk) state memory instead of O(T).  This is the TPU-native
+replacement for the CUDA parallel-scan kernel of the paper's GPU
+implementations (DESIGN.md hardware adaptation): the recurrence is
+elementwise (VPU work), so a sequential-in-time, wide-in-channel scan keeps
+the vector units saturated without needing warp shuffles.
+
+Decode carries ``(conv_window, ssm_state)`` per layer - O(1) per token, which
+is why the hybrid runs the ``long_500k`` shape.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models.layers import init_linear, linear
+
+__all__ = ["mamba_init", "mamba_train", "mamba_decode", "init_mamba_cache"]
+
+
+def _dt_rank(cfg) -> int:
+    return cfg.mamba.dt_rank or -(-cfg.d_model // 16)
+
+
+def mamba_init(key, cfg, dtype=jnp.float32):
+    m = cfg.mamba
+    d = cfg.d_model
+    di = m.expand * d
+    dtr = _dt_rank(cfg)
+    ks = jax.random.split(key, 8)
+    # S4D-real initialization for A
+    a = np.tile(np.arange(1, m.d_state + 1, dtype=np.float32), (di, 1))
+    dt = np.exp(np.random.default_rng(0).uniform(
+        np.log(1e-3), np.log(1e-1), size=(di,))).astype(np.float32)
+    dt_bias = dt + np.log1p(-np.exp(-dt))  # inverse softplus
+    return {
+        "in_proj": init_linear(ks[0], d, 2 * di, dtype=dtype),
+        "conv_w": (jax.random.normal(ks[1], (m.d_conv, di))
+                   * (1.0 / np.sqrt(m.d_conv))).astype(dtype),
+        "conv_b": jnp.zeros((di,), dtype),
+        "x_proj": init_linear(ks[2], di, dtr + 2 * m.d_state, dtype=dtype),
+        "dt_proj": init_linear(ks[3], dtr, di, bias=True, dtype=dtype),
+        "dt_bias_init": jnp.asarray(dt_bias, dtype),
+        "a_log": jnp.asarray(np.log(a), dtype),
+        "d_skip": jnp.ones((di,), dtype),
+        "out_proj": init_linear(ks[4], di, d, dtype=dtype),
+    }
+
+
+def _ssm_params(p, cfg, xc, compute_dtype):
+    """xc: (..., di) post-conv activations -> (dt, B, C) selective params."""
+    m = cfg.mamba
+    dtr = _dt_rank(cfg)
+    proj = linear(p["x_proj"], xc, compute_dtype)
+    dt_r, b, c = jnp.split(proj, [dtr, dtr + m.d_state], axis=-1)
+    dt = jax.nn.softplus(
+        linear(p["dt_proj"], dt_r, compute_dtype).astype(jnp.float32)
+        + p["dt_bias_init"].astype(jnp.float32))
+    return dt, b.astype(jnp.float32), c.astype(jnp.float32)
+
+
+def _scan_chunk(p, cfg, h0, xc_chunk, z_chunk, compute_dtype):
+    """Sequential scan inside one chunk. xc: (B, L, di); h0: (B, di, N)."""
+    m = cfg.mamba
+    a = -jnp.exp(p["a_log"].astype(jnp.float32))          # (di, N)
+    dt, bmat, cmat = _ssm_params(p, cfg, xc_chunk, compute_dtype)
+    # dt: (B, L, di); bmat/cmat: (B, L, N)
+
+    def step(h, inp):
+        x_t, dt_t, b_t, c_t = inp  # (B, di), (B, di), (B, N), (B, N)
+        da = jnp.exp(dt_t[..., None] * a)                 # (B, di, N)
+        dbx = (dt_t * x_t)[..., None] * b_t[:, None, :]   # (B, di, N)
+        h = da * h + dbx
+        y = jnp.einsum("bdn,bn->bd", h, c_t)              # (B, di)
+        return h, y
+
+    xs = (xc_chunk.astype(jnp.float32).transpose(1, 0, 2),
+          dt.transpose(1, 0, 2),
+          bmat.transpose(1, 0, 2), cmat.transpose(1, 0, 2))
+    h, ys = jax.lax.scan(step, h0, xs)
+    y = ys.transpose(1, 0, 2)                             # (B, L, di)
+    y = y + xc_chunk.astype(jnp.float32) * p["d_skip"].astype(jnp.float32)
+    y = y * jax.nn.silu(z_chunk.astype(jnp.float32))
+    return h, y.astype(compute_dtype)
+
+
+def _causal_conv(p, cfg, x, compute_dtype):
+    """Depthwise causal conv over time. x: (B, T, di)."""
+    m = cfg.mamba
+    w = p["conv_w"].astype(compute_dtype)                 # (K, di)
+    pad = jnp.pad(x, ((0, 0), (m.d_conv - 1, 0), (0, 0)))
+    out = sum(pad[:, i:i + x.shape[1], :] * w[i] for i in range(m.d_conv))
+    return jax.nn.silu(out + p["conv_b"].astype(compute_dtype))
+
+
+def mamba_train(p, cfg, x, compute_dtype=jnp.bfloat16):
+    """x: (B, T, d) -> (B, T, d); chunked scan with remat inside chunks."""
+    m = cfg.mamba
+    b, t, d = x.shape
+    di = m.expand * d
+    xz = linear(p["in_proj"], x, compute_dtype)
+    xin, z = jnp.split(xz, 2, axis=-1)
+    xc = _causal_conv(p, cfg, xin, compute_dtype)
+
+    chunk = min(m.chunk, t)
+    n_chunks = -(-t // chunk)
+    pad_t = n_chunks * chunk - t
+    if pad_t:
+        xc = jnp.pad(xc, ((0, 0), (0, pad_t), (0, 0)))
+        z = jnp.pad(z, ((0, 0), (0, pad_t), (0, 0)))
+    xc_ch = xc.reshape(b, n_chunks, chunk, di).transpose(1, 0, 2, 3)
+    z_ch = z.reshape(b, n_chunks, chunk, di).transpose(1, 0, 2, 3)
+
+    body = jax.checkpoint(
+        lambda h, inp: _scan_chunk(p, cfg, h, inp[0], inp[1], compute_dtype))
+    h0 = jnp.zeros((b, di, m.d_state), jnp.float32)
+    _, ys = jax.lax.scan(body, h0, (xc_ch, z_ch))
+    y = ys.transpose(1, 0, 2, 3).reshape(b, n_chunks * chunk, di)[:, :t]
+    return linear(p["out_proj"], y, compute_dtype)
+
+
+def init_mamba_cache(cfg, batch: int, dtype=jnp.bfloat16):
+    m = cfg.mamba
+    di = m.expand * cfg.d_model
+    return {
+        "conv": jnp.zeros((batch, m.d_conv - 1, di), dtype),
+        "h": jnp.zeros((batch, di, m.d_state), jnp.float32),
+    }
+
+
+def mamba_decode(p, cfg, x, cache, compute_dtype=jnp.bfloat16):
+    """One-token step. x: (B, 1, d)."""
+    m = cfg.mamba
+    b = x.shape[0]
+    di = m.expand * cfg.d_model
+    xz = linear(p["in_proj"], x, compute_dtype)
+    xin, z = jnp.split(xz, 2, axis=-1)                    # (B, 1, di)
+    window = jnp.concatenate([cache["conv"].astype(compute_dtype), xin],
+                             axis=1)                      # (B, K, di)
+    w = p["conv_w"].astype(compute_dtype)
+    xc = jax.nn.silu(jnp.einsum("bkd,kd->bd", window, w)
+                     + p["conv_b"].astype(compute_dtype))  # (B, di)
+    dt, bmat, cmat = _ssm_params(p, cfg, xc, compute_dtype)
+    a = -jnp.exp(p["a_log"].astype(jnp.float32))
+    da = jnp.exp(dt[..., None] * a)
+    h = da * cache["h"] + (dt * xc.astype(jnp.float32))[..., None] \
+        * bmat[:, None, :]
+    y = jnp.einsum("bdn,bn->bd", h, cmat)
+    y = y + xc.astype(jnp.float32) * p["d_skip"].astype(jnp.float32)
+    y = y * jax.nn.silu(z[:, 0].astype(jnp.float32))
+    out = linear(p["out_proj"], y[:, None, :].astype(compute_dtype),
+                 compute_dtype)
+    new_cache = {"conv": window[:, 1:].astype(cache["conv"].dtype), "h": h}
+    return out, new_cache

@@ -1,0 +1,107 @@
+"""Model facade: one uniform API over all families.
+
+    m = build_model(cfg)
+    params = m.init(key)
+    loss, metrics = m.loss(params, batch)           # train
+    logits, cache = m.prefill(params, batch, cache) # serving
+    logits, cache = m.decode(params, cache, token, pos)
+
+``batch`` is a dict: always ``tokens``; plus ``frames`` (audio stub) or
+``patches`` (vision stub) for the modality archs.  ``input_specs`` (in
+:mod:`repro.launch.dryrun`) builds ShapeDtypeStructs matching these.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import encdec, transformer
+
+__all__ = ["Model", "build_model", "cross_entropy"]
+
+MOE_AUX_COEF = 0.01
+
+
+def cross_entropy(logits, targets, *, ignore: int = -1):
+    """logits (B,S,V) fp32; targets (B,S) int; mean over non-ignored."""
+    logits = logits.astype(jnp.float32)
+    lse = jax.scipy.special.logsumexp(logits, axis=-1)
+    gold = jnp.take_along_axis(
+        logits, jnp.maximum(targets, 0)[..., None], axis=-1)[..., 0]
+    nll = lse - gold
+    mask = (targets != ignore).astype(jnp.float32)
+    return jnp.sum(nll * mask) / jnp.maximum(jnp.sum(mask), 1.0)
+
+
+@dataclasses.dataclass(frozen=True)
+class Model:
+    cfg: ModelConfig
+    init: Callable[..., Any]
+    loss: Callable[..., Any]
+    init_cache: Callable[..., Any]
+    prefill: Callable[..., Any]
+    decode: Callable[..., Any]
+
+
+def build_model(cfg: ModelConfig) -> Model:
+    if cfg.family == "audio":
+        return _build_encdec(cfg)
+    return _build_decoder_only(cfg)
+
+
+def _build_decoder_only(cfg: ModelConfig) -> Model:
+    def init(key, dtype=jnp.float32):
+        return transformer.init_params(key, cfg, dtype)
+
+    def loss(params, batch):
+        tokens = batch["tokens"]
+        inputs, targets = tokens[:, :-1], tokens[:, 1:]
+        prefix_embeds = batch.get("patches")
+        logits, aux = transformer.forward(params, cfg, inputs,
+                                          prefix_embeds=prefix_embeds)
+        if prefix_embeds is not None:
+            logits = logits[:, prefix_embeds.shape[1]:]
+        ce = cross_entropy(logits, targets)
+        total = ce + MOE_AUX_COEF * aux["load_balance_loss"]
+        return total, {"ce": ce, **aux}
+
+    def init_cache(batch, max_len, dtype=jnp.bfloat16):
+        return transformer.init_cache(cfg, batch, max_len, dtype)
+
+    def prefill(params, batch, cache):
+        return transformer.prefill(params, cfg, batch["tokens"], cache,
+                                   prefix_embeds=batch.get("patches"))
+
+    def decode(params, cache, token, pos):
+        return transformer.decode_step(params, cfg, token, pos, cache)
+
+    return Model(cfg, init, loss, init_cache, prefill, decode)
+
+
+def _build_encdec(cfg: ModelConfig) -> Model:
+    def init(key, dtype=jnp.float32):
+        return encdec.init_params(key, cfg, dtype)
+
+    def loss(params, batch):
+        tokens = batch["tokens"]
+        inputs, targets = tokens[:, :-1], tokens[:, 1:]
+        logits, aux = encdec.forward(params, cfg, inputs, batch["frames"])
+        ce = cross_entropy(logits, targets)
+        return ce, {"ce": ce, **aux}
+
+    def init_cache(batch, max_len, dtype=jnp.bfloat16):
+        return encdec.init_cache(cfg, batch, max_len, dtype)
+
+    def prefill(params, batch, cache):
+        return encdec.prefill(params, cfg, batch["tokens"], batch["frames"],
+                              cache)
+
+    def decode(params, cache, token, pos):
+        return encdec.decode_step(params, cfg, token, pos, cache)
+
+    return Model(cfg, init, loss, init_cache, prefill, decode)

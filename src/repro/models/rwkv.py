@@ -1,0 +1,190 @@
+"""RWKV-6 "Finch" attention-free mixer (data-dependent decay).
+
+Time-mixing recurrence per head (state S in R^{dh x dh}):
+
+    S_t = diag(w_t) S_{t-1} + k_t^T v_t
+    y_t = r_t (S_{t-1} + diag(u) k_t^T v_t)
+
+with data-dependent per-channel decay ``w_t = exp(-exp(wx_t))`` produced by a
+LoRA on the token-shifted input (the Finch upgrade over Eagle's static
+decay), data-dependent token-shift interpolation (ddlerp) for the r/k/v/g/w
+projections, a learned "bonus" u for the current token, per-head GroupNorm on
+the readout, and an output gate g.  Channel-mixing is the usual squared-relu
+MLP with token shift.
+
+Chunked-scan structure mirrors :mod:`repro.models.mamba` (checkpointed inner
+scans, O(1) decode state) - this is the arch that makes the 500k-token decode
+shape tractable: the whole "KV cache" is one (B, H, dh, dh) state.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models.layers import init_linear, linear, init_norm
+
+__all__ = ["rwkv_init", "rwkv_time_mix_train", "rwkv_time_mix_decode",
+           "rwkv_channel_mix_train", "rwkv_channel_mix_decode",
+           "init_rwkv_cache"]
+
+
+def _heads(cfg):
+    dh = cfg.rwkv.head_dim
+    assert cfg.d_model % dh == 0
+    return cfg.d_model // dh, dh
+
+
+def rwkv_init(key, cfg, dtype=jnp.float32):
+    d = cfg.d_model
+    r = cfg.rwkv.lora_rank
+    h, dh = _heads(cfg)
+    ks = jax.random.split(key, 16)
+    lora = lambda k1, k2, out_d: {
+        "a": init_linear(k1, d, r, dtype=dtype),
+        "b": init_linear(k2, r, out_d, dtype=dtype),
+    }
+    p = {
+        # ddlerp base mixes (one per projected stream: r,k,v,g,w + base x)
+        "mix_base": jnp.full((5, d), 0.5, dtype),
+        "mix_lora": lora(ks[0], ks[1], 5 * d),
+        "wr": init_linear(ks[2], d, d, dtype=dtype),
+        "wk": init_linear(ks[3], d, d, dtype=dtype),
+        "wv": init_linear(ks[4], d, d, dtype=dtype),
+        "wg": init_linear(ks[5], d, d, dtype=dtype),
+        "wo": init_linear(ks[6], d, d, dtype=dtype),
+        "decay_base": jnp.asarray(
+            np.tile(np.linspace(-6.0, -0.5, d), 1).astype(np.float32)),
+        "decay_lora": lora(ks[7], ks[8], d),
+        "bonus_u": (jax.random.normal(ks[9], (h, dh)) * 0.1).astype(dtype),
+        "gn_scale": jnp.ones((h, dh), jnp.float32),
+        "gn_bias": jnp.zeros((h, dh), jnp.float32),
+        # channel mix
+        "cm_mix": jnp.full((2, d), 0.5, dtype),
+        "cm_k": init_linear(ks[10], d, cfg.d_ff, dtype=dtype),
+        "cm_v": init_linear(ks[11], cfg.d_ff, d, dtype=dtype),
+    }
+    return p
+
+
+def _token_shift(x, last):
+    """shifted[t] = x[t-1]; last: (B, 1, d) carry from the previous segment."""
+    return jnp.concatenate([last, x[:, :-1, :]], axis=1)
+
+
+def _ddlerp(p, x, xs, compute_dtype):
+    """Data-dependent interpolation between x and its shift -> 5 streams."""
+    d = x.shape[-1]
+    base = p["mix_base"].astype(compute_dtype)            # (5, d)
+    # low-rank data-dependent offsets (Finch): tanh bottleneck
+    z = jnp.tanh(linear(p["mix_lora"]["a"], x + 0.5 * (xs - x),
+                        compute_dtype))
+    off = linear(p["mix_lora"]["b"], z, compute_dtype)    # (B,T,5d)
+    off = off.reshape(*x.shape[:-1], 5, d)
+    mix = base[None, None] + off                          # (B,T,5,d)
+    streams = x[..., None, :] + (xs - x)[..., None, :] * mix
+    return [streams[..., i, :] for i in range(5)]         # r,k,v,g,w inputs
+
+
+def _group_norm(p, y, eps=64e-5):
+    """Per-head layer norm on (B, T, H, dh)."""
+    yf = y.astype(jnp.float32)
+    mu = yf.mean(-1, keepdims=True)
+    var = yf.var(-1, keepdims=True)
+    return ((yf - mu) * jax.lax.rsqrt(var + eps) * p["gn_scale"]
+            + p["gn_bias"])
+
+
+def _time_mix_core(p, cfg, x, xs, s0, compute_dtype):
+    """Shared recurrence. x: (B,T,d), s0: (B,H,dh,dh) -> (y, sT)."""
+    h, dh = _heads(cfg)
+    b, t, d = x.shape
+    xr, xk, xv, xg, xw = _ddlerp(p, x, xs, compute_dtype)
+    r = linear(p["wr"], xr, compute_dtype).reshape(b, t, h, dh)
+    k = linear(p["wk"], xk, compute_dtype).reshape(b, t, h, dh)
+    v = linear(p["wv"], xv, compute_dtype).reshape(b, t, h, dh)
+    g = jax.nn.silu(linear(p["wg"], xg, compute_dtype))
+    wx = p["decay_base"].astype(jnp.float32) + linear(
+        p["decay_lora"]["b"],
+        jnp.tanh(linear(p["decay_lora"]["a"], xw, compute_dtype)),
+        compute_dtype).astype(jnp.float32)
+    w = jnp.exp(-jnp.exp(wx)).reshape(b, t, h, dh)        # in (0,1)
+    u = p["bonus_u"].astype(jnp.float32)
+
+    def step(s, inp):
+        r_t, k_t, v_t, w_t = inp                          # (B,H,dh)
+        kv = k_t[..., :, None] * v_t[..., None, :]        # (B,H,dh,dh)
+        y = jnp.einsum("bhi,bhij->bhj", r_t,
+                       s + u[..., :, None] * kv)
+        s = w_t[..., :, None] * s + kv
+        return s, y
+
+    xs_t = tuple(a.astype(jnp.float32).transpose(1, 0, 2, 3)
+                 for a in (r, k, v, w))
+    sT, ys = jax.lax.scan(step, s0, xs_t)
+    y = ys.transpose(1, 0, 2, 3)                          # (B,T,H,dh)
+    y = _group_norm(p, y).reshape(b, t, d).astype(compute_dtype)
+    return linear(p["wo"], y * g, compute_dtype), sT
+
+
+def rwkv_time_mix_train(p, cfg, x, compute_dtype=jnp.bfloat16):
+    """Chunked over T with checkpointed chunk bodies."""
+    b, t, d = x.shape
+    h, dh = _heads(cfg)
+    chunk = min(cfg.rwkv.chunk, t)
+    n_chunks = -(-t // chunk)
+    pad_t = n_chunks * chunk - t
+    xp = jnp.pad(x, ((0, 0), (0, pad_t), (0, 0))) if pad_t else x
+    xs_full = _token_shift(xp, jnp.zeros((b, 1, d), xp.dtype))
+    xc = xp.reshape(b, n_chunks, chunk, d).transpose(1, 0, 2, 3)
+    xsc = xs_full.reshape(b, n_chunks, chunk, d).transpose(1, 0, 2, 3)
+
+    body = jax.checkpoint(
+        lambda s, inp: _swap(_time_mix_core(p, cfg, inp[0], inp[1], s,
+                                            compute_dtype)))
+    s0 = jnp.zeros((b, h, dh, dh), jnp.float32)
+    _, ys = jax.lax.scan(body, s0, (xc, xsc))
+    y = ys.transpose(1, 0, 2, 3).reshape(b, n_chunks * chunk, d)
+    return y[:, :t]
+
+
+def _swap(pair):
+    a, b = pair
+    return b, a
+
+
+def init_rwkv_cache(cfg, batch: int, dtype=jnp.bfloat16):
+    h, dh = _heads(cfg)
+    return {
+        "s": jnp.zeros((batch, h, dh, dh), jnp.float32),
+        "x_tm": jnp.zeros((batch, 1, cfg.d_model), dtype),  # time-mix shift
+        "x_cm": jnp.zeros((batch, 1, cfg.d_model), dtype),  # channel-mix shift
+    }
+
+
+def rwkv_time_mix_decode(p, cfg, x, cache, compute_dtype=jnp.bfloat16):
+    """x: (B,1,d) one token; O(1) state update."""
+    y, sT = _time_mix_core(p, cfg, x, cache["x_tm"].astype(x.dtype),
+                           cache["s"], compute_dtype)
+    cache = dict(cache, s=sT, x_tm=x.astype(cache["x_tm"].dtype))
+    return y, cache
+
+
+def rwkv_channel_mix_train(p, cfg, x, compute_dtype=jnp.bfloat16):
+    b, t, d = x.shape
+    xs = _token_shift(x, jnp.zeros((b, 1, d), x.dtype))
+    mix = p["cm_mix"].astype(compute_dtype)
+    xk = x + (xs - x) * mix[0]
+    k = jnp.square(jax.nn.relu(linear(p["cm_k"], xk, compute_dtype)))
+    return linear(p["cm_v"], k, compute_dtype)
+
+
+def rwkv_channel_mix_decode(p, cfg, x, cache, compute_dtype=jnp.bfloat16):
+    xs = cache["x_cm"].astype(x.dtype)
+    mix = p["cm_mix"].astype(compute_dtype)
+    xk = x + (xs - x) * mix[0]
+    k = jnp.square(jax.nn.relu(linear(p["cm_k"], xk, compute_dtype)))
+    y = linear(p["cm_v"], k, compute_dtype)
+    cache = dict(cache, x_cm=x.astype(cache["x_cm"].dtype))
+    return y, cache

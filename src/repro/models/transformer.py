@@ -1,0 +1,433 @@
+"""Decoder-only LM assembly: periodic layer stacks scanned over depth.
+
+Layers are grouped into a repeating **period** (a structural unit):
+
+* dense/MoE/SSM archs: period 1 (optionally a dense prefix stack, e.g.
+  DeepSeek-V3's first-3-dense layers);
+* Jamba: period 8 - one attention layer at ``attn_offset``, Mamba elsewhere,
+  MoE on odd slots (1:7 attn:mamba, MoE every 2);
+* RWKV-6: period 1 of (time-mix, channel-mix).
+
+Parameters of each period slot are stacked ``(n_periods, ...)`` and the
+period body is scanned over depth - this keeps the HLO size O(period), which
+is what makes the 512-device dry-run compile in seconds and is accounted for
+by the scan-delta roofline extraction (DESIGN.md §7).
+
+Activation-sharding constraints are injected through
+:func:`repro.sharding.rules.shard_act` at block boundaries so the same model
+code serves single-device smoke tests and the production mesh.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ModelConfig
+from repro.models import attention as attn
+from repro.models import mamba as mam
+from repro.models import moe as moe_mod
+from repro.models import rwkv as rwkv_mod
+from repro.models.layers import (embed_init, init_norm, linear, mlp_apply,
+                                 mlp_init, norm_apply)
+from repro.sharding.rules import shard_act
+
+__all__ = ["period_structure", "init_params", "forward", "init_cache",
+           "prefill", "decode_step"]
+
+
+# --------------------------------------------------------------------------
+# structure
+# --------------------------------------------------------------------------
+
+def period_structure(cfg: ModelConfig):
+    """(prefix_kinds, period_kinds, n_periods): each kind is (mixer, ffn).
+
+    mixer in {"attn", "mla", "mamba", "rwkv"}; ffn in {"dense", "moe",
+    "rwkv_cm"}.
+    """
+    def kind(i):
+        if cfg.rwkv is not None:
+            return ("rwkv", "rwkv_cm")
+        if cfg.mamba is not None and not cfg.is_attn_layer(i):
+            mixer = "mamba"
+        elif cfg.mla is not None:
+            mixer = "mla"
+        else:
+            mixer = "attn"
+        return (mixer, "moe" if cfg.is_moe_layer(i) else "dense")
+
+    n_prefix = cfg.moe.dense_first_n if cfg.moe else 0
+    prefix = [kind(i) for i in range(n_prefix)]
+    period_len = max(cfg.attn_every, 1)
+    if cfg.moe is not None:
+        period_len = int(np.lcm(period_len, cfg.moe.every))
+    body = cfg.n_layers - n_prefix
+    if body % period_len != 0:
+        raise ValueError(
+            f"{cfg.name}: {body} body layers not divisible by period "
+            f"{period_len}")
+    period = [kind(n_prefix + i) for i in range(period_len)]
+    return prefix, period, body // period_len
+
+
+# --------------------------------------------------------------------------
+# parameters
+# --------------------------------------------------------------------------
+
+def _layer_init(key, cfg: ModelConfig, kind, dtype):
+    mixer, ffn = kind
+    ks = jax.random.split(key, 4)
+    p: dict[str, Any] = {"norm1": init_norm(cfg.d_model, cfg.norm)}
+    if not cfg.parallel_block:
+        p["norm2"] = init_norm(cfg.d_model, cfg.norm)
+    if mixer == "attn":
+        p["attn"] = attn.gqa_init(ks[0], cfg, dtype)
+    elif mixer == "mla":
+        p["attn"] = attn.mla_init(ks[0], cfg, dtype)
+    elif mixer == "mamba":
+        p["mamba"] = mam.mamba_init(ks[0], cfg, dtype)
+    elif mixer == "rwkv":
+        p["rwkv"] = rwkv_mod.rwkv_init(ks[0], cfg, dtype)
+    if ffn == "dense":
+        ff = (cfg.moe.dense_ff if (cfg.moe and cfg.moe.dense_ff)
+              else cfg.d_ff)
+        p["mlp"] = mlp_init(ks[1], cfg.d_model, ff, cfg.mlp, dtype)
+    elif ffn == "moe":
+        p["moe"] = moe_mod.moe_init(ks[1], cfg.d_model, cfg.mlp, cfg.moe,
+                                    dtype)
+    return p
+
+
+def init_params(key, cfg: ModelConfig, dtype=jnp.float32):
+    prefix, period, n_periods = period_structure(cfg)
+    ks = jax.random.split(key, 8)
+    params: dict[str, Any] = {
+        "embed": embed_init(ks[0], cfg.vocab_size, cfg.d_model, dtype),
+        "final_norm": init_norm(cfg.d_model, cfg.norm),
+    }
+    if not cfg.tie_embeddings:
+        params["unembed"] = {
+            "w": (jax.random.normal(ks[1], (cfg.d_model, cfg.vocab_size))
+                  * (1.0 / np.sqrt(cfg.d_model))).astype(dtype)}
+    if prefix:
+        params["prefix"] = [
+            _layer_init(jax.random.fold_in(ks[2], i), cfg, k, dtype)
+            for i, k in enumerate(prefix)]
+    # stacked period params: vmap init over depth for identical structure
+    def one_period(k):
+        kk = jax.random.split(k, len(period))
+        return [_layer_init(kk[i], cfg, kind, dtype)
+                for i, kind in enumerate(period)]
+    pkeys = jax.random.split(ks[3], n_periods)
+    params["period"] = jax.vmap(one_period)(pkeys)
+    return params
+
+
+# --------------------------------------------------------------------------
+# forward (train / no-cache)
+# --------------------------------------------------------------------------
+
+def _apply_layer(p, cfg: ModelConfig, kind, x, positions, compute_dtype):
+    mixer, ffn = kind
+    aux = {}
+    h = norm_apply(p["norm1"], x, cfg.norm)
+    if mixer == "attn":
+        mix = attn.gqa_train(p["attn"], cfg, h, positions, compute_dtype)
+    elif mixer == "mla":
+        mix = attn.mla_train(p["attn"], cfg, h, positions, compute_dtype)
+    elif mixer == "mamba":
+        mix = mam.mamba_train(p["mamba"], cfg, h, compute_dtype)
+    elif mixer == "rwkv":
+        mix = rwkv_mod.rwkv_time_mix_train(p["rwkv"], cfg, h, compute_dtype)
+    if cfg.parallel_block:
+        # cohere-style: y = x + attn(n(x)) + ffn(n(x))
+        if ffn == "dense":
+            f = mlp_apply(p["mlp"], h, cfg.mlp, compute_dtype)
+        elif ffn == "moe":
+            f, aux = moe_mod.moe_apply(p["moe"], cfg.moe, cfg.mlp, h,
+                                       compute_dtype)
+        else:
+            f = 0.0
+        return shard_act(x + mix + f, "btd"), aux
+    x = x + mix
+    h2 = norm_apply(p["norm2"], x, cfg.norm)
+    if ffn == "dense":
+        f = mlp_apply(p["mlp"], h2, cfg.mlp, compute_dtype)
+    elif ffn == "moe":
+        f, aux = moe_mod.moe_apply(p["moe"], cfg.moe, cfg.mlp, h2,
+                                   compute_dtype)
+    elif ffn == "rwkv_cm":
+        f = rwkv_mod.rwkv_channel_mix_train(p["rwkv"], cfg, h2, compute_dtype)
+    return shard_act(x + f, "btd"), aux
+
+
+def forward(params, cfg: ModelConfig, tokens, *, prefix_embeds=None,
+            remat: bool = True):
+    """tokens: (B, S) -> logits (B, S, vocab) fp32.
+
+    ``prefix_embeds`` (B, P, d) are prepended (VLM patch stub); logits are
+    returned for the full (P+S) sequence.
+    """
+    compute_dtype = jnp.dtype(cfg.dtype)
+    prefix, period, n_periods = period_structure(cfg)
+    x = jnp.take(params["embed"]["table"], tokens, axis=0)
+    x = x.astype(compute_dtype)
+    if prefix_embeds is not None:
+        x = jnp.concatenate([prefix_embeds.astype(compute_dtype), x], axis=1)
+    x = shard_act(x, "btd")
+    b, s, _ = x.shape
+    positions = jnp.broadcast_to(jnp.arange(s), (b, s))
+
+    aux_sum = jnp.zeros((), jnp.float32)
+    for i, kind in enumerate(prefix):
+        x, aux = _apply_layer(params["prefix"][i], cfg, kind, x, positions,
+                              compute_dtype)
+        aux_sum = aux_sum + aux.get("load_balance_loss", 0.0)
+
+    def period_body(carry, p_stack):
+        x, aux_sum = carry
+        for j, kind in enumerate(period):
+            x, aux = _apply_layer(p_stack[j], cfg, kind, x, positions,
+                                  compute_dtype)
+            aux_sum = aux_sum + aux.get("load_balance_loss", 0.0)
+        return (x, aux_sum), None
+
+    if not remat or cfg.remat == "none":
+        body = period_body
+    elif cfg.remat == "dots":
+        body = jax.checkpoint(
+            period_body,
+            policy=jax.checkpoint_policies.dots_with_no_batch_dims_saveable)
+    else:
+        body = jax.checkpoint(period_body)
+    (x, aux_sum), _ = jax.lax.scan(body, (x, aux_sum), params["period"])
+
+    x = norm_apply(params["final_norm"], x, cfg.norm)
+    if cfg.tie_embeddings:
+        logits = jnp.einsum("btd,vd->btv", x.astype(compute_dtype),
+                            params["embed"]["table"].astype(compute_dtype),
+                            preferred_element_type=jnp.float32)
+    else:
+        logits = jnp.einsum("btd,dv->btv", x.astype(compute_dtype),
+                            params["unembed"]["w"].astype(compute_dtype),
+                            preferred_element_type=jnp.float32)
+    return shard_act(logits, "btv"), {"load_balance_loss": aux_sum}
+
+
+# --------------------------------------------------------------------------
+# caches / prefill / decode
+# --------------------------------------------------------------------------
+
+def _layer_cache(cfg: ModelConfig, kind, batch, max_len, dtype):
+    mixer, _ = kind
+    if mixer == "attn":
+        return attn.init_gqa_cache(cfg, batch, max_len, dtype)
+    if mixer == "mla":
+        return attn.init_mla_cache(cfg, batch, max_len, dtype)
+    if mixer == "mamba":
+        return mam.init_mamba_cache(cfg, batch, dtype)
+    if mixer == "rwkv":
+        return rwkv_mod.init_rwkv_cache(cfg, batch, dtype)
+    raise ValueError(kind)
+
+
+def init_cache(cfg: ModelConfig, batch: int, max_len: int,
+               dtype=jnp.bfloat16):
+    prefix, period, n_periods = period_structure(cfg)
+    cache: dict[str, Any] = {}
+    if prefix:
+        cache["prefix"] = [_layer_cache(cfg, k, batch, max_len, dtype)
+                           for k in prefix]
+    # stacked period caches: one period's cache broadcast over depth
+    ex = [_layer_cache(cfg, k, batch, max_len, dtype) for k in period]
+    cache["period"] = jax.tree.map(
+        lambda l: jnp.zeros((n_periods,) + l.shape, l.dtype), ex)
+    return cache
+
+
+def _apply_layer_step(p, cfg, kind, x, pos, cache, compute_dtype):
+    """One-token decode through a single layer; returns (x, cache)."""
+    mixer, ffn = kind
+    h = norm_apply(p["norm1"], x, cfg.norm)
+    if mixer == "attn":
+        mix, cache = attn.gqa_decode(p["attn"], cfg, h, pos, cache,
+                                     compute_dtype)
+    elif mixer == "mla":
+        mix, cache = attn.mla_decode(p["attn"], cfg, h, pos, cache,
+                                     compute_dtype)
+    elif mixer == "mamba":
+        mix, cache = mam.mamba_decode(p["mamba"], cfg, h, cache,
+                                      compute_dtype)
+    elif mixer == "rwkv":
+        mix, cache = rwkv_mod.rwkv_time_mix_decode(p["rwkv"], cfg, h, cache,
+                                                   compute_dtype)
+    if cfg.parallel_block:
+        if ffn == "dense":
+            f = mlp_apply(p["mlp"], h, cfg.mlp, compute_dtype)
+        elif ffn == "moe":
+            f, _ = moe_mod.moe_apply(p["moe"], cfg.moe, cfg.mlp, h,
+                                     compute_dtype)
+        else:
+            f = 0.0
+        return x + mix + f, cache
+    x = x + mix
+    h2 = norm_apply(p["norm2"], x, cfg.norm)
+    if ffn == "dense":
+        f = mlp_apply(p["mlp"], h2, cfg.mlp, compute_dtype)
+    elif ffn == "moe":
+        f, _ = moe_mod.moe_apply(p["moe"], cfg.moe, cfg.mlp, h2,
+                                 compute_dtype)
+    elif ffn == "rwkv_cm":
+        f, cache = rwkv_mod.rwkv_channel_mix_decode(p["rwkv"], cfg, h2,
+                                                    cache, compute_dtype)
+    return x + f, cache
+
+
+def _apply_layer_prefill(p, cfg, kind, x, positions, cache, compute_dtype):
+    mixer, ffn = kind
+    h = norm_apply(p["norm1"], x, cfg.norm)
+    if mixer == "attn":
+        mix, cache = attn.gqa_prefill(p["attn"], cfg, h, positions, cache,
+                                      compute_dtype)
+    elif mixer == "mla":
+        mix, cache = attn.mla_prefill(p["attn"], cfg, h, positions, cache,
+                                      compute_dtype)
+    elif mixer == "mamba":
+        # run the train path, then recompute the final state for the cache
+        mix = mam.mamba_train(p["mamba"], cfg, h, compute_dtype)
+        cache = _mamba_prefill_cache(p["mamba"], cfg, h, cache,
+                                     compute_dtype)
+    elif mixer == "rwkv":
+        mix, cache = _rwkv_prefill(p["rwkv"], cfg, h, cache, compute_dtype)
+    if cfg.parallel_block:
+        if ffn == "dense":
+            f = mlp_apply(p["mlp"], h, cfg.mlp, compute_dtype)
+        elif ffn == "moe":
+            f, _ = moe_mod.moe_apply(p["moe"], cfg.moe, cfg.mlp, h,
+                                     compute_dtype)
+        else:
+            f = 0.0
+        return x + mix + f, cache
+    x = x + mix
+    h2 = norm_apply(p["norm2"], x, cfg.norm)
+    if ffn == "dense":
+        f = mlp_apply(p["mlp"], h2, cfg.mlp, compute_dtype)
+    elif ffn == "moe":
+        f, _ = moe_mod.moe_apply(p["moe"], cfg.moe, cfg.mlp, h2,
+                                 compute_dtype)
+    elif ffn == "rwkv_cm":
+        f = rwkv_mod.rwkv_channel_mix_train(p["rwkv"], cfg, h2,
+                                            compute_dtype)
+        cache = dict(cache, x_cm=h2[:, -1:, :].astype(cache["x_cm"].dtype))
+    return shard_act(x + f, "btd"), cache
+
+
+def _mamba_prefill_cache(p, cfg, x, cache, compute_dtype):
+    """Fill the mamba decode cache from a full prefix (replays the scan to
+    get the final state; conv window = last d_conv-1 inputs)."""
+    m = cfg.mamba
+    xz = linear(p["in_proj"], x, compute_dtype)
+    xin, _ = jnp.split(xz, 2, axis=-1)
+    kw = m.d_conv - 1
+    window = xin[:, -kw:, :] if x.shape[1] >= kw else jnp.pad(
+        xin, ((0, 0), (kw - x.shape[1], 0), (0, 0)))
+    xc = mam._causal_conv(p, cfg, xin, compute_dtype)
+    dt, bmat, cmat = mam._ssm_params(p, cfg, xc, compute_dtype)
+    a = -jnp.exp(p["a_log"].astype(jnp.float32))
+
+    def step(h, inp):
+        x_t, dt_t, b_t = inp
+        da = jnp.exp(dt_t[..., None] * a)
+        h = da * h + (dt_t * x_t)[..., None] * b_t[:, None, :]
+        return h, None
+
+    h0 = cache["h"]
+    h, _ = jax.lax.scan(step, h0,
+                        (xc.astype(jnp.float32).transpose(1, 0, 2),
+                         dt.transpose(1, 0, 2), bmat.transpose(1, 0, 2)))
+    return {"conv": window.astype(cache["conv"].dtype), "h": h}
+
+
+def _rwkv_prefill(p, cfg, x, cache, compute_dtype):
+    """Prefill the rwkv state by running the recurrence over the prefix."""
+    b, t, d = x.shape
+    xs = rwkv_mod._token_shift(x, cache["x_tm"].astype(x.dtype))
+    y, sT = rwkv_mod._time_mix_core(p, cfg, x, xs, cache["s"], compute_dtype)
+    cache = dict(cache, s=sT, x_tm=x[:, -1:, :].astype(cache["x_tm"].dtype))
+    return y, cache
+
+
+def prefill(params, cfg: ModelConfig, tokens, cache, *, prefix_embeds=None):
+    """Full-sequence pass filling all caches; returns (last_logits, cache)."""
+    compute_dtype = jnp.dtype(cfg.dtype)
+    prefix, period, n_periods = period_structure(cfg)
+    x = jnp.take(params["embed"]["table"], tokens, axis=0).astype(
+        compute_dtype)
+    if prefix_embeds is not None:
+        x = jnp.concatenate([prefix_embeds.astype(compute_dtype), x], axis=1)
+    x = shard_act(x, "btd")
+    b, s, _ = x.shape
+    positions = jnp.broadcast_to(jnp.arange(s), (b, s))
+
+    for i, kind in enumerate(prefix):
+        x, cache["prefix"][i] = _apply_layer_prefill(
+            params["prefix"][i], cfg, kind, x, positions,
+            cache["prefix"][i], compute_dtype)
+
+    def body(x, slc):
+        p_stack, c_stack = slc
+        for j, kind in enumerate(period):
+            x, c = _apply_layer_prefill(p_stack[j], cfg, kind, x, positions,
+                                        c_stack[j], compute_dtype)
+            c_stack[j] = c
+        return x, c_stack
+
+    x, new_cache = jax.lax.scan(body, x, (params["period"], cache["period"]))
+    cache["period"] = new_cache
+    x = norm_apply(params["final_norm"], x[:, -1:, :], cfg.norm)
+    logits = _unembed(params, cfg, x)
+    return logits, cache
+
+
+def _unembed(params, cfg, x):
+    compute_dtype = jnp.dtype(cfg.dtype)
+    if cfg.tie_embeddings:
+        return jnp.einsum("btd,vd->btv", x.astype(compute_dtype),
+                          params["embed"]["table"].astype(compute_dtype),
+                          preferred_element_type=jnp.float32)
+    return jnp.einsum("btd,dv->btv", x.astype(compute_dtype),
+                      params["unembed"]["w"].astype(compute_dtype),
+                      preferred_element_type=jnp.float32)
+
+
+def decode_step(params, cfg: ModelConfig, token, pos, cache):
+    """token: (B,) int32; pos: (B,) positions. Returns (logits, cache)."""
+    compute_dtype = jnp.dtype(cfg.dtype)
+    prefix, period, n_periods = period_structure(cfg)
+    x = jnp.take(params["embed"]["table"], token[:, None], axis=0).astype(
+        compute_dtype)
+    x = shard_act(x, "btd")
+
+    for i, kind in enumerate(prefix):
+        x, cache["prefix"][i] = _apply_layer_step(
+            params["prefix"][i], cfg, kind, x, pos, cache["prefix"][i],
+            compute_dtype)
+
+    def body(x, slc):
+        p_stack, c_stack = slc
+        for j, kind in enumerate(period):
+            x, c = _apply_layer_step(p_stack[j], cfg, kind, x, pos,
+                                     c_stack[j], compute_dtype)
+            c_stack[j] = c
+        return x, c_stack
+
+    x, new_cache = jax.lax.scan(body, x, (params["period"], cache["period"]))
+    cache["period"] = new_cache
+    x = norm_apply(params["final_norm"], x, cfg.norm)
+    logits = _unembed(params, cfg, x)
+    return logits[:, 0], cache

@@ -1,0 +1,55 @@
+"""Elastic re-meshing: pick a new mesh for the surviving device set.
+
+When a pod row (or whole pod) is lost, training resumes on fewer devices:
+the checkpoint is mesh-agnostic (full-value leaves), so the only decision
+is the new mesh shape.  Policy: keep the tensor-parallel width fixed when
+possible (TP width is baked into kernel-level efficiency and cache
+layouts) and shrink the (pod x data) rows - matching how real fleets
+degrade: lose rows, keep the within-row topology.
+
+For the SNN engine the same plan re-runs the two-level decomposition for
+the new row count - Area-Processes Mapping is row-granular by design, so a
+row loss re-partitions areas without touching the multisection width.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+
+__all__ = ["ElasticPlan", "plan_mesh"]
+
+
+@dataclasses.dataclass(frozen=True)
+class ElasticPlan:
+    shape: tuple[int, ...]
+    axes: tuple[str, ...]
+    n_devices: int
+    dropped: int
+
+    def make_mesh(self):
+        return jax.make_mesh(self.shape, self.axes)
+
+
+def plan_mesh(available_devices: int, *, model_width: int = 16,
+              prefer_pods: bool = True) -> ElasticPlan:
+    """Largest mesh (rows x model_width) <= available, rows maximal."""
+    if available_devices < model_width:
+        # degrade TP width as last resort (halving keeps divisibility)
+        width = model_width
+        while width > 1 and available_devices < width:
+            width //= 2
+        model_width = max(width, 1)
+    rows = available_devices // model_width
+    if rows == 0:
+        raise ValueError("no usable devices")
+    used = rows * model_width
+    if prefer_pods and rows % 2 == 0 and rows >= 4:
+        shape = (2, rows // 2, model_width)
+        axes = ("pod", "data", "model")
+    else:
+        shape = (rows, model_width)
+        axes = ("data", "model")
+    return ElasticPlan(shape=shape, axes=axes, n_devices=used,
+                       dropped=available_devices - used)

@@ -1,0 +1,108 @@
+"""Batched serving engine: prefill waves + greedy decode over KV caches.
+
+Serving layout mirrors the dry-run's ``prefill``/``decode`` cells: a fixed
+slot batch, caches sharded by :func:`repro.sharding.rules.cache_specs`.
+Requests are admitted in waves (prefill the whole slot batch at once),
+decoded in lockstep with per-slot stop tracking, and finished slots are
+masked.  This is "continuous batching lite": wave admission amortizes the
+prefill; slot-level insertion (true continuous batching) is an orthogonal
+scheduler change on the same step functions and is noted as future work in
+DESIGN.md.
+
+On the production mesh both step functions come from
+:func:`repro.launch.dryrun.build_cell`; here they are jit'd directly for
+single-host tests and examples.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models.model import Model
+
+__all__ = ["BatchServer", "ServeStats"]
+
+
+@dataclasses.dataclass
+class ServeStats:
+    prefill_s: float = 0.0
+    decode_s: float = 0.0
+    tokens_out: int = 0
+
+    @property
+    def decode_tok_per_s(self) -> float:
+        return self.tokens_out / self.decode_s if self.decode_s else 0.0
+
+
+class BatchServer:
+    def __init__(self, model: Model, params, *, slots: int, max_len: int,
+                 eos_id: int = 0, extra_inputs: dict | None = None):
+        self.model = model
+        self.params = params
+        self.slots = slots
+        self.max_len = max_len
+        self.eos_id = eos_id
+        self.extra = extra_inputs or {}
+        self._prefill = jax.jit(model.prefill)
+        self._decode = jax.jit(model.decode)
+
+    def _pad_batch(self, requests: Sequence[Sequence[int]]):
+        assert len(requests) <= self.slots
+        lens = [len(r) for r in requests]
+        s = max(lens)
+        toks = np.zeros((self.slots, s), np.int32)
+        for i, r in enumerate(requests):
+            toks[i, :len(r)] = r  # left-aligned; tail padding
+        return jnp.asarray(toks), np.asarray(
+            lens + [1] * (self.slots - len(requests)))
+
+    def serve(self, requests: Sequence[Sequence[int]], *,
+              max_new_tokens: int = 32) -> tuple[list[list[int]], ServeStats]:
+        """Greedy-decode a wave of requests; returns per-request outputs."""
+        stats = ServeStats()
+        tokens, lens = self._pad_batch(requests)
+        cache = self.model.init_cache(self.slots, self.max_len,
+                                      dtype=jnp.dtype(self.model.cfg.dtype)
+                                      if self.model.cfg.dtype != "bfloat16"
+                                      else jnp.bfloat16)
+        batch = {"tokens": tokens, **self.extra}
+        t0 = time.perf_counter()
+        logits, cache = self._prefill(self.params, batch, cache)
+        logits = jax.block_until_ready(logits)
+        stats.prefill_s = time.perf_counter() - t0
+
+        # NOTE: wave semantics - all requests share the padded prefix
+        # length; per-slot true lengths mask the outputs.
+        prefix = tokens.shape[1]
+        n_prefix_embeds = getattr(self.model.cfg, "n_prefix_embeds", 0) \
+            if "patches" in self.extra else 0
+        pos = jnp.full((self.slots,), prefix + n_prefix_embeds, jnp.int32)
+        tok = jnp.argmax(logits[:, -1] if logits.ndim == 3 else logits,
+                         axis=-1).astype(jnp.int32).reshape(self.slots)
+
+        outs: list[list[int]] = [[] for _ in range(self.slots)]
+        done = np.zeros(self.slots, bool)
+        t0 = time.perf_counter()
+        for _ in range(max_new_tokens):
+            tok_np = np.asarray(tok)
+            for i in range(len(requests)):
+                if not done[i]:
+                    outs[i].append(int(tok_np[i]))
+                    if tok_np[i] == self.eos_id:
+                        done[i] = True
+                    else:
+                        stats.tokens_out += 1
+            if done[:len(requests)].all():
+                break
+            logits, cache = self._decode(self.params, cache, tok, pos)
+            logits = jax.block_until_ready(logits)
+            tok = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+            pos = pos + 1
+        stats.decode_s = time.perf_counter() - t0
+        return [outs[i] for i in range(len(requests))], stats

@@ -1,0 +1,154 @@
+"""Optimizers: AdamW, Adafactor (factored 2nd moment), SGD - pure pytree fns.
+
+Design choices for the production mesh (DESIGN.md §6):
+
+* Optimizer state inherits the parameter sharding (params are FSDP x TP
+  sharded, so state is fully sharded - ZeRO-3-equivalent under XLA SPMD).
+* AdamW keeps fp32 ``m``/``v`` (+ fp32 master copy when params are bf16).
+* Adafactor factors the second moment over the last two dims (row/col fp32
+  vectors, ~0 extra memory) and updates params in their storage dtype -
+  required for the deepseek-v3-671b train cell, where fp32 AdamW state
+  cannot fit 256 x 16 GB (EXPERIMENTS.md §Dry-run notes).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import TrainConfig
+
+__all__ = ["init_opt_state", "apply_updates", "global_norm", "clip_by_norm"]
+
+
+def global_norm(tree) -> jax.Array:
+    leaves = [jnp.sum(jnp.square(l.astype(jnp.float32)))
+              for l in jax.tree.leaves(tree)]
+    return jnp.sqrt(jnp.sum(jnp.stack(leaves)))
+
+
+def clip_by_norm(tree, max_norm: float):
+    g = global_norm(tree)
+    scale = jnp.minimum(1.0, max_norm / jnp.maximum(g, 1e-9))
+    return jax.tree.map(lambda l: (l.astype(jnp.float32) * scale
+                                   ).astype(l.dtype), tree), g
+
+
+# ---------------------------------------------------------------------------
+
+
+def _factored_shape(shape):
+    """Adafactor factors dims >= 2: row stats drop the last dim, col stats
+    drop the second-to-last."""
+    return shape[:-1], shape[:-2] + shape[-1:]
+
+
+def init_opt_state(cfg: TrainConfig, params) -> dict[str, Any]:
+    if cfg.optimizer == "adamw":
+        state = {
+            "m": jax.tree.map(
+                lambda p: jnp.zeros(p.shape, jnp.float32), params),
+            "v": jax.tree.map(
+                lambda p: jnp.zeros(p.shape, jnp.float32), params),
+        }
+        if jnp.dtype(cfg.param_dtype) != jnp.float32:
+            state["master"] = jax.tree.map(
+                lambda p: p.astype(jnp.float32), params)
+        return state
+    if cfg.optimizer == "adafactor":
+        def vr(p):
+            return (jnp.zeros(p.shape[:-1], jnp.float32)
+                    if p.ndim >= 2 else jnp.zeros(p.shape, jnp.float32))
+
+        def vc(p):
+            return (jnp.zeros(p.shape[:-2] + p.shape[-1:], jnp.float32)
+                    if p.ndim >= 2 else jnp.zeros((1,), jnp.float32))
+
+        return {"v_row": jax.tree.map(vr, params),
+                "v_col": jax.tree.map(vc, params)}
+    if cfg.optimizer == "sgd":
+        return {"m": jax.tree.map(
+            lambda p: jnp.zeros(p.shape, jnp.float32), params)}
+    raise ValueError(f"unknown optimizer {cfg.optimizer!r}")
+
+
+def apply_updates(cfg: TrainConfig, params, grads, state, step):
+    """Returns (new_params, new_state). ``step`` is 0-based."""
+    t = (step + 1).astype(jnp.float32)
+    if cfg.optimizer == "adamw":
+        b1, b2 = cfg.beta1, cfg.beta2
+        m = jax.tree.map(lambda m, g: b1 * m + (1 - b1)
+                         * g.astype(jnp.float32), state["m"], grads)
+        v = jax.tree.map(lambda v, g: b2 * v + (1 - b2)
+                         * jnp.square(g.astype(jnp.float32)),
+                         state["v"], grads)
+        bc1 = 1 - b1 ** t
+        bc2 = 1 - b2 ** t
+        master = state.get("master", params)
+
+        def upd(p, m_, v_):
+            u = (m_ / bc1) / (jnp.sqrt(v_ / bc2) + cfg.eps)
+            return (p.astype(jnp.float32)
+                    - cfg.lr * (u + cfg.weight_decay * p.astype(jnp.float32)))
+
+        new_master = jax.tree.map(upd, master, m, v)
+        new_state = {"m": m, "v": v}
+        if "master" in state:
+            new_state["master"] = new_master
+            new_params = jax.tree.map(
+                lambda nm, p: nm.astype(p.dtype), new_master, params)
+        else:
+            new_params = jax.tree.map(
+                lambda nm, p: nm.astype(p.dtype), new_master, params)
+        return new_params, new_state
+
+    if cfg.optimizer == "adafactor":
+        eps = 1e-30
+        decay = 1.0 - t ** -0.8   # Shazeer-Stern schedule
+
+        def upd(p, g, vr, vc):
+            g32 = g.astype(jnp.float32)
+            g2 = jnp.square(g32) + eps
+            if p.ndim >= 2:
+                vr_n = decay * vr + (1 - decay) * jnp.mean(g2, axis=-1)
+                vc_n = decay * vc + (1 - decay) * jnp.mean(g2, axis=-2)
+                # factored approximation: V ~ (vr / mean(vr)) outer vc
+                r = vr_n / jnp.maximum(
+                    jnp.mean(vr_n, axis=-1, keepdims=True), eps)
+                denom = jnp.sqrt(r[..., None] * vc_n[..., None, :])
+                u = g32 / jnp.maximum(denom, eps)
+            else:
+                vr_n = decay * vr + (1 - decay) * g2
+                vc_n = vc
+                u = g32 / jnp.maximum(jnp.sqrt(vr_n), eps)
+            # update clipping (RMS <= 1)
+            rms = jnp.sqrt(jnp.mean(jnp.square(u)) + eps)
+            u = u / jnp.maximum(1.0, rms)
+            newp = (p.astype(jnp.float32)
+                    - cfg.lr * u - cfg.lr * cfg.weight_decay
+                    * p.astype(jnp.float32))
+            return newp.astype(p.dtype), vr_n, vc_n
+
+        flat_p, tdef = jax.tree.flatten(params)
+        flat_g = tdef.flatten_up_to(grads)
+        flat_vr = tdef.flatten_up_to(state["v_row"])
+        flat_vc = tdef.flatten_up_to(state["v_col"])
+        out = [upd(p, g, vr, vc)
+               for p, g, vr, vc in zip(flat_p, flat_g, flat_vr, flat_vc)]
+        new_params = tdef.unflatten([o[0] for o in out])
+        new_state = {"v_row": tdef.unflatten([o[1] for o in out]),
+                     "v_col": tdef.unflatten([o[2] for o in out])}
+        return new_params, new_state
+
+    if cfg.optimizer == "sgd":
+        m = jax.tree.map(lambda m_, g: cfg.beta1 * m_
+                         + g.astype(jnp.float32), state["m"], grads)
+        new_params = jax.tree.map(
+            lambda p, m_: (p.astype(jnp.float32) - cfg.lr * m_
+                           ).astype(p.dtype), params, m)
+        return new_params, {"m": m}
+
+    raise ValueError(f"unknown optimizer {cfg.optimizer!r}")

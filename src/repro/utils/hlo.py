@@ -1,0 +1,60 @@
+"""HLO text analysis: collective-traffic accounting for the roofline.
+
+``cost_analysis()`` does not report collective bytes, so we parse the
+partitioned HLO: every ``all-gather`` / ``all-reduce`` / ``reduce-scatter`` /
+``all-to-all`` / ``collective-permute`` op's *output* shape is summed (bytes
+moved per participating device, the roofline-relevant quantity).
+
+Caveat handled upstream: ops inside ``while`` bodies appear once in the text
+regardless of trip count - launch/roofline.py corrects with scan-delta
+extraction (DESIGN.md §7).
+"""
+
+from __future__ import annotations
+
+import re
+from collections import defaultdict
+
+__all__ = ["collective_bytes", "parse_shape_bytes", "DTYPE_BYTES"]
+
+DTYPE_BYTES = {
+    "f64": 8, "f32": 4, "f16": 2, "bf16": 2, "f8e4m3fn": 1, "f8e5m2": 1,
+    "s64": 8, "u64": 8, "s32": 4, "u32": 4, "s16": 2, "u16": 2,
+    "s8": 1, "u8": 1, "pred": 1, "c64": 8, "c128": 16, "s4": 1, "u4": 1,
+}
+
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+_COLLECTIVE_KINDS = ("all-gather", "all-reduce", "reduce-scatter",
+                     "all-to-all", "collective-permute")
+# op lines look like:  %name = bf16[8,128]{1,0} all-gather(...)
+_OP_RE = re.compile(
+    r"=\s+((?:\(.*?\))|(?:[\w\[\],{}\s]+?))\s+"
+    r"(all-gather|all-reduce|reduce-scatter|all-to-all|collective-permute)"
+    r"(-start|-done)?\(")
+
+
+def parse_shape_bytes(shape_str: str) -> int:
+    """Sum byte sizes of every 'dtype[dims]' occurring in shape_str."""
+    total = 0
+    for dtype, dims in _SHAPE_RE.findall(shape_str):
+        if dtype not in DTYPE_BYTES:
+            continue
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                n *= int(d)
+        total += n * DTYPE_BYTES[dtype]
+    return total
+
+
+def collective_bytes(hlo_text: str) -> dict[str, int]:
+    """Per-kind bytes moved (output shapes; '-done' ops skipped to avoid
+    double counting async pairs)."""
+    out: dict[str, int] = defaultdict(int)
+    for m in _OP_RE.finditer(hlo_text):
+        shape_str, kind, phase = m.group(1), m.group(2), m.group(3)
+        if phase == "-done":
+            continue
+        out[kind] += parse_shape_bytes(shape_str)
+    out["total"] = sum(v for k, v in out.items() if k != "total")
+    return dict(out)

@@ -1,0 +1,335 @@
+"""Loop-aware static analysis of partitioned HLO text.
+
+``compiled.cost_analysis()`` on the CPU backend counts every ``while`` body
+ONCE, ignoring trip counts - useless for scanned-layer models.  This module
+re-derives the roofline quantities from ``compiled.as_text()`` *correctly*:
+
+* computations are parsed into per-op records with resolved operand shapes
+  (symbol table per computation; operand types are not inline in modern HLO);
+* ``while`` ops carry ``backend_config={"known_trip_count":{"n":...}}`` -
+  bodies are accumulated recursively x trip count;
+* ``fusion``/``call``/``conditional`` recurse x1 (fusion interiors count for
+  FLOPs - dots can be fused - but their *traffic* is the fusion's operands +
+  outputs, matching one-kernel-one-HBM-pass semantics);
+* FLOPs: ``dot`` = 2 x batch x M x N x K from the printed dimension numbers;
+  ``convolution`` approximated from output x kernel volume; elementwise and
+  reductions are counted 1 flop/output element (sub-1% for LM workloads);
+* traffic: per top-level op, operand bytes + output bytes (a fused-kernel
+  HBM model - intra-fusion temporaries are free, weights re-read per use);
+* collectives: output bytes per (all-gather | all-reduce | reduce-scatter |
+  all-to-all | collective-permute), '-done' halves of async pairs skipped.
+
+All quantities are PER-DEVICE (the module is the post-SPMD partitioned
+program).  This is the data source for EXPERIMENTS.md §Roofline.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import re
+from collections import defaultdict
+from functools import lru_cache
+
+__all__ = ["HloCosts", "analyze_hlo"]
+
+DTYPE_BYTES = {
+    "f64": 8, "f32": 4, "f16": 2, "bf16": 2, "f8e4m3fn": 1, "f8e5m2": 1,
+    "s64": 8, "u64": 8, "s32": 4, "u32": 4, "s16": 2, "u16": 2,
+    "s8": 1, "u8": 1, "pred": 1, "c64": 8, "c128": 16, "s4": 1, "u4": 1,
+    "token": 0, "opaque": 0,
+}
+
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+_DEF_RE = re.compile(r"^\s*(?:ROOT\s+)?%([\w.\-]+)\s*=\s*(.*)$")
+_COMP_RE = re.compile(r"^(?:ENTRY\s+)?%([\w.\-]+)\s*\((.*)\)\s*->")
+_OPNAME_RE = re.compile(r"^((?:\([^()]*\))|(?:[\w\[\],{}]+))\s+([\w\-]+)\(")
+_TRIP_RE = re.compile(r"known_trip_count[\"':{\s]+n[\"':\s]+(\d+)")
+_CALLS_RE = re.compile(r"(?:calls|body|to_apply)=%([\w.\-]+)")
+_COND_BRANCH_RE = re.compile(r"branch_computations=\{([^}]*)\}")
+_OPERAND_RE = re.compile(r"%([\w.\-]+)")
+
+COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+               "collective-permute")
+
+
+def _shape_info(type_str: str) -> tuple[int, int]:
+    """-> (bytes, n_elements) summed over a (possibly tuple) type string."""
+    total_b = 0
+    total_n = 0
+    for dtype, dims in _SHAPE_RE.findall(type_str):
+        if dtype not in DTYPE_BYTES:
+            continue
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                n *= int(d)
+        total_b += n * DTYPE_BYTES[dtype]
+        total_n += n
+    return total_b, total_n
+
+
+def _dims_of(type_str: str) -> list[int]:
+    m = _SHAPE_RE.search(type_str)
+    if not m or not m.group(2):
+        return []
+    return [int(d) for d in m.group(2).split(",")]
+
+
+@dataclasses.dataclass
+class HloCosts:
+    flops: float = 0.0
+    traffic_bytes: float = 0.0
+    collective_bytes: float = 0.0
+    collective_by_kind: dict = dataclasses.field(
+        default_factory=lambda: defaultdict(float))
+    dot_flops: float = 0.0
+    # optional per-op-name traffic tally (kind -> bytes), for diagnostics
+    traffic_by_op: dict = dataclasses.field(
+        default_factory=lambda: defaultdict(float))
+
+    def add(self, other: "HloCosts", mult: float = 1.0):
+        self.flops += other.flops * mult
+        self.traffic_bytes += other.traffic_bytes * mult
+        self.collective_bytes += other.collective_bytes * mult
+        self.dot_flops += other.dot_flops * mult
+        for k, v in other.collective_by_kind.items():
+            self.collective_by_kind[k] += v * mult
+        for k, v in other.traffic_by_op.items():
+            self.traffic_by_op[k] += v * mult
+
+
+@dataclasses.dataclass
+class _Op:
+    name: str
+    kind: str
+    out_type: str
+    out_bytes: int
+    out_elems: int
+    operands: list[str]
+    line: str
+
+
+class _Computation:
+    def __init__(self, name: str):
+        self.name = name
+        self.ops: list[_Op] = []
+        self.symbols: dict[str, str] = {}  # %name -> type str
+        self.root_kind: str | None = None  # kind of the ROOT op
+        self.has_dus: bool = False         # contains dynamic-update-slice
+        self.has_dslice: bool = False      # contains dynamic-slice
+        self._op_kinds: set = None or set()
+
+    @property
+    def pure_convert(self) -> bool:
+        """True if the computation only converts dtypes (XLA:CPU inserts
+        bf16->f32 converts to legalize bf16 dots; the TPU MXU consumes bf16
+        directly, so these moves do not exist on the target - excluded
+        from the traffic model, see DESIGN.md §7)."""
+        real = self._op_kinds - {"parameter", "tuple", "get-tuple-element",
+                                 "bitcast", "copy"}
+        return bool(real) and real <= {"convert"}
+
+
+def _parse(text: str) -> tuple[dict[str, _Computation], str | None]:
+    comps: dict[str, _Computation] = {}
+    entry: str | None = None
+    cur: _Computation | None = None
+    for raw in text.splitlines():
+        line = raw.rstrip()
+        header = _COMP_RE.match(line)
+        if header and line.endswith("{"):
+            cur = _Computation(header.group(1))
+            comps[cur.name] = cur
+            if line.lstrip().startswith("ENTRY"):
+                entry = cur.name
+            # parameter symbol table from the header
+            for pname, ptype in re.findall(r"([\w.\-]+):\s*([^,()]+(?:\([^)]*\))?)",
+                                           header.group(2)):
+                cur.symbols[pname] = ptype
+            continue
+        if cur is None:
+            continue
+        if line.strip() == "}":
+            cur = None
+            continue
+        d = _DEF_RE.match(line)
+        if not d:
+            continue
+        name, rest = d.group(1), d.group(2)
+        is_root = line.lstrip().startswith("ROOT")
+        m = _OPNAME_RE.match(rest)
+        if not m:
+            # e.g. "%x = f32[2]{0} constant({...})" matches; params don't
+            cur.symbols[name] = rest.split()[0]
+            continue
+        out_type, kind = m.group(1), m.group(2)
+        cur.symbols[name] = out_type
+        if is_root:
+            cur.root_kind = kind
+        if kind in ("dynamic-update-slice", "scatter"):
+            cur.has_dus = True
+        if kind in ("dynamic-slice", "gather", "slice"):
+            cur.has_dslice = True
+        cur._op_kinds.add(kind)
+        ob, oe = _shape_info(out_type)
+        # operands: %refs inside the top-level parens only (cheap approx:
+        # refs before any attribute comma block; attributes also contain
+        # %comp names - filtered later by symbol-table membership)
+        call_part = rest[m.end() - 1:]
+        operands = _OPERAND_RE.findall(call_part.split("),", 1)[0])
+        cur.ops.append(_Op(name=name, kind=kind, out_type=out_type,
+                           out_bytes=ob, out_elems=oe, operands=operands,
+                           line=rest))
+    return comps, entry
+
+
+def _dot_flops(op: _Op, comp: _Computation) -> float:
+    """2 * batch * M * N * K from printed dimension numbers."""
+    lhs_t = comp.symbols.get(op.operands[0], "") if op.operands else ""
+    rhs_t = comp.symbols.get(op.operands[1], "") if len(op.operands) > 1 \
+        else ""
+    lhs, rhs = _dims_of(lhs_t), _dims_of(rhs_t)
+    if not lhs or not rhs:
+        # fall back: 2 * out_elems (severe undercount; rare)
+        return 2.0 * op.out_elems
+
+    def dims(attr):
+        m = re.search(attr + r"=\{([\d,]*)\}", op.line)
+        if not m or not m.group(1):
+            return []
+        return [int(x) for x in m.group(1).split(",")]
+
+    lc = dims("lhs_contracting_dims")
+    lb = dims("lhs_batch_dims")
+    k = 1
+    for d in lc:
+        k *= lhs[d] if d < len(lhs) else 1
+    batch = 1
+    for d in lb:
+        batch *= lhs[d] if d < len(lhs) else 1
+    m_sz = 1
+    for i, d in enumerate(lhs):
+        if i not in lc and i not in lb:
+            m_sz *= d
+    rc = dims("rhs_contracting_dims")
+    rb = dims("rhs_batch_dims")
+    n_sz = 1
+    for i, d in enumerate(rhs):
+        if i not in rc and i not in rb:
+            n_sz *= d
+    return 2.0 * batch * m_sz * n_sz * k
+
+
+def _op_tag(op: _Op) -> str:
+    m = re.search(r'op_name="([^"]*)"', op.line)
+    src = "/".join(m.group(1).split("/")[-2:]) if m else ""
+    return f"{op.kind}:{src}:{op.out_type[:60]}"
+
+
+def analyze_hlo(text: str) -> HloCosts:
+    comps, entry = _parse(text)
+
+    memo: dict[str, HloCosts] = {}
+
+    def eval_comp(name: str, *, traffic: bool) -> HloCosts:
+        key = f"{name}:{traffic}"
+        if key in memo:
+            return memo[key]
+        total = HloCosts()
+        comp = comps.get(name)
+        if comp is None:
+            memo[key] = total
+            return total
+        memo[key] = total  # break cycles defensively
+        for op in comp.ops:
+            kind = op.kind
+            called = _CALLS_RE.findall(op.line)
+            if kind == "while":
+                m = _TRIP_RE.search(op.line)
+                n = int(m.group(1)) if m else 1
+                body = re.search(r"body=%([\w.\-]+)", op.line)
+                if body:
+                    total.add(eval_comp(body.group(1), traffic=traffic), n)
+                continue
+            if kind == "conditional":
+                branches = _COND_BRANCH_RE.search(op.line)
+                names = (re.findall(r"%([\w.\-]+)", branches.group(1))
+                         if branches else called)
+                for b in names:
+                    total.add(eval_comp(b, traffic=traffic), 1.0)
+                continue
+            if kind in ("fusion", "call", "async-start"):
+                for c in called:
+                    # fusion interior: flops yes, traffic no
+                    total.add(eval_comp(c, traffic=False), 1.0)
+                if traffic:
+                    opb = [_shape_info(comp.symbols.get(o, ""))[0]
+                           for o in op.operands]
+                    # In-place dynamic-update-slice / scatter fusions
+                    # (incl. multi-output tuples of them): every output
+                    # component with a size-matching operand is aliased -
+                    # only the update slices move.
+                    callee = comps.get(called[0]) if called else None
+                    if callee is not None and callee.pure_convert:
+                        continue  # CPU bf16-legalization convert: free on TPU
+                    if callee is not None and callee.has_dslice:
+                        # slicing fusion: an operand much larger than the
+                        # output is only touched slice-wise
+                        opb = [min(o, 2 * op.out_bytes) if
+                               o > 4 * op.out_bytes else o for o in opb]
+                    tb = op.out_bytes + sum(opb)
+                    if callee is not None and callee.has_dus:
+                        out_sizes = [
+                            _shape_info(f"{dt}[{dims}]")[0]
+                            for dt, dims in _SHAPE_RE.findall(op.out_type)]
+                        pool = sorted(opb, reverse=True)
+                        aliased = 0
+                        for c in sorted(out_sizes, reverse=True):
+                            if pool and pool[0] == c and c > 0:
+                                aliased += c
+                                pool.pop(0)
+                        tb = max(tb - 2.0 * aliased, 0.0)
+                    total.traffic_bytes += tb
+                    total.traffic_by_op[_op_tag(op)] += tb
+                continue
+            # plain op
+            base_kind = kind.replace("-start", "")
+            if base_kind in COLLECTIVES and not kind.endswith("-done"):
+                total.collective_bytes += op.out_bytes
+                total.collective_by_kind[base_kind] += op.out_bytes
+            if kind == "dot":
+                f = _dot_flops(op, comp)
+                total.flops += f
+                total.dot_flops += f
+            elif kind == "convolution":
+                total.flops += 2.0 * op.out_elems * 8  # kernel-volume approx
+            elif kind in ("add", "multiply", "subtract", "divide", "tanh",
+                          "exponential", "log", "rsqrt", "sqrt", "power",
+                          "maximum", "minimum", "compare", "select",
+                          "reduce", "exponential-minus-one"):
+                total.flops += float(op.out_elems)
+            if traffic and kind not in ("parameter", "constant",
+                                        "get-tuple-element", "tuple",
+                                        "bitcast", "convert"):
+                opb = [_shape_info(comp.symbols.get(o, ""))[0]
+                       for o in op.operands]
+                if kind in ("dynamic-update-slice", "scatter") and opb \
+                        and max(opb) >= op.out_bytes:
+                    tb = 2.0 * (sum(opb) - max(opb))  # in-place update
+                elif kind in ("dynamic-slice", "slice", "gather"):
+                    small = sum(o for o in opb if o <= 4 * op.out_bytes)
+                    tb = 2.0 * op.out_bytes + small  # slice-wise read
+                else:
+                    tb = op.out_bytes + sum(opb)
+                total.traffic_bytes += tb
+                total.traffic_by_op[_op_tag(op)] += tb
+            # reduce etc. with to_apply tiny computations: skip recursion
+        memo[key] = total
+        return total
+
+    if entry is None:  # fall back: conventional name, else last computation
+        for name in comps:
+            if name.startswith("main"):
+                entry = name
+        entry = entry or (list(comps)[-1] if comps else "")
+    return eval_comp(entry, traffic=True)

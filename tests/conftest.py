@@ -1,0 +1,16 @@
+"""Test config: single-device world (dry-run sets its own 512-device flag
+in subprocesses), deterministic hypothesis profile."""
+
+import os
+import sys
+
+# never inherit a dry-run flag into the test world
+os.environ.pop("XLA_FLAGS", None)
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+from hypothesis import HealthCheck, settings  # noqa: E402
+
+settings.register_profile(
+    "repro", max_examples=25, deadline=None,
+    suppress_health_check=[HealthCheck.too_slow])
+settings.load_profile("repro")

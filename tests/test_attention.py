@@ -1,0 +1,105 @@
+"""Attention: chunked==dense, GQA/MLA decode==train, RoPE properties."""
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro import configs
+from repro.models import attention as A
+from repro.models.layers import apply_rope
+
+
+def test_chunked_equals_dense_causal():
+    key = jax.random.key(0)
+    q = jax.random.normal(key, (2, 300, 8, 32))
+    k = jax.random.normal(jax.random.key(1), (2, 300, 2, 32))
+    v = jax.random.normal(jax.random.key(2), (2, 300, 2, 16))
+    mask = A._causal_mask(2, 300)
+    ref = A._sdpa(q, k, v, mask, scale=0.2)
+    out = A._sdpa_chunked(q, k, v, scale=0.2, causal=True, q_chunk=64,
+                          kv_chunk=96)
+    np.testing.assert_allclose(np.asarray(ref, np.float32),
+                               np.asarray(out, np.float32), atol=3e-5)
+
+
+def test_chunked_equals_dense_bidirectional():
+    q = jax.random.normal(jax.random.key(3), (1, 100, 4, 16))
+    k = jax.random.normal(jax.random.key(4), (1, 150, 4, 16))
+    v = jax.random.normal(jax.random.key(5), (1, 150, 4, 16))
+    ref = A._sdpa(q, k, v, None, scale=0.25)
+    out = A._sdpa_chunked(q, k, v, scale=0.25, causal=False, q_chunk=32,
+                          kv_chunk=64)
+    np.testing.assert_allclose(np.asarray(ref, np.float32),
+                               np.asarray(out, np.float32), atol=3e-5)
+
+
+def test_gqa_decode_matches_train():
+    cfg = configs.get_smoke("qwen2.5-3b")
+    p = A.gqa_init(jax.random.key(0), cfg, jnp.float32)
+    b, s = 2, 12
+    x = jax.random.normal(jax.random.key(1), (b, s, cfg.d_model)) * 0.1
+    pos = jnp.broadcast_to(jnp.arange(s), (b, s))
+    full = A.gqa_train(p, cfg, x, pos, jnp.float32)
+
+    cache = A.init_gqa_cache(cfg, b, 32, jnp.float32)
+    pre, cache = A.gqa_prefill(p, cfg, x[:, :-1], pos[:, :-1], cache,
+                               jnp.float32)
+    step, cache = A.gqa_decode(p, cfg, x[:, -1:],
+                               jnp.full((b,), s - 1, jnp.int32), cache,
+                               jnp.float32)
+    np.testing.assert_allclose(np.asarray(step[:, 0]),
+                               np.asarray(full[:, -1]), atol=1e-4)
+
+
+def test_mla_absorbed_decode_matches_train():
+    """The compressed-space (absorbed) decode must equal the naive
+    full-materialization attention - DeepSeek's deployment identity."""
+    cfg = configs.get_smoke("deepseek-v3-671b")
+    p = A.mla_init(jax.random.key(0), cfg, jnp.float32)
+    b, s = 2, 10
+    x = jax.random.normal(jax.random.key(1), (b, s, cfg.d_model)) * 0.1
+    pos = jnp.broadcast_to(jnp.arange(s), (b, s))
+    full = A.mla_train(p, cfg, x, pos, jnp.float32)
+
+    cache = A.init_mla_cache(cfg, b, 16, jnp.float32)
+    _, cache = A.mla_prefill(p, cfg, x[:, :-1], pos[:, :-1], cache,
+                             jnp.float32)
+    step, _ = A.mla_decode(p, cfg, x[:, -1:],
+                           jnp.full((b,), s - 1, jnp.int32), cache,
+                           jnp.float32)
+    np.testing.assert_allclose(np.asarray(step[:, 0]),
+                               np.asarray(full[:, -1]), atol=1e-4)
+
+
+def test_rope_relative_position_property():
+    """RoPE: <rot(q,m), rot(k,n)> depends only on (m - n)."""
+    dh = 32
+    q = jax.random.normal(jax.random.key(0), (1, 1, 1, dh))
+    k = jax.random.normal(jax.random.key(1), (1, 1, 1, dh))
+
+    def dot_at(m, n):
+        qm = apply_rope(q, jnp.array([[m]]), 10_000.0)
+        kn = apply_rope(k, jnp.array([[n]]), 10_000.0)
+        return float(jnp.sum(qm * kn))
+
+    assert abs(dot_at(5, 3) - dot_at(105, 103)) < 1e-3
+    assert abs(dot_at(0, 0) - dot_at(50, 50)) < 1e-3
+
+
+def test_write_at_scatters_correct_rows():
+    buf = jnp.zeros((3, 8, 2))
+    val = jnp.ones((3, 1, 2))
+    pos = jnp.asarray([0, 3, 7])
+    out = np.asarray(A._write_at(buf, val, pos))
+    for b, p_ in enumerate([0, 3, 7]):
+        assert (out[b, p_] == 1).all()
+        assert out[b].sum() == 2.0
+
+
+def test_causal_mask_strictness():
+    m = np.asarray(A._causal_mask(1, 5))[0, 0]
+    assert m[0, 0] and not m[0, 1]
+    assert m[4].all()

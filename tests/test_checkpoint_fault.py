@@ -1,0 +1,145 @@
+"""Checkpointing (atomic, async, elastic) + fault-tolerance runtime."""
+
+import os
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.checkpoint.manager import CheckpointManager
+from repro.runtime.elastic import plan_mesh
+from repro.runtime.fault import (HeartbeatMonitor, RestartPolicy,
+                                 TrainSupervisor)
+
+
+def state_tree(v=0.0):
+    return {"params": {"w": jnp.full((4, 3), v), "b": jnp.zeros((3,))},
+            "opt": {"m": jnp.full((4, 3), v * 2)},
+            "step": jnp.asarray(int(v))}
+
+
+def test_save_restore_roundtrip(tmp_path):
+    mgr = CheckpointManager(str(tmp_path), keep=2)
+    mgr.save(5, state_tree(1.5), metadata={"note": "x"})
+    restored, meta = mgr.restore(state_tree())
+    assert meta["note"] == "x"
+    np.testing.assert_array_equal(np.asarray(restored["params"]["w"]),
+                                  np.full((4, 3), 1.5))
+
+
+def test_async_save_and_wait(tmp_path):
+    mgr = CheckpointManager(str(tmp_path))
+    mgr.save(1, state_tree(1.0), blocking=False)
+    mgr.wait()
+    assert mgr.latest_step() == 1
+
+
+def test_atomic_commit_no_partial_visible(tmp_path):
+    """A .tmp dir must never be treated as a checkpoint."""
+    mgr = CheckpointManager(str(tmp_path))
+    mgr.save(3, state_tree(3.0))
+    # simulate a crashed in-flight write
+    os.makedirs(tmp_path / "step_000000009.tmp")
+    assert mgr.latest_step() == 3
+    restored, _ = mgr.restore(state_tree())
+    assert float(restored["step"]) == 3
+
+
+def test_retention_gc(tmp_path):
+    mgr = CheckpointManager(str(tmp_path), keep=2)
+    for s in (1, 2, 3, 4):
+        mgr.save(s, state_tree(float(s)))
+    names = sorted(n for n in os.listdir(tmp_path) if n.startswith("step_"))
+    assert names == ["step_000000003", "step_000000004"]
+
+
+def test_restore_shape_mismatch_raises(tmp_path):
+    mgr = CheckpointManager(str(tmp_path))
+    mgr.save(1, state_tree(1.0))
+    bad = state_tree()
+    bad["params"]["w"] = jnp.zeros((5, 5))
+    with pytest.raises(ValueError):
+        mgr.restore(bad)
+
+
+def test_supervisor_recovers_from_injected_failure(tmp_path):
+    mgr = CheckpointManager(str(tmp_path))
+    fails = {20: True, 37: True}
+
+    def injector(step):
+        if fails.pop(step, False):
+            raise RuntimeError("simulated node loss")
+
+    def step_fn(state, step):
+        return {**state, "x": state["x"] + 1.0,
+                "step": jnp.asarray(step + 1)}
+
+    sup = TrainSupervisor(mgr, save_every=10,
+                          policy=RestartPolicy(max_restarts=5,
+                                               backoff_s=0.001))
+    state = {"x": jnp.asarray(0.0), "step": jnp.asarray(0)}
+    final, step = sup.run(state, step_fn, 50, fail_injector=injector)
+    assert step == 50
+    # x advanced exactly 50 - (lost-since-checkpoint) + replayed = consistent
+    assert any(e.startswith("restore@") for e in sup.events)
+    assert any(e.startswith("fail@20") for e in sup.events)
+    # deterministic step_fn + checkpoint resume => x equals the step count
+    # it reached after replay
+    assert float(final["x"]) >= 40
+
+
+def test_supervisor_aborts_after_max_restarts(tmp_path):
+    mgr = CheckpointManager(str(tmp_path))
+
+    def injector(step):
+        raise RuntimeError("always failing")
+
+    sup = TrainSupervisor(mgr, save_every=10,
+                          policy=RestartPolicy(max_restarts=2,
+                                               backoff_s=0.001))
+    with pytest.raises(RuntimeError, match="exceeded max restarts"):
+        sup.run({"x": jnp.asarray(0.0)}, lambda s, i: s, 10,
+                fail_injector=injector)
+
+
+def test_heartbeat_straggler_detection():
+    mon = HeartbeatMonitor(4, straggler_factor=3.0)
+    for step in range(8):
+        for w in range(4):
+            mon.observe(w, 1.0 if w != 2 else (1.0 if step < 7 else 5.0))
+    assert mon.stragglers() == [2]
+
+
+def test_heartbeat_dead_detection():
+    mon = HeartbeatMonitor(3, timeout_s=0.01)
+    now = time.monotonic()
+    mon.observe(0, 1.0, now=now)
+    mon.observe(1, 1.0, now=now - 10.0)
+    mon.last_seen[1] = now - 10.0
+    mon.observe(2, 1.0, now=now)
+    assert mon.dead(now=now) == [1]
+
+
+def test_elastic_plan_shapes():
+    p = plan_mesh(512, model_width=16)
+    assert p.shape == (2, 16, 16) and p.dropped == 0
+    p = plan_mesh(272, model_width=16)       # lost most of a pod
+    assert p.n_devices == 272 - p.dropped
+    assert p.shape[-1] == 16
+    p = plan_mesh(8, model_width=16)         # degrade TP width
+    assert p.n_devices >= 8 // 2
+
+
+def test_elastic_restore_roundtrip(tmp_path):
+    """Checkpoint written under one 'mesh', restored with explicit
+    shardings (single-device here; the API path is identical on a pod)."""
+    mgr = CheckpointManager(str(tmp_path))
+    mgr.save(2, state_tree(2.0))
+    shardings = jax.tree.map(
+        lambda _: jax.sharding.SingleDeviceSharding(jax.devices()[0]),
+        state_tree())
+    restored, _ = mgr.restore(state_tree(), shardings=shardings)
+    np.testing.assert_array_equal(np.asarray(restored["params"]["w"]),
+                                  np.full((4, 3), 2.0))

@@ -1,0 +1,96 @@
+"""Area-Processes Mapping + Multisection Division (paper §III.A)."""
+
+import numpy as np
+import pytest
+from hypothesis import given, strategies as st
+
+from repro.core import builder, models
+from repro.core.decomposition import (AreaSpec, apportion_devices,
+                                      area_process_mapping,
+                                      multisection_divide,
+                                      random_equivalent_mapping)
+from repro.core.distributed import mesh_decompose
+
+
+def test_apportion_sums_and_floors():
+    counts = apportion_devices([10.0, 1.0, 1.0], 8)
+    assert counts.sum() == 8
+    assert (counts >= 1).all()
+    assert counts[0] > counts[1]
+
+
+@given(st.integers(0, 2**31 - 1), st.sampled_from([2, 3, 4, 6, 8, 12]))
+def test_multisection_equal_counts(seed, n_parts):
+    """Load balance: parts differ by at most 1 point (the FDPS property)."""
+    rng = np.random.default_rng(seed)
+    pos = rng.normal(size=(rng.integers(n_parts * 3, 500), 3))
+    part = multisection_divide(pos, n_parts, rng=rng)
+    counts = np.bincount(part, minlength=n_parts)
+    assert counts.max() - counts.min() <= 1
+    assert counts.sum() == pos.shape[0]
+
+
+def test_multisection_is_spatial():
+    """Cells should be spatially coherent: each part's bbox is smaller than
+    the global bbox along the cut dimensions."""
+    rng = np.random.default_rng(3)
+    pos = rng.uniform(size=(4000, 3))
+    part = multisection_divide(pos, 8, rng=rng)
+    global_vol = np.prod(pos.max(0) - pos.min(0))
+    vols = []
+    for p in range(8):
+        sel = pos[part == p]
+        vols.append(np.prod(sel.max(0) - sel.min(0)))
+    assert np.mean(vols) < global_vol * 0.6
+
+
+def test_area_mapping_reduces_mirrors_vs_random():
+    """Fig. 9 vs Fig. 10: remote mirror count under Area-Processes Mapping
+    must be well below Random Equivalent Mapping."""
+    spec = models.marmoset(scale=0.004, n_areas=4)
+    n_dev = 8
+    dec_area = mesh_decompose(spec, n_rows=4, row_width=2)
+    dec_rand = mesh_decompose(spec, n_rows=4, row_width=2, method="random")
+    sh_area = builder.build_shards(spec, dec_area)
+    sh_rand = builder.build_shards(spec, dec_rand)
+
+    def total_remote(shards, dec):
+        tot = 0
+        for d, g in enumerate(shards):
+            # mirrors beyond the shard's own neurons
+            tot += int(g.n_mirror) - int(dec.parts[d].size)
+        return tot
+
+    rem_area = total_remote(sh_area, dec_area)
+    rem_rand = total_remote(sh_rand, dec_rand)
+    assert rem_area < rem_rand * 0.8, (rem_area, rem_rand)
+
+
+def test_area_process_mapping_valid_partition():
+    rng = np.random.default_rng(0)
+    areas = [AreaSpec(f"a{i}", 100 + 30 * i,
+                      positions=rng.uniform(size=(100 + 30 * i, 3)))
+             for i in range(3)]
+    dec = area_process_mapping(areas, 7)
+    dec.validate()
+    assert dec.n_devices == 7
+    # neurons of one device come from a single area
+    for d in range(7):
+        a = dec.device_area[d]
+        assert a >= 0
+
+
+def test_random_equivalent_mapping_valid():
+    dec = random_equivalent_mapping(1000, 8)
+    dec.validate()
+    sizes = [p.size for p in dec.parts]
+    assert max(sizes) - min(sizes) <= 1
+
+
+def test_mesh_decompose_row_alignment():
+    """mesh_decompose must produce rows*width parts with row-contiguous
+    device ids (the Area-Processes group = mesh row invariant)."""
+    spec = models.marmoset(scale=0.002, n_areas=6)
+    dec = mesh_decompose(spec, n_rows=4, row_width=2)
+    dec.validate()
+    assert dec.n_devices == 8

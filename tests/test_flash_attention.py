@@ -1,0 +1,43 @@
+"""Flash-attention Pallas kernel vs the system's _sdpa oracle (interpret)."""
+
+import numpy as np
+import jax
+import pytest
+
+from repro.kernels.flash_attention import flash_attention
+from repro.models import attention as A
+
+
+@pytest.mark.parametrize("b,s,t,h,hk,dh,dv,qc,kc,causal", [
+    (2, 300, 300, 8, 2, 32, 32, 64, 96, True),     # GQA, ragged tails
+    (1, 128, 128, 4, 4, 16, 16, 128, 128, True),   # MHA single block
+    (2, 100, 150, 4, 4, 16, 16, 32, 64, False),    # cross-attn shape
+    (1, 257, 257, 2, 1, 64, 32, 64, 64, True),     # dv != dh (MLA-like)
+])
+def test_flash_matches_sdpa(b, s, t, h, hk, dh, dv, qc, kc, causal):
+    ks = jax.random.split(jax.random.key(s + t), 3)
+    q = jax.random.normal(ks[0], (b, s, h, dh))
+    k = jax.random.normal(ks[1], (b, t, hk, dh))
+    v = jax.random.normal(ks[2], (b, t, hk, dv))
+    if causal:
+        assert s == t
+        mask = A._causal_mask(b, s)
+    else:
+        mask = None
+    ref = A._sdpa(q, k, v, mask, scale=1 / np.sqrt(dh))
+    out = flash_attention(q, k, v, causal=causal, q_chunk=qc, kv_chunk=kc)
+    np.testing.assert_allclose(np.asarray(ref, np.float32),
+                               np.asarray(out, np.float32), atol=5e-5)
+
+
+def test_flash_dtypes():
+    import jax.numpy as jnp
+    q = jax.random.normal(jax.random.key(0), (1, 64, 2, 16), jnp.float32)
+    k = jax.random.normal(jax.random.key(1), (1, 64, 2, 16), jnp.float32)
+    v = jax.random.normal(jax.random.key(2), (1, 64, 2, 16), jnp.float32)
+    out = flash_attention(q.astype(jnp.bfloat16), k.astype(jnp.bfloat16),
+                          v.astype(jnp.bfloat16), q_chunk=32, kv_chunk=32)
+    assert out.dtype == jnp.bfloat16
+    ref = A._sdpa(q, k, v, A._causal_mask(1, 64), scale=1 / 4.0)
+    np.testing.assert_allclose(np.asarray(ref, np.float32),
+                               np.asarray(out, np.float32), atol=3e-2)

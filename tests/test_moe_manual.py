@@ -1,0 +1,85 @@
+"""Manual expert-parallel MoE dispatch vs the SPMD oracle (subprocess,
+8 host devices): value equality (drop-free), differentiability, and the
+expert-resident sharding contract."""
+
+import json
+import os
+import subprocess
+import sys
+import textwrap
+
+import pytest
+
+ROOT = os.path.join(os.path.dirname(__file__), "..")
+
+CODE = textwrap.dedent("""
+    import os
+    os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+    import json
+    import numpy as np
+    import jax, jax.numpy as jnp
+    from repro.configs.base import MoEConfig
+    from repro.models import moe as moe_mod
+    from repro.models.moe_manual import expert_axes_for, expert_param_spec
+    from repro.sharding import rules
+
+    mesh = jax.make_mesh((2, 4), ("data", "model"))
+    res = {}
+    # E=8 divides data*model=8 -> full 2-axis expert residency
+    e = MoEConfig(n_experts=8, top_k=2, expert_ff=16, capacity_factor=16.0)
+    p = moe_mod.moe_init(jax.random.key(0), 32, "swiglu", e)
+    x = jax.random.normal(jax.random.key(1), (4, 16, 32))
+    y_ref, _ = moe_mod.moe_apply(p, e, "swiglu", x, jnp.float32)
+    with rules.use_mesh(mesh):
+        y_man, _ = jax.jit(lambda p, x: moe_mod.moe_apply(
+            p, e, "swiglu", x, jnp.float32))(p, x)
+    res["equal_full"] = bool(np.allclose(np.asarray(y_ref),
+                                         np.asarray(y_man), atol=1e-4))
+    res["axes_full"] = list(expert_axes_for(mesh, 8))
+
+    # E=4 only divides model -> single-axis residency
+    e4 = MoEConfig(n_experts=4, top_k=2, expert_ff=16, capacity_factor=16.0)
+    p4 = moe_mod.moe_init(jax.random.key(2), 32, "swiglu", e4)
+    y_ref4, _ = moe_mod.moe_apply(p4, e4, "swiglu", x, jnp.float32)
+    with rules.use_mesh(mesh):
+        y_man4, _ = jax.jit(lambda p, x: moe_mod.moe_apply(
+            p4, e4, "swiglu", x, jnp.float32))(p4, x)
+    res["equal_model_only"] = bool(np.allclose(np.asarray(y_ref4),
+                                               np.asarray(y_man4),
+                                               atol=1e-4))
+    res["axes_model_only"] = list(expert_axes_for(mesh, 4))
+
+    # grads through the manual path
+    def loss(p, x):
+        with rules.use_mesh(mesh):
+            y, aux = moe_mod.moe_apply(p, e, "swiglu", x, jnp.float32)
+        return jnp.sum(y ** 2) + 0.01 * aux["load_balance_loss"]
+    g = jax.grad(loss)(p, x)
+    gn = sum(float(jnp.sum(l.astype(jnp.float32) ** 2))
+             for l in jax.tree.leaves(g))
+    res["grad_ok"] = bool(np.isfinite(gn) and gn > 0)
+
+    # sharding-rule consistency: the param rule engine must produce the
+    # same expert axes the dispatch uses (rules match the model's
+    # ".../moe/wi_gate" paths)
+    spec = rules.param_specs(mesh, jax.eval_shape(lambda: {"moe": p}))
+    wi = spec["moe"]["wi_gate"].spec
+    res["rule_spec0"] = str(wi[0])
+    print(json.dumps(res))
+""")
+
+
+@pytest.mark.slow
+def test_moe_manual_subprocess():
+    env = dict(os.environ, PYTHONPATH=os.path.join(ROOT, "src"))
+    env.pop("XLA_FLAGS", None)
+    out = subprocess.run([sys.executable, "-c", CODE], env=env,
+                         capture_output=True, text=True, timeout=900)
+    assert out.returncode == 0, out.stderr[-3000:]
+    res = json.loads(out.stdout.strip().splitlines()[-1])
+    assert res["equal_full"], res
+    assert res["equal_model_only"], res
+    assert res["grad_ok"]
+    assert res["axes_full"] == ["model", "data"]
+    assert res["axes_model_only"] == ["model"]
+    assert "model" in res["rule_spec0"]

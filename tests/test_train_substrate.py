@@ -1,0 +1,153 @@
+"""Optimizers, train loop, grad accumulation, data pipeline, compression."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro import configs
+from repro.configs.base import TrainConfig
+from repro.data.pipeline import TokenPipeline
+from repro.models.model import build_model
+from repro.train import grad_compress as gc
+from repro.train import optimizer as opt_mod
+from repro.train.loop import make_train_step
+
+
+def test_adamw_matches_reference_math():
+    tcfg = TrainConfig(optimizer="adamw", lr=0.1, weight_decay=0.0,
+                       beta1=0.9, beta2=0.99, eps=1e-8)
+    params = {"w": jnp.asarray([1.0, -2.0])}
+    grads = {"w": jnp.asarray([0.5, 0.5])}
+    state = opt_mod.init_opt_state(tcfg, params)
+    new_p, state = opt_mod.apply_updates(tcfg, params, grads, state,
+                                         jnp.asarray(0))
+    m = 0.1 * 0.5
+    v = 0.01 * 0.25
+    upd = (m / (1 - 0.9)) / (np.sqrt(v / (1 - 0.99)) + 1e-8)
+    np.testing.assert_allclose(np.asarray(new_p["w"]),
+                               np.asarray([1.0, -2.0]) - 0.1 * upd,
+                               rtol=1e-5)
+
+
+@pytest.mark.parametrize("optname", ["adamw", "adafactor", "sgd"])
+def test_optimizers_reduce_quadratic(optname):
+    tcfg = TrainConfig(optimizer=optname, lr=0.05, weight_decay=0.0)
+    params = {"w": jnp.asarray(np.random.default_rng(0).normal(
+        size=(8, 4)).astype(np.float32))}
+    state = opt_mod.init_opt_state(tcfg, params)
+
+    def loss(p):
+        return jnp.sum(p["w"] ** 2)
+
+    l0 = float(loss(params))
+    for i in range(30):
+        g = jax.grad(loss)(params)
+        params, state = opt_mod.apply_updates(tcfg, params, g, state,
+                                              jnp.asarray(i))
+    assert float(loss(params)) < l0 * 0.5
+
+
+def test_grad_accumulation_equals_full_batch():
+    """mean-of-microbatch grads == full-batch grads -> same update."""
+    cfg = configs.get_smoke("internlm2-1.8b")
+    m = build_model(cfg)
+    params = m.init(jax.random.key(0))
+    tcfg = TrainConfig(optimizer="sgd", lr=0.1)
+    batch = {"tokens": jax.random.randint(jax.random.key(1), (4, 17), 1,
+                                          cfg.vocab_size)}
+    opt1 = opt_mod.init_opt_state(tcfg, params)
+    step1 = make_train_step(m, tcfg, microbatches=1)
+    step4 = make_train_step(m, tcfg, microbatches=4)
+    p1, _, met1 = jax.jit(step1)(params, opt1, batch, jnp.asarray(0))
+    opt2 = opt_mod.init_opt_state(tcfg, params)
+    p4, _, met4 = jax.jit(step4)(params, opt2, batch, jnp.asarray(0))
+    for a, b in zip(jax.tree.leaves(p1), jax.tree.leaves(p4)):
+        np.testing.assert_allclose(np.asarray(a, np.float32),
+                                   np.asarray(b, np.float32),
+                                   atol=2e-4, rtol=2e-3)
+
+
+def test_loss_decreases_over_steps():
+    cfg = configs.get_smoke("qwen2.5-3b")
+    m = build_model(cfg)
+    params = m.init(jax.random.key(0))
+    tcfg = TrainConfig(optimizer="adamw", lr=3e-3, weight_decay=0.0)
+    opt = opt_mod.init_opt_state(tcfg, params)
+    pipe = TokenPipeline(vocab_size=cfg.vocab_size, seq_len=16,
+                         global_batch=4, seed=1)
+    step = jax.jit(make_train_step(m, tcfg, microbatches=1),
+                   donate_argnums=(0, 1))
+    losses = []
+    for i in range(25):
+        batch = {"tokens": jnp.asarray(pipe.batch(0)["tokens"])}  # same batch
+        params, opt, met = step(params, opt, batch, jnp.asarray(i))
+        losses.append(float(met["loss"]))
+    assert losses[-1] < losses[0] - 0.5, losses[::6]
+
+
+def test_clip_by_norm():
+    g = {"a": jnp.full((4,), 10.0)}
+    clipped, norm = opt_mod.clip_by_norm(g, 1.0)
+    assert abs(float(norm) - 20.0) < 1e-4
+    assert abs(float(jnp.linalg.norm(clipped["a"])) - 1.0) < 1e-4
+
+
+# ---------------------------------------------------------------- pipeline
+
+def test_pipeline_deterministic_and_resumable():
+    pipe = TokenPipeline(vocab_size=100, seq_len=8, global_batch=4, seed=3)
+    b1 = pipe.batch(7)["tokens"]
+    b2 = pipe.batch(7)["tokens"]
+    np.testing.assert_array_equal(b1, b2)
+    assert not np.array_equal(b1, pipe.batch(8)["tokens"])
+
+
+def test_pipeline_worker_slices_partition_batch():
+    pipe = TokenPipeline(vocab_size=100, seq_len=8, global_batch=8, seed=0)
+    full = pipe.batch(3)["tokens"]
+    parts = [pipe.worker_slice(3, w, 4)["tokens"] for w in range(4)]
+    np.testing.assert_array_equal(np.concatenate(parts), full)
+
+
+def test_pipeline_tokens_in_vocab():
+    pipe = TokenPipeline(vocab_size=50, seq_len=16, global_batch=2)
+    t = pipe.batch(0)["tokens"]
+    assert t.min() >= 0 and t.max() < 50
+
+
+# ------------------------------------------------------------- compression
+
+def test_quantize_roundtrip_bound():
+    rng = np.random.default_rng(0)
+    x = jnp.asarray(rng.normal(0, 3, (64, 32)).astype(np.float32))
+    q, s = gc.quantize(x)
+    err = np.abs(np.asarray(gc.dequantize(q, s)) - np.asarray(x))
+    assert err.max() <= float(s) * 0.5 + 1e-6
+
+
+@given(st.integers(0, 2**31 - 1))
+@settings(max_examples=10)
+def test_error_feedback_bounded(seed):
+    """EF residual stays bounded over repeated rounds on a fixed grad."""
+    rng = np.random.default_rng(seed)
+    g = jnp.asarray(rng.normal(0, 1, (32,)).astype(np.float32))
+    err = jnp.zeros_like(g)
+    for _ in range(20):
+        _, scale, err = gc.ef_compress_step(g, err)
+    assert float(jnp.max(jnp.abs(err))) <= float(scale) * 1.0 + 1e-5
+
+
+def test_ef_mean_preserved_over_time():
+    """Averaged over rounds, sent values converge to the true gradient
+    (the EF property that preserves SGD convergence)."""
+    g = jnp.asarray([0.3, -0.7, 1.1, 0.001])
+    err = jnp.zeros_like(g)
+    sent_sum = jnp.zeros_like(g)
+    n = 50
+    for _ in range(n):
+        q, s, err = gc.ef_compress_step(g, err)
+        sent_sum = sent_sum + gc.dequantize(q, s)
+    np.testing.assert_allclose(np.asarray(sent_sum / n), np.asarray(g),
+                               atol=5e-3)

@@ -13,10 +13,12 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core import builder, engine, models, snn
+from repro.core import backends, builder, models, snn
+from repro.core.layout import blocked_layout
 
 
 def bench_sweep_sizes(out):
+    """Sweep-only step time per execution backend (registry dispatch)."""
     for scale, tag in ((0.02, "small"), (0.08, "medium")):
         spec, _ = models.hpc_benchmark(scale=scale, stdp=False)
         g = builder.build_shards(spec, builder.decompose(spec, 1))[0] \
@@ -24,20 +26,40 @@ def bench_sweep_sizes(out):
         ring = jnp.zeros((spec.max_delay, g.n_mirror), jnp.float32)
         w = g.weight_init
 
-        @jax.jit
-        def sweep(ring, t):
-            return engine.synaptic_sweep(g, w, ring, t, mode="flat")
+        for name in ("flat", "bucketed", "pallas"):
+            backend = backends.get_backend(name)
+            layout = backend.prepare(g)
 
-        r = sweep(ring, jnp.asarray(5, jnp.int32))
-        jax.block_until_ready(r)
-        n = 200
+            @jax.jit
+            def sweep(ring, t):
+                return backend.sweep(layout, w, ring, t)
+
+            r = sweep(ring, jnp.asarray(5, jnp.int32))
+            jax.block_until_ready(r)
+            n = 200
+            t0 = time.perf_counter()
+            for i in range(n):
+                r = sweep(ring, jnp.asarray(i % spec.max_delay, jnp.int32))
+            jax.block_until_ready(r)
+            us = (time.perf_counter() - t0) / n * 1e6
+            out(f"kernel_proxy/synaptic_sweep/{name}/{tag}", us,
+                f"edges={g.n_edges};edges_per_us={g.n_edges/us:.0f}")
+
+
+def bench_blocked_layout(out):
+    """Build-time flat -> post-block ELL conversion (vectorized scatter)."""
+    for scale, tag in ((0.05, "small"), (0.2, "medium")):
+        spec, _ = models.hpc_benchmark(scale=scale, stdp=False)
+        g = builder.build_shards(spec, builder.decompose(spec, 1),
+                                 with_blocked=False)[0]
+        blocked_layout(g)  # warm numpy caches
+        n = 20
         t0 = time.perf_counter()
-        for i in range(n):
-            r = sweep(ring, jnp.asarray(i % spec.max_delay, jnp.int32))
-        jax.block_until_ready(r)
+        for _ in range(n):
+            bg = blocked_layout(g)
         us = (time.perf_counter() - t0) / n * 1e6
-        out(f"kernel_proxy/synaptic_sweep/{tag}", us,
-            f"edges={g.n_edges};edges_per_us={g.n_edges/us:.0f}")
+        out(f"kernel_proxy/blocked_layout/{tag}", us,
+            f"edges={g.n_edges};nb={bg.nb};eb={bg.eb}")
 
 
 def bench_lif_chain(out):
@@ -66,3 +88,4 @@ def bench_lif_chain(out):
 def main(out):
     bench_sweep_sizes(out)
     bench_lif_chain(out)
+    bench_blocked_layout(out)

@@ -5,20 +5,32 @@ benchmark across normalized problem sizes (memory per node, wall time).
 On this CPU container we reproduce the *shape* of that comparison:
 
 * problem-size scaling of step wall-time and per-shard memory for the
-  CORTEX engine (flat + bucketed sweeps);
+  CORTEX engine across every execution backend (``--backend
+  {flat,bucketed,pallas}`` restricts the axis; pallas runs in interpret
+  mode off-TPU, so its CPU numbers measure the emulated kernel, not the
+  TPU lowering);
 * Area-Processes Mapping vs Random Equivalent Mapping: remote-mirror
   memory and per-step spike-exchange bytes (the Fig. 8/9/10 quantities,
   computed exactly from the built shards - these are the terms that
   dominate at Fugaku scale).
 """
 
+import argparse
+import os
+import sys
 import time
 
 import jax
 import numpy as np
 
+# allow `python benchmarks/bench_snn.py --backend ...` without PYTHONPATH
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
 from repro.core import builder, engine, models, snn
+from repro.core.backends import available_backends
 from repro.core.distributed import mesh_decompose, prepare_stacked
+
+DEFAULT_BACKENDS = available_backends()
 
 
 def _bytes_of_shard(g) -> int:
@@ -29,13 +41,13 @@ def _bytes_of_shard(g) -> int:
     return tot
 
 
-def bench_step_scaling(out):
+def bench_step_scaling(out, backends=DEFAULT_BACKENDS):
     for scale in (0.02, 0.05, 0.1):
         spec, stdp = models.hpc_benchmark(scale=scale, stdp=True)
         dec = builder.decompose(spec, 1)
         g = builder.build_shards(spec, dec)[0].device_arrays()
         table = snn.make_param_table(list(spec.groups), dt=0.1)
-        for sweep in ("flat", "bucketed"):
+        for sweep in backends:
             cfg = engine.EngineConfig(dt=0.1, stdp=stdp, sweep=sweep)
             st = engine.init_state(g, list(spec.groups), jax.random.key(0))
             step = engine.make_step_fn(g, table, cfg)
@@ -69,6 +81,20 @@ def bench_mapping_comparison(out):
                 f"remote_mirrors={remote};comm_bytes_step={comm}")
 
 
-def main(out):
-    bench_step_scaling(out)
+def main(out, backend: str | None = None):
+    bench_step_scaling(out, (backend,) if backend else DEFAULT_BACKENDS)
     bench_mapping_comparison(out)
+
+
+if __name__ == "__main__":
+    ap = argparse.ArgumentParser(
+        description="SNN engine scaling benchmark with a backend axis")
+    ap.add_argument("--backend", default=None,
+                    choices=sorted(available_backends()),
+                    help="restrict the step benchmark to one execution "
+                         "backend (default: flat, bucketed and pallas)")
+    args = ap.parse_args()
+    print("name,us_per_call,derived")
+    main(lambda name, us, derived="": print(f"{name},{us:.2f},{derived}",
+                                            flush=True),
+         args.backend)

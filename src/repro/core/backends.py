@@ -1,0 +1,393 @@
+"""Pluggable execution backends for the sweep/update hot path (DESIGN.md §9).
+
+The paper's indegree sub-graph ownership (eq. 14) makes every stage of the
+per-dt hot path race-free *structurally*: each partition writes only its own
+post rows.  That property is substrate-independent, so the three stages -
+
+    sweep          edges -> per-neuron (input_ex, input_in) + per-edge arrivals
+    neuron_update  fused LIF propagate / threshold / reset / refractory
+    stdp_update    pl-STDP weight update on owned edges
+
+- are expressed here once as a :class:`SweepBackend` interface with
+interchangeable implementations, the same engine-extraction move CoreNEURON
+made for NEURON (memory layout + compute engine swapped together under one
+network description):
+
+* ``flat``     - one fused gather + two ``segment_sum`` reductions (the
+                 TPU/XLA-idiomatic form; DESIGN.md §2);
+* ``bucketed`` - the paper's literal low-to-high delay sweep (a Fugaku
+                 thread's schedule), kept as the structural cross-check;
+* ``pallas``   - the Pallas TPU kernels (``synaptic_gather``, ``lif_step``,
+                 ``stdp_update``) on the post-block ELL layout of
+                 :mod:`repro.core.layout`; interpret mode off-TPU, compiled
+                 on TPU.
+
+Both the single-shard engine (:mod:`repro.core.engine`) and the distributed
+engine (:mod:`repro.core.distributed`) dispatch through this registry; the
+distributed step additionally uses :meth:`SweepBackend.sweep_overlap` to
+realize the paper's §III.C communication/computation overlap schedule.
+
+Layout contract: a backend consumes an :class:`EdgeLayout` built either from
+a ``ShardGraph`` (host side, numpy/jnp constants) or from shard_map-traced
+per-shard arrays (device side).  Static geometry (counts, block shapes)
+must be Python ints in both cases; array fields may be traced.  New
+backends (sparse spike exchange, GPU Triton, multi-host) register with
+:func:`register_backend` and become selectable via ``EngineConfig.sweep``.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import snn
+from repro.core import stdp as stdp_mod
+from repro.core.layout import BlockedGraph, blocked_layout
+from repro.kernels.lif_step import lif_step_kernel
+from repro.kernels.stdp_update import stdp_update_kernel
+from repro.kernels.synaptic_gather import synaptic_gather
+
+__all__ = ["EdgeLayout", "SweepBackend", "FlatBackend", "BucketedBackend",
+           "PallasBackend", "register_backend", "get_backend",
+           "available_backends"]
+
+
+# --------------------------------------------------------------------------
+# layout handed to backends
+# --------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class EdgeLayout:
+    """Per-shard edge arrays + static geometry, as one backend-facing view.
+
+    ``bucket_ptr`` (static numpy delay ranges) only exists host-side; under
+    shard_map it is None and the bucketed backend falls back to delay
+    masking.  ``blocked`` carries the ELL layout for the kernel path.
+    """
+
+    n_local: int
+    n_mirror: int
+    max_delay: int
+    pre_idx: Any       # (E,) int32
+    post_idx: Any      # (E,) int32
+    delay: Any         # (E,) int32; 0 marks padding
+    channel: Any       # (E,) int32
+    plastic: Any       # (E,) bool
+    bucket_ptr: np.ndarray | None = None
+    blocked: BlockedGraph | None = None
+
+
+def layout_of(graph) -> EdgeLayout:
+    """EdgeLayout view of a :class:`repro.core.engine.ShardGraph`."""
+    return EdgeLayout(
+        n_local=graph.n_local, n_mirror=graph.n_mirror,
+        max_delay=graph.max_delay,
+        pre_idx=graph.pre_idx, post_idx=graph.post_idx, delay=graph.delay,
+        channel=graph.channel, plastic=graph.plastic,
+        bucket_ptr=graph.bucket_ptr,
+        blocked=getattr(graph, "blocked", None),
+    )
+
+
+def _accumulate(layout: EdgeLayout, weights, arrived):
+    """Weighted per-edge arrivals -> (input_ex, input_in) via segment_sum.
+
+    Race-free by construction: ``post_idx`` is owner-sorted, so this is the
+    vector analogue of "each thread owns its rows" (eq. 14).
+    """
+    contrib = weights * arrived
+    ex = jnp.where(layout.channel == 0, contrib, 0.0)
+    inh = jnp.where(layout.channel == 1, contrib, 0.0)
+    return (jax.ops.segment_sum(ex, layout.post_idx,
+                                num_segments=layout.n_local),
+            jax.ops.segment_sum(inh, layout.post_idx,
+                                num_segments=layout.n_local))
+
+
+def _flat_arrivals(layout: EdgeLayout, ring, t):
+    """``arrived[e] = ring[(t - delay[e]) mod D, pre_idx[e]]``, padding
+    masked.  One fused gather over the flattened ring."""
+    row = jnp.mod(t - layout.delay, layout.max_delay)
+    flat = ring.reshape(-1)
+    arrived = jnp.take(flat, row * layout.n_mirror + layout.pre_idx)
+    return arrived * (layout.delay > 0)
+
+
+# --------------------------------------------------------------------------
+# backend interface + implementations
+# --------------------------------------------------------------------------
+
+class SweepBackend:
+    """One execution substrate for the per-dt hot path.
+
+    Subclasses override ``sweep`` (mandatory) and optionally
+    ``neuron_update`` / ``stdp_update`` / ``sweep_overlap``; the base class
+    provides the XLA formulations so a minimal backend only supplies its
+    sweep.
+    """
+
+    name: str = "?"
+    #: True if sweep() consumes EdgeLayout.blocked - the distributed engine
+    #: uses this to decide whether to ship the stacked ELL consts
+    needs_blocked: bool = False
+
+    def prepare(self, graph) -> EdgeLayout:
+        """Build-time: ShardGraph -> the layout this backend consumes."""
+        return layout_of(graph)
+
+    # -- synaptic sweep ---------------------------------------------------
+    def sweep(self, layout: EdgeLayout, weights, ring, t):
+        """Accumulate (input_ex, input_in, arrived[E]) for step ``t``.
+
+        ``arrived[e]`` is 1.0 iff edge ``e``'s pre spike arrives exactly
+        now - consumed by both the current accumulation and the STDP
+        depression rule.
+        """
+        raise NotImplementedError
+
+    def sweep_overlap(self, layout: EdgeLayout, weights, ring, t,
+                      fresh_bits):
+        """Sweep with last step's spikes ``fresh_bits`` not yet in the ring
+        (paper §III.C): returns (input_ex, input_in, arrived, ring').
+
+        Default schedule: write the fresh bits into slot ``t-1`` and run one
+        full sweep - correct but serialized on the exchange.  Backends that
+        can split the work (delay >= 2 from the old ring, delay == 1 from
+        the fresh bits) override this so the exchange overlaps the
+        independent part.
+        """
+        ring = jax.lax.dynamic_update_index_in_dim(
+            ring, fresh_bits, jnp.mod(t - 1, layout.max_delay), axis=0)
+        ex, inh, arrived = self.sweep(layout, weights, ring, t)
+        return ex, inh, arrived, ring
+
+    # -- neuron dynamics --------------------------------------------------
+    def neuron_update(self, layout: EdgeLayout, neurons, table, input_ex,
+                      input_in, *,
+                      synapse_model: str = snn.SynapseModel.CURRENT_EXP):
+        """Fused LIF propagate/threshold/reset/refractory for one dt."""
+        return snn.lif_step(neurons, table, input_ex, input_in,
+                            synapse_model=synapse_model)
+
+    # -- plasticity -------------------------------------------------------
+    def stdp_update(self, layout: EdgeLayout, weights, arrived, post_spike,
+                    traces, params: stdp_mod.STDPParams):
+        """pl-STDP weight update on owned edges; non-plastic edges pass
+        through unchanged."""
+        new_w = stdp_mod.stdp_edge_update(
+            weights, layout.pre_idx, layout.post_idx, arrived, post_spike,
+            traces, params)
+        return jnp.where(layout.plastic, new_w, weights)
+
+
+class FlatBackend(SweepBackend):
+    """Fused-gather + segment_sum sweep - the XLA/TPU-idiomatic form: one
+    large vectorized gather beats a per-bucket loop on a systolic/vector
+    machine, and sparsity is exploited through zero values rather than
+    skipped work (DESIGN.md §2)."""
+
+    name = "flat"
+
+    def sweep(self, layout, weights, ring, t):
+        arrived = _flat_arrivals(layout, ring, t)
+        ex, inh = _accumulate(layout, weights, arrived)
+        return ex, inh, arrived
+
+    def sweep_overlap(self, layout, weights, ring, t, fresh_bits):
+        # Split schedule: delays >= 2 read only OLD ring slots, so their
+        # gather+reduce is independent of the exchange producing
+        # ``fresh_bits`` and XLA's async collectives overlap the two; only
+        # the delay-1 part consumes the collective's result.
+        D = layout.max_delay
+        dtype = ring.dtype
+        arrived_old = _flat_arrivals(layout, ring, t)
+        mask_old = (layout.delay >= 2).astype(dtype)
+        ex_o, in_o = _accumulate(layout, weights, arrived_old * mask_old)
+        arrived_new = jnp.take(fresh_bits, layout.pre_idx)
+        mask_new = (layout.delay == 1).astype(dtype)
+        ex_n, in_n = _accumulate(layout, weights, arrived_new * mask_new)
+        arrived = arrived_old * mask_old + arrived_new * mask_new
+        ring = jax.lax.dynamic_update_index_in_dim(
+            ring, fresh_bits, jnp.mod(t - 1, D), axis=0)
+        return ex_o + ex_n, in_o + in_n, arrived, ring
+
+
+class BucketedBackend(SweepBackend):
+    """The paper's literal low-to-high delay sweep (what a Fugaku thread
+    does), kept as the structural twin of the Pallas kernel and for
+    cross-checks.  Host-side it walks static ``bucket_ptr`` slices; under
+    shard_map (no per-shard statics) it falls back to delay masking."""
+
+    name = "bucketed"
+
+    def sweep(self, layout, weights, ring, t):
+        D = layout.max_delay
+        n_local = layout.n_local
+        dtype = weights.dtype
+        input_ex = jnp.zeros((n_local,), dtype)
+        input_in = jnp.zeros((n_local,), dtype)
+
+        if layout.bucket_ptr is not None:
+            arrived = jnp.zeros(layout.delay.shape, dtype)
+            bp = np.asarray(layout.bucket_ptr)
+            for d in range(1, D + 1):
+                lo, hi = int(bp[d]), int(bp[d + 1])
+                if lo == hi:
+                    continue
+                bits = ring[jnp.mod(t - d, D)]
+                pre = jax.lax.slice_in_dim(layout.pre_idx, lo, hi)
+                post = jax.lax.slice_in_dim(layout.post_idx, lo, hi)
+                ch = jax.lax.slice_in_dim(layout.channel, lo, hi)
+                w = jax.lax.slice_in_dim(weights, lo, hi)
+                a = jnp.take(bits, pre).astype(dtype)
+                contrib = w * a
+                input_ex = input_ex + jax.ops.segment_sum(
+                    jnp.where(ch == 0, contrib, 0.0), post,
+                    num_segments=n_local)
+                input_in = input_in + jax.ops.segment_sum(
+                    jnp.where(ch == 1, contrib, 0.0), post,
+                    num_segments=n_local)
+                arrived = jax.lax.dynamic_update_slice(arrived, a, (lo,))
+            return input_ex, input_in, arrived
+
+        # traced-layout fallback: one masked full pass per delay value
+        arrived = jnp.zeros(layout.delay.shape, ring.dtype)
+        for d in range(1, D + 1):
+            bits = ring[jnp.mod(t - d, D)]
+            a = (jnp.take(bits, layout.pre_idx)
+                 * (layout.delay == d).astype(ring.dtype))
+            ex_d, in_d = _accumulate(layout, weights, a)
+            input_ex, input_in = input_ex + ex_d, input_in + in_d
+            arrived = arrived + a
+        return input_ex, input_in, arrived
+
+
+class PallasBackend(SweepBackend):
+    """Kernel path: post-block ELL sweep on the MXU, fused LIF chain, and
+    pl-STDP edge update as Pallas TPU kernels (interpret mode off-TPU).
+
+    Run-time weights stay FLAT in engine state; each step gathers them into
+    blocked slot order via ``BlockedGraph.edge_perm`` so plasticity and
+    checkpointing are layout-agnostic.  Per-edge arrivals for STDP are
+    produced by the same fused ring gather as the flat backend (the kernel
+    only emits the per-neuron reductions).
+    """
+
+    name = "pallas"
+    needs_blocked = True
+    #: neuron block for the LIF kernel (lane-aligned)
+    lif_nb = 128
+
+    def __init__(self, interpret: bool | None = None):
+        # None -> auto: compiled on TPU, interpreter everywhere else
+        self.interpret = interpret
+
+    def _interp(self) -> bool:
+        if self.interpret is None:
+            return jax.default_backend() != "tpu"
+        return self.interpret
+
+    def prepare(self, graph) -> EdgeLayout:
+        lay = layout_of(graph)
+        if lay.blocked is None:
+            lay = dataclasses.replace(lay, blocked=blocked_layout(graph))
+        return lay
+
+    def sweep(self, layout, weights, ring, t):
+        bg = layout.blocked
+        if bg is None:
+            raise ValueError("pallas backend needs a blocked layout; build "
+                             "graphs via builder.build_shards or call "
+                             "PallasBackend.prepare")
+        w_blk = jnp.take(weights.astype(jnp.float32),
+                         jnp.asarray(bg.edge_perm))
+        i_ex, i_in = synaptic_gather(
+            jnp.asarray(bg.pre_idx), jnp.asarray(bg.post_rel), w_blk,
+            jnp.asarray(bg.delay), jnp.asarray(bg.channel),
+            ring.astype(jnp.float32), jnp.asarray(t, jnp.int32),
+            max_delay=layout.max_delay, pb=bg.pb, interpret=self._interp())
+        dtype = ring.dtype
+        i_ex = i_ex[:layout.n_local].astype(dtype)
+        i_in = i_in[:layout.n_local].astype(dtype)
+        arrived = _flat_arrivals(layout, ring, t)
+        return i_ex, i_in, arrived
+
+    def neuron_update(self, layout, neurons, table, input_ex, input_in, *,
+                      synapse_model: str = snn.SynapseModel.CURRENT_EXP):
+        if synapse_model not in (snn.SynapseModel.CURRENT_EXP,
+                                 snn.SynapseModel.COND_EXP):
+            raise ValueError(f"unknown synapse model {synapse_model!r}")
+        cond = synapse_model == snn.SynapseModel.COND_EXP
+        n = neurons.v_m.shape[0]
+        nb = self.lif_nb
+        pad = (-n) % nb
+        p = lambda a: jnp.pad(a, (0, pad)) if pad else a
+        f32 = lambda a: p(a).astype(jnp.float32)
+        v, se, si, rc, sp = lif_step_kernel(
+            f32(neurons.v_m), f32(neurons.syn_ex), f32(neurons.syn_in),
+            p(neurons.ref_count), p(neurons.group_id),
+            f32(input_ex), f32(input_in), table.astype(jnp.float32),
+            cond=cond, nb=nb, interpret=self._interp())
+        dtype = neurons.v_m.dtype
+        cut = lambda a: a[:n] if pad else a
+        return snn.NeuronState(
+            v_m=cut(v).astype(dtype), syn_ex=cut(se).astype(dtype),
+            syn_in=cut(si).astype(dtype), ref_count=cut(rc),
+            spike=cut(sp), group_id=neurons.group_id)
+
+    def stdp_update(self, layout, weights, arrived, post_spike, traces,
+                    params: stdp_mod.STDPParams):
+        e = weights.shape[0]
+        from repro.kernels.stdp_update import DEFAULT_EB
+        eb = DEFAULT_EB if e >= DEFAULT_EB else ((e + 127) // 128) * 128
+        pad = (-e) % eb
+        p = lambda a: jnp.pad(a, (0, pad)) if pad else a
+        new_w = stdp_update_kernel(
+            p(weights.astype(jnp.float32)), p(layout.pre_idx),
+            p(layout.post_idx), p(layout.plastic),
+            p(arrived.astype(jnp.float32)),
+            post_spike.astype(jnp.float32),
+            traces.k_pre.astype(jnp.float32),
+            traces.k_post.astype(jnp.float32),
+            params=(params.lam, params.alpha, params.mu, params.w0,
+                    params.w_min, params.w_max),
+            eb=eb, interpret=self._interp())
+        new_w = new_w[:e] if pad else new_w
+        return new_w.astype(weights.dtype)
+
+
+# --------------------------------------------------------------------------
+# registry
+# --------------------------------------------------------------------------
+
+_REGISTRY: dict[str, SweepBackend] = {}
+
+
+def register_backend(name: str, backend: SweepBackend,
+                     *, overwrite: bool = False) -> None:
+    """Register an execution backend under ``EngineConfig.sweep`` name."""
+    if name in _REGISTRY and not overwrite:
+        raise ValueError(f"backend {name!r} already registered")
+    _REGISTRY[name] = backend
+
+
+def get_backend(name: str) -> SweepBackend:
+    try:
+        return _REGISTRY[name]
+    except KeyError:
+        raise ValueError(
+            f"unknown sweep backend {name!r}; available: "
+            f"{sorted(_REGISTRY)}") from None
+
+
+def available_backends() -> tuple[str, ...]:
+    return tuple(sorted(_REGISTRY))
+
+
+register_backend("flat", FlatBackend())
+register_backend("bucketed", BucketedBackend())
+register_backend("pallas", PallasBackend())

@@ -27,6 +27,7 @@ from repro.core.decomposition import (AreaSpec, Decomposition,
                                       area_process_mapping,
                                       random_equivalent_mapping)
 from repro.core.engine import ShardGraph
+from repro.core.layout import blocked_eb, blocked_layout
 from repro.core.snn import LIFParams
 
 __all__ = ["Population", "Projection", "NetworkSpec", "build_shards",
@@ -177,13 +178,20 @@ def _generate_projection_edges(spec: NetworkSpec, pi: int,
 
 def build_shards(spec: NetworkSpec, dec: Decomposition, *,
                  pad_to_multiple: int = 8,
-                 uniform_pad: bool = True) -> list[ShardGraph]:
+                 uniform_pad: bool = True,
+                 with_blocked: bool = True) -> list[ShardGraph]:
     """Generate every projection's edges, route them to owner shards, and
     emit one delay-sorted padded ShardGraph per device.
 
     With ``uniform_pad`` all shards are padded to identical (E_pad, n_mirror,
     n_local) so they can be stacked into leading-device-axis arrays for
     ``shard_map`` (the distributed engine requires this).
+
+    With ``with_blocked`` each shard also carries the post-block ELL twin of
+    its flat edge arrays (``ShardGraph.blocked``) so the pallas execution
+    backend is selectable without a separate conversion pass.  Shards built
+    for stacking share one blocked shape: a first pass finds the widest
+    per-block edge count, the second pads every shard to it.
     """
     n_dev = dec.n_devices
     off = spec.pop_offsets()
@@ -304,4 +312,12 @@ def build_shards(spec: NetworkSpec, dec: Decomposition, *,
             ext_rate=pad(ext_rate[r["owned"]], n_local_pad),
             ext_weight=pad(ext_weight[r["owned"]], n_local_pad),
         ))
+
+    if with_blocked:
+        # one (NB, EB) shape across shards so the distributed engine can
+        # stack the blocked arrays on a leading device axis; the widest
+        # shard is found with a counts-only pass so each shard converts once
+        eb_min = max(blocked_eb(g) for g in shards) if uniform_pad else 0
+        shards = [dataclasses.replace(g, blocked=blocked_layout(
+            g, eb_min=eb_min)) for g in shards]
     return shards

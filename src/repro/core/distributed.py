@@ -25,6 +25,14 @@ delays >= 2 (which only needs older ring slots) proceeds independently; the
 delay-1 sweep and the ring write consume the collective's result.  On TPU,
 XLA's async collectives overlap the exchange with that independent compute -
 the dataflow twin of CORTEX's dedicated communication thread.
+
+The per-shard hot path (sweep, neuron update, STDP) is NOT reimplemented
+here: it dispatches through the execution-backend registry of
+:mod:`repro.core.backends` (``cfg.engine.sweep`` selects flat / bucketed /
+pallas), so the distributed step and the single-shard engine share one code
+path; only the exchange and the overlap schedule are distributed-specific.
+For the pallas backend the stacked ``blk_*`` consts carry each shard's
+post-block ELL arrays (DESIGN.md §2/§9).
 """
 
 from __future__ import annotations
@@ -37,11 +45,14 @@ import jax.numpy as jnp
 import numpy as np
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
+from repro.core import backends as backends_mod
 from repro.core import snn, stdp as stdp_mod
 from repro.core.builder import NetworkSpec, build_shards
 from repro.core.decomposition import (Decomposition, apportion_devices,
                                       multisection_divide)
 from repro.core.engine import EngineConfig, ShardGraph
+from repro.core.layout import BlockedGraph
+from repro.utils.jax_compat import shard_map
 
 __all__ = ["mesh_decompose", "StackedNetwork", "prepare_stacked",
            "DistributedConfig", "make_distributed_step", "init_stacked_state"]
@@ -167,14 +178,23 @@ class StackedNetwork:
     mirror_src_flat: Any       # (S, n_mirror) int32 (global mode)
     comm_bytes_global: int     # per-step traffic accounting (per shard, fp32)
     comm_bytes_area: int
+    # static blocked-layout geometry (nb, eb, pb) when graph carries the
+    # stacked ELL arrays blk_* for the pallas backend; None otherwise
+    blocked_meta: tuple[int, int, int] | None = None
 
 
 def prepare_stacked(spec: NetworkSpec, dec: Decomposition,
                     n_rows: int, row_width: int, *,
-                    pad_to_multiple: int = 8) -> StackedNetwork:
-    """Build uniform shards and the area/remote exchange index tables."""
+                    pad_to_multiple: int = 8,
+                    with_blocked: bool = True) -> StackedNetwork:
+    """Build uniform shards and the area/remote exchange index tables.
+
+    ``with_blocked=False`` skips building/stacking the post-block ELL
+    arrays (saves build time + host memory) for runs that will never select
+    the pallas backend.
+    """
     shards = build_shards(spec, dec, pad_to_multiple=pad_to_multiple,
-                          uniform_pad=True)
+                          uniform_pad=True, with_blocked=with_blocked)
     S = len(shards)
     assert S == n_rows * row_width
     n_local = shards[0].n_local
@@ -242,12 +262,30 @@ def prepare_stacked(spec: NetworkSpec, dec: Decomposition,
         mirror_src_idx=stack("mirror_src_idx").astype(np.int32),
     )
 
+    # stacked post-block ELL arrays (uniform shape thanks to build_shards'
+    # two-pass eb) so the pallas backend is reachable under shard_map
+    blocked_meta = None
+    if all(g.blocked is not None for g in shards):
+        bgs = [g.blocked for g in shards]
+        blocked_meta = (bgs[0].nb, bgs[0].eb, bgs[0].pb)
+        assert all((bg.nb, bg.eb, bg.pb) == blocked_meta for bg in bgs)
+        bstack = lambda f: np.stack([np.asarray(getattr(bg, f))
+                                     for bg in bgs])
+        graph.update(
+            blk_pre_idx=bstack("pre_idx"),
+            blk_post_rel=bstack("post_rel"),
+            blk_delay=bstack("delay"),
+            blk_channel=bstack("channel"),
+            blk_edge_perm=bstack("edge_perm"),
+        )
+
     # per-shard per-step spike traffic (fp32 bitmap words, DESIGN.md §2)
     comm_global = S * n_local * 4
     comm_area = row_width * n_local * 4 + S * b_pad * 4
     return StackedNetwork(
         n_shards=S, row_width=row_width, n_local=n_local, n_mirror=n_mirror,
         n_edges=n_edges, b_pad=b_pad, max_delay=spec.max_delay, graph=graph,
+        blocked_meta=blocked_meta,
         boundary_slots=boundary_slots, mirror_is_intra=mirror_is_intra,
         mirror_row_gather=mirror_row_gather,
         mirror_remote_gather=mirror_remote_gather,
@@ -380,13 +418,27 @@ def _exchange(bits, g, cfg: DistributedConfig):
     raise ValueError(f"unknown comm mode {cfg.comm_mode!r}")
 
 
-def _sweep_masked(g, weights, values_per_edge, delay_mask, n_local, dtype):
-    """segment-sum of weighted per-edge arrival values under a delay mask."""
-    contrib = weights * values_per_edge * delay_mask
-    ex = jnp.where(g["channel"] == 0, contrib, 0.0)
-    inh = jnp.where(g["channel"] == 1, contrib, 0.0)
-    return (jax.ops.segment_sum(ex, g["post_idx"], num_segments=n_local),
-            jax.ops.segment_sum(inh, g["post_idx"], num_segments=n_local))
+def _layout_from_consts(g: dict, n_local: int, n_mirror: int, max_delay: int,
+                        blocked_meta) -> backends_mod.EdgeLayout:
+    """Per-shard EdgeLayout around shard_map-traced const arrays.
+
+    Static geometry comes from the closure; ``bucket_ptr`` stays None (per
+    shard it would be a different static, which a single shard-uniform
+    program cannot carry - the bucketed backend falls back to delay masks).
+    """
+    blk = None
+    if blocked_meta is not None and "blk_pre_idx" in g:
+        nb, eb, pb = blocked_meta
+        blk = BlockedGraph(nb=nb, eb=eb, pb=pb, n_local=nb * pb,
+                           pre_idx=g["blk_pre_idx"],
+                           post_rel=g["blk_post_rel"],
+                           delay=g["blk_delay"], channel=g["blk_channel"],
+                           edge_perm=g["blk_edge_perm"])
+    return backends_mod.EdgeLayout(
+        n_local=n_local, n_mirror=n_mirror, max_delay=max_delay,
+        pre_idx=g["pre_idx"], post_idx=g["post_idx"], delay=g["delay"],
+        channel=g["channel"], plastic=g["plastic"],
+        bucket_ptr=None, blocked=blk)
 
 
 def wire_bytes_per_step(net: StackedNetwork, mode: str = "area",
@@ -400,11 +452,18 @@ def wire_bytes_per_step(net: StackedNetwork, mode: str = "area",
 
 def make_raw_distributed_step(mesh: Mesh, groups: Sequence[snn.LIFParams],
                               cfg: DistributedConfig, *, max_delay: int,
-                              n_local: int, n_mirror: int):
+                              n_local: int, n_mirror: int,
+                              blocked_meta=None):
     """The shard_map'ed step as fn(state, consts) with consts as traced
     operands - usable with ShapeDtypeStructs for production-scale dry-runs
     (no graph materialization)."""
-    return _build_step(mesh, groups, cfg, max_delay, n_local, n_mirror)
+    if (backends_mod.get_backend(cfg.engine.sweep).needs_blocked
+            and blocked_meta is None):
+        raise ValueError(
+            f"sweep={cfg.engine.sweep!r} on the raw step needs "
+            "blocked_meta=(nb, eb, pb) plus blk_* entries in the consts")
+    return _build_step(mesh, groups, cfg, max_delay, n_local, n_mirror,
+                       blocked_meta)
 
 
 def make_distributed_step(net: StackedNetwork, mesh: Mesh,
@@ -416,9 +475,16 @@ def make_distributed_step(net: StackedNetwork, mesh: Mesh,
     constants.  The returned function is shard_map'ed over the mesh and can
     be scanned or called per-step.
     """
+    needs_blocked = backends_mod.get_backend(cfg.engine.sweep).needs_blocked
+    if needs_blocked and net.blocked_meta is None:
+        raise ValueError(
+            f"sweep={cfg.engine.sweep!r} needs a StackedNetwork built with "
+            "blocked layouts (prepare_stacked with_blocked=True)")
     smapped = _build_step(mesh, groups, cfg, net.max_delay, net.n_local,
-                          net.n_mirror)
-    consts = dict(net.graph)
+                          net.n_mirror,
+                          net.blocked_meta if needs_blocked else None)
+    consts = {k: v for k, v in net.graph.items()
+              if needs_blocked or not k.startswith("blk_")}
     consts.update(
         boundary_slots=net.boundary_slots,
         mirror_is_intra=net.mirror_is_intra,
@@ -436,12 +502,18 @@ def make_distributed_step(net: StackedNetwork, mesh: Mesh,
 
 def _build_step(mesh: Mesh, groups: Sequence[snn.LIFParams],
                 cfg: DistributedConfig, max_delay: int, n_local: int,
-                n_mirror: int):
+                n_mirror: int, blocked_meta=None):
     table_np = np.asarray(snn.make_param_table(list(groups), cfg.engine.dt))
     D = max_delay
+    backend = backends_mod.get_backend(cfg.engine.sweep)
 
     def step_local(g, state: DistState):
-        """Body on ONE shard: every array already squeezed to per-shard."""
+        """Body on ONE shard: every array already squeezed to per-shard.
+
+        The hot path (sweep, neuron update, STDP) is the SAME backend code
+        the single-shard engine dispatches to; only the spike exchange and
+        the overlap schedule around it are distributed-specific.
+        """
         # edge/index arrays may arrive in compact dtypes (u16 indices, i8
         # delays - §Perf: the static edge arrays dominate sweep traffic);
         # compute in i32 regardless.
@@ -456,42 +528,25 @@ def _build_step(mesh: Mesh, groups: Sequence[snn.LIFParams],
         # promote at the multiply.
         dtype = state.v_m.dtype
         t = state.t
+        layout = _layout_from_consts(g, n_local, n_mirror, D, blocked_meta)
 
         # ---- (1) exchange of last step's spikes (collective starts here) --
         mirror_prev = _exchange(state.prev_bits, g, cfg)
 
         # ---- (2) synaptic sweep ------------------------------------------
-        edge_delay = g["delay"]
         if cfg.overlap:
-            # delays >= 2 from the (old) ring - independent of the exchange
-            row = jnp.mod(t - edge_delay, D)
-            arrived_old = jnp.take(state.ring.reshape(-1),
-                                   row * n_mirror + g["pre_idx"])
-            mask_old = (edge_delay >= 2).astype(dtype)
-            ex_o, in_o = _sweep_masked(g, state.weights, arrived_old,
-                                       mask_old, n_local, dtype)
-            # delay == 1 from the fresh exchange
-            arrived_new = jnp.take(mirror_prev, g["pre_idx"])
-            mask_new = (edge_delay == 1).astype(dtype)
-            ex_n, in_n = _sweep_masked(g, state.weights, arrived_new,
-                                       mask_new, n_local, dtype)
-            input_ex, input_in = ex_o + ex_n, in_o + in_n
-            arrived = (arrived_old * mask_old + arrived_new * mask_new)
-            ring = jax.lax.dynamic_update_index_in_dim(
-                state.ring, mirror_prev, jnp.mod(t - 1, D), axis=0)
+            # backend splits delays >= 2 (old ring, independent of the
+            # collective) from delay == 1 (the fresh exchange) when it can;
+            # otherwise it degrades to write-then-sweep
+            input_ex, input_in, arrived, ring = backend.sweep_overlap(
+                layout, state.weights, state.ring, t, mirror_prev)
         else:
             # naive schedule: write first, then one full sweep (the sweep
             # then depends on the collective - no overlap possible)
             ring = jax.lax.dynamic_update_index_in_dim(
                 state.ring, mirror_prev, jnp.mod(t - 1, D), axis=0)
-            row = jnp.mod(t - edge_delay, D)
-            arrived = jnp.take(ring.reshape(-1),
-                               row * n_mirror + g["pre_idx"])
-            mask = (edge_delay > 0).astype(dtype)
-            arrived = arrived * mask
-            input_ex, input_in = _sweep_masked(
-                g, state.weights, arrived, jnp.ones_like(mask), n_local,
-                dtype)
+            input_ex, input_in, arrived = backend.sweep(
+                layout, state.weights, ring, t)
 
         # ---- (3) external drive + neuron dynamics ------------------------
         key = jax.random.wrap_key_data(state.key)
@@ -506,18 +561,17 @@ def _build_step(mesh: Mesh, groups: Sequence[snn.LIFParams],
             ref_count=state.ref_count,
             spike=jnp.zeros((n_local,), jnp.bool_), group_id=g["group_id"])
         table = jnp.asarray(table_np, dtype)
-        neurons = snn.lif_step(neurons, table, input_ex, input_in,
-                               synapse_model=cfg.engine.synapse_model)
+        neurons = backend.neuron_update(
+            layout, neurons, table, input_ex, input_in,
+            synapse_model=cfg.engine.synapse_model)
         bits = neurons.spike
 
         # ---- (4) plasticity ----------------------------------------------
         if cfg.engine.stdp is not None:
             traces = stdp_mod.TraceState(k_pre=state.k_pre,
                                          k_post=state.k_post)
-            new_w = stdp_mod.stdp_edge_update(
-                state.weights, g["pre_idx"], g["post_idx"], arrived, bits,
-                traces, cfg.engine.stdp)
-            weights = jnp.where(g["plastic"], new_w, state.weights)
+            weights = backend.stdp_update(layout, state.weights, arrived,
+                                          bits, traces, cfg.engine.stdp)
             pre_arr = jax.ops.segment_max(arrived, g["pre_idx"],
                                           num_segments=n_mirror)
             traces = stdp_mod.update_traces(traces, cfg.engine.stdp,
@@ -545,8 +599,7 @@ def _build_step(mesh: Mesh, groups: Sequence[snn.LIFParams],
         return expand(new_s), bits[None]
 
     state_specs = P(cfg.axis_names)
-    return jax.shard_map(
+    return shard_map(
         sharded_step, mesh=mesh,
         in_specs=(state_specs, state_specs),
-        out_specs=(state_specs, state_specs),
-        check_vma=False)
+        out_specs=(state_specs, state_specs))

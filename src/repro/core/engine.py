@@ -25,32 +25,29 @@ Spikes fired at step ``s`` are written to ``ring[s % D]`` (D = max_delay,
 one bitmap over the mirror table).  At step ``t``, a delay-``d`` edge reads
 ``ring[(t - d) % D]`` - spikes fired at ``t-d`` arriving exactly at ``t``.
 
-Two equivalent sweeps are provided (tests assert equality):
+The hot path (sweep, neuron update, STDP edge update) dispatches through the
+execution-backend registry of :mod:`repro.core.backends` (DESIGN.md §9):
+``EngineConfig.sweep`` selects ``"flat"`` (fused gather + segment_sum, the
+TPU/XLA-idiomatic form), ``"bucketed"`` (the paper's literal low-to-high
+delay sweep, the structural cross-check), or ``"pallas"`` (the TPU kernels
+on the post-block ELL layout; interpret mode off-TPU).  Tests assert the
+three produce identical spike trajectories.
 
-* ``flat``   : one fused gather over ``ring[(t - delay[e]) % D, pre_idx[e]]``
-               followed by two ``segment_sum`` reductions.  This is the
-               TPU-idiomatic form - a single large vectorized gather beats
-               a per-bucket loop on a systolic/vector machine, and sparsity
-               is exploited through zero values rather than skipped work
-               (DESIGN.md §2).
-* ``bucketed``: the paper's literal low-to-high delay sweep as a Python loop
-               over static bucket slices (what a Fugaku thread does), kept as
-               the structural twin of the Pallas kernel and for cross-checks.
-
-Writes are conflict-free by construction: ``segment_sum`` over owner-sorted
-``post_idx`` is the vector analogue of "each thread owns its rows" (eq. 14).
+Writes are conflict-free by construction: every backend reduces over
+owner-sorted ``post_idx`` rows it exclusively owns - the vector analogue of
+"each thread owns its rows" (eq. 14).
 """
 
 from __future__ import annotations
 
 import dataclasses
-from functools import partial
 from typing import Any
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.core import backends as backends_mod
 from repro.core import snn
 from repro.core import stdp as stdp_mod
 
@@ -79,6 +76,9 @@ class ShardGraph:
     # Per-neuron external Poisson drive (rate [Hz], weight [pA or nS]).
     ext_rate: Any = None    # (n_local,) float32
     ext_weight: Any = None  # (n_local,) float32
+    # Post-block ELL twin of the flat arrays (repro.core.layout.BlockedGraph),
+    # emitted natively by the builder; consumed by the pallas backend.
+    blocked: Any = None
 
     @property
     def n_edges(self) -> int:
@@ -110,7 +110,7 @@ class EngineConfig:
     dt: float = 0.1                        # [ms]
     synapse_model: str = snn.SynapseModel.CURRENT_EXP
     stdp: stdp_mod.STDPParams | None = None
-    sweep: str = "flat"                    # "flat" | "bucketed"
+    sweep: str = "flat"                    # backend name: "flat" | "bucketed" | "pallas"
     external_drive: bool = True            # per-neuron Poisson (graph.ext_*)
     record_spikes: bool = True
 
@@ -142,53 +142,14 @@ def init_state(graph: ShardGraph, groups: list[snn.LIFParams],
 
 def synaptic_sweep(graph: ShardGraph, weights: jax.Array, ring: jax.Array,
                    t: jax.Array, *, mode: str = "flat"):
-    """Accumulate (input_ex, input_in, arrived[E]) for step ``t``.
+    """Accumulate (input_ex, input_in, arrived[E]) for step ``t`` through the
+    ``mode`` backend (see :mod:`repro.core.backends`).
 
     ``arrived[e]`` is 1.0 iff edge ``e``'s pre spike arrives exactly now -
     consumed by both the current accumulation and the STDP depression rule.
     """
-    D = graph.max_delay
-    n_local = graph.n_local
-    dtype = weights.dtype
-
-    if mode == "flat":
-        # row = (t - delay) mod D ; one fused gather over the flattened ring.
-        row = jnp.mod(t - graph.delay, D)
-        flat = ring.reshape(-1)
-        arrived = jnp.take(flat, row * graph.n_mirror + graph.pre_idx)
-        arrived = arrived * (graph.delay > 0)  # mask padding edges
-        contrib = weights * arrived.astype(dtype)
-        ex = jnp.where(graph.channel == 0, contrib, 0.0)
-        inh = jnp.where(graph.channel == 1, contrib, 0.0)
-        input_ex = jax.ops.segment_sum(ex, graph.post_idx, num_segments=n_local)
-        input_in = jax.ops.segment_sum(inh, graph.post_idx, num_segments=n_local)
-        return input_ex, input_in, arrived
-
-    if mode == "bucketed":
-        # The paper's literal sweep: lowest to highest delay, static slices.
-        input_ex = jnp.zeros((n_local,), dtype)
-        input_in = jnp.zeros((n_local,), dtype)
-        arrived = jnp.zeros((graph.n_edges,), dtype)
-        bp = np.asarray(graph.bucket_ptr)
-        for d in range(1, D + 1):
-            lo, hi = int(bp[d]), int(bp[d + 1])
-            if lo == hi:
-                continue
-            bits = ring[jnp.mod(t - d, D)]
-            pre = jax.lax.slice_in_dim(graph.pre_idx, lo, hi)
-            post = jax.lax.slice_in_dim(graph.post_idx, lo, hi)
-            ch = jax.lax.slice_in_dim(graph.channel, lo, hi)
-            w = jax.lax.slice_in_dim(weights, lo, hi)
-            a = jnp.take(bits, pre).astype(dtype)
-            contrib = w * a
-            input_ex = input_ex + jax.ops.segment_sum(
-                jnp.where(ch == 0, contrib, 0.0), post, num_segments=n_local)
-            input_in = input_in + jax.ops.segment_sum(
-                jnp.where(ch == 1, contrib, 0.0), post, num_segments=n_local)
-            arrived = jax.lax.dynamic_update_slice(arrived, a, (lo,))
-        return input_ex, input_in, arrived
-
-    raise ValueError(f"unknown sweep mode {mode!r}")
+    backend = backends_mod.get_backend(mode)
+    return backend.sweep(backend.prepare(graph), weights, ring, t)
 
 
 def _poisson_drive(key, graph: ShardGraph, dt: float, dtype):
@@ -199,14 +160,24 @@ def _poisson_drive(key, graph: ShardGraph, dt: float, dtype):
 
 
 def engine_step(state: EngineState, graph: ShardGraph, table: jax.Array,
-                cfg: EngineConfig):
+                cfg: EngineConfig, *,
+                backend: "backends_mod.SweepBackend | None" = None,
+                layout: "backends_mod.EdgeLayout | None" = None):
     """One dt: sweep -> neuron update -> STDP -> ring write. Returns
-    (new_state, spike_bits)."""
+    (new_state, spike_bits).
+
+    ``backend``/``layout`` may be pre-resolved by callers that step in a
+    loop (``run``); otherwise they are derived from ``cfg.sweep``.
+    """
     dtype = state.weights.dtype
+    if backend is None:
+        backend = backends_mod.get_backend(cfg.sweep)
+    if layout is None:
+        layout = backend.prepare(graph)
 
     # (1) synaptic sweep over owned edges
-    input_ex, input_in, arrived = synaptic_sweep(
-        graph, state.weights, state.ring, state.t, mode=cfg.sweep)
+    input_ex, input_in, arrived = backend.sweep(
+        layout, state.weights, state.ring, state.t)
 
     # (2) external stochastic drive
     key, sub = jax.random.split(state.key)
@@ -214,17 +185,15 @@ def engine_step(state: EngineState, graph: ShardGraph, table: jax.Array,
         input_ex = input_ex + _poisson_drive(sub, graph, cfg.dt, dtype)
 
     # (3) neuron dynamics
-    neurons = snn.lif_step(state.neurons, table, input_ex, input_in,
-                           synapse_model=cfg.synapse_model)
+    neurons = backend.neuron_update(layout, state.neurons, table, input_ex,
+                                    input_in, synapse_model=cfg.synapse_model)
     spike_bits = neurons.spike
 
     # (4) plasticity: weights first (traces exclude this step's spikes:
     #     all-pairs convention), then trace update.
     if cfg.stdp is not None:
-        new_w = stdp_mod.stdp_edge_update(
-            state.weights, graph.pre_idx, graph.post_idx,
-            arrived, spike_bits, state.traces, cfg.stdp)
-        weights = jnp.where(graph.plastic, new_w, state.weights)
+        weights = backend.stdp_update(layout, state.weights, arrived,
+                                      spike_bits, state.traces, cfg.stdp)
         # pre trace is indexed by ARRIVAL at the mirror (axonal delay folded
         # in by reading the ring), so increment it with arrivals mapped back
         # to mirrors; post trace with this step's spikes.
@@ -250,17 +219,25 @@ def engine_step(state: EngineState, graph: ShardGraph, table: jax.Array,
 
 def make_step_fn(graph: ShardGraph, table: jax.Array, cfg: EngineConfig):
     """Jit-compiled single-step closure (graph/table/cfg baked in)."""
+    backend = backends_mod.get_backend(cfg.sweep)
+    layout = backend.prepare(graph)
+
     @jax.jit
     def step(state: EngineState):
-        return engine_step(state, graph, table, cfg)
+        return engine_step(state, graph, table, cfg, backend=backend,
+                           layout=layout)
     return step
 
 
 def run(state: EngineState, graph: ShardGraph, table: jax.Array,
         cfg: EngineConfig, n_steps: int):
     """Scan ``n_steps``; returns (final_state, spikes (n_steps, n_local) bool)."""
+    backend = backends_mod.get_backend(cfg.sweep)
+    layout = backend.prepare(graph)
+
     def body(s, _):
-        s, bits = engine_step(s, graph, table, cfg)
+        s, bits = engine_step(s, graph, table, cfg, backend=backend,
+                              layout=layout)
         return s, (bits if cfg.record_spikes else None)
 
     final, spikes = jax.lax.scan(body, state, None, length=n_steps)

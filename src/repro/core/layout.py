@@ -1,0 +1,121 @@
+"""Post-block ELL edge layout - the backend-portable form of a shard graph.
+
+``ShardGraph`` stores edges flat and owner-sorted by (delay, post); that is
+the natural input for the XLA ``segment_sum`` sweep.  The Pallas kernel path
+instead wants the Fig. 12 "data instance" shape: edges re-sorted by
+(post_block, delay, post) and padded so every post-neuron block owns the
+same edge count (ELL-of-blocks) - grid cell ``i`` then writes only rows
+``[i*PB, (i+1)*PB)`` and race-freedom is structural (DESIGN.md §2/§9).
+
+This module is build-time numpy.  ``BlockedGraph`` carries, besides the
+blocked static edge arrays, ``edge_perm``: for every (block, slot) the index
+of that edge in the FLAT owner-sorted arrays.  Run-time weights live flat in
+``EngineState.weights`` regardless of backend; the Pallas backend gathers
+them into blocked order per step via ``edge_perm`` so plasticity updates and
+checkpointing stay layout-agnostic.
+
+The fill is a single vectorized scatter (no per-block Python loop): edges
+are lexsorted by (block, delay, post), their within-block rank is computed
+from the cumulative block counts, and one fancy-index assignment places
+every field into its (NB, EB) slot.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import numpy as np
+
+__all__ = ["BlockedGraph", "blocked_layout", "blocked_eb", "DEFAULT_PB",
+           "DEFAULT_EB_MULTIPLE"]
+
+DEFAULT_PB = 256          # post neurons per block (grid-cell ownership range)
+DEFAULT_EB_MULTIPLE = 128  # pad per-block edge count to a lane multiple
+
+
+@dataclasses.dataclass(frozen=True)
+class BlockedGraph:
+    """Post-block ELL edge layout; all edge arrays (NB, EB).
+
+    Arrays are numpy at build time; the distributed engine re-materializes
+    the same structure around shard_map-traced arrays (the static ints stay
+    host-side either way).  ``delay == 0`` marks padding slots everywhere.
+    """
+
+    nb: int               # number of post blocks
+    eb: int               # edges per block (padded)
+    pb: int               # post neurons per block
+    n_local: int          # nb * pb (>= ShardGraph.n_local)
+    pre_idx: Any          # (NB, EB) int32 mirror index
+    post_rel: Any         # (NB, EB) int32 within-block row, [0, PB)
+    delay: Any            # (NB, EB) int32; 0 marks padding
+    channel: Any          # (NB, EB) int32: 0 ex, 1 in
+    weight: Any = None    # (NB, EB) f32 initial weights (build-time only)
+    plastic: Any = None   # (NB, EB) bool
+    edge_perm: Any = None  # (NB, EB) int32 -> flat edge index (0 on padding)
+
+    def flat(self, name: str) -> np.ndarray:
+        """Flat (NB*EB,) view of a field, same slot order."""
+        return np.asarray(getattr(self, name)).reshape(-1)
+
+
+def blocked_eb(g, *, pb: int = DEFAULT_PB,
+               eb_multiple: int = DEFAULT_EB_MULTIPLE) -> int:
+    """Padded per-block edge count a shard needs, WITHOUT building the
+    layout - a counts-only pass so multi-shard builds can find the widest
+    shard first and convert each shard exactly once (``eb_min``)."""
+    post = np.asarray(g.post_idx)
+    d = np.asarray(g.delay)
+    nb = max(-(-int(g.n_local) // pb), 1)
+    counts = np.bincount(post[d > 0] // pb, minlength=nb)
+    eb = int(max(counts.max() if counts.size else 1, 1))
+    return ((eb + eb_multiple - 1) // eb_multiple) * eb_multiple
+
+
+def blocked_layout(g, *, pb: int = DEFAULT_PB,
+                   eb_multiple: int = DEFAULT_EB_MULTIPLE,
+                   eb_min: int = 0) -> BlockedGraph:
+    """Convert a :class:`repro.core.engine.ShardGraph` to the blocked layout.
+
+    ``eb_min`` forces a minimum padded edge count per block so shards built
+    separately can share one (NB, EB) shape for device-axis stacking.
+    """
+    pre = np.asarray(g.pre_idx)
+    post = np.asarray(g.post_idx)
+    w = np.asarray(g.weight_init)
+    d = np.asarray(g.delay)
+    ch = np.asarray(g.channel)
+    pl_ = np.asarray(g.plastic)
+
+    real = np.nonzero(d > 0)[0]           # flat indices of non-padding edges
+    nb = max(-(-int(g.n_local) // pb), 1)
+    block = post[real] // pb
+    # (post_block, delay, post) order; `order` holds FLAT edge indices
+    order = real[np.lexsort((post[real], d[real], block))]
+    rows = post[order] // pb
+
+    counts = np.bincount(rows, minlength=nb)
+    eb = int(max(counts.max() if counts.size else 1, 1, eb_min))
+    eb = ((eb + eb_multiple - 1) // eb_multiple) * eb_multiple
+
+    # within-block rank of every sorted edge; rows is nondecreasing, so the
+    # rank is position minus the block's start - one subtract, no loop.
+    starts = np.concatenate([[0], np.cumsum(counts)])
+    cols = np.arange(order.size, dtype=np.int64) - starts[rows]
+
+    def scatter(vals, dtype, fill=0):
+        out = np.full((nb, eb), fill, dtype=dtype)
+        out[rows, cols] = vals
+        return out
+
+    return BlockedGraph(
+        nb=nb, eb=eb, pb=pb, n_local=nb * pb,
+        pre_idx=scatter(pre[order], np.int32),
+        post_rel=scatter(post[order] % pb, np.int32),
+        delay=scatter(d[order], np.int32),
+        channel=scatter(ch[order], np.int32),
+        weight=scatter(w[order], np.float32),
+        plastic=scatter(pl_[order], bool, fill=False),
+        edge_perm=scatter(order, np.int32),
+    )

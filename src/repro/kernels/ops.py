@@ -1,86 +1,21 @@
-"""Jit'd wrappers + layout converters for the Pallas kernels.
+"""Jit'd wrappers for the Pallas kernels + layout re-exports.
 
-``blocked_layout`` converts a :class:`repro.core.engine.ShardGraph` into the
-post-block ELL layout the ``synaptic_gather`` kernel consumes: edges
-re-sorted by (post_block, delay, post) and padded so every block owns the
-same edge count - the Fig. 12 data instance, one block per "thread".
-
-``kernel_engine_step`` is a drop-in replacement for the engine's sweep +
-neuron update built from the kernels, used by tests to prove the kernel path
-reproduces the XLA path on whole-network trajectories.
+The post-block ELL layout now lives in the core data model
+(:mod:`repro.core.layout`) and is emitted natively by the builder onto
+``ShardGraph.blocked``; ``BlockedGraph`` / ``blocked_layout`` are re-exported
+here for backward compatibility.  The engine-facing integration of the
+kernels is the ``pallas`` execution backend in :mod:`repro.core.backends`;
+``kernel_synaptic_sweep`` remains as the thin test-facing wrapper.
 """
 
 from __future__ import annotations
 
-import dataclasses
-
-import numpy as np
 import jax.numpy as jnp
 
-from repro.core.engine import ShardGraph
-from repro.kernels.lif_step import lif_step_kernel
-from repro.kernels.stdp_update import stdp_update_kernel
+from repro.core.layout import BlockedGraph, blocked_layout
 from repro.kernels.synaptic_gather import synaptic_gather
 
 __all__ = ["BlockedGraph", "blocked_layout", "kernel_synaptic_sweep"]
-
-
-@dataclasses.dataclass(frozen=True)
-class BlockedGraph:
-    """Post-block ELL edge layout; all arrays (NB, EB)."""
-
-    nb: int
-    eb: int
-    pb: int
-    n_local: int          # nb * pb (>= ShardGraph.n_local)
-    pre_idx: np.ndarray
-    post_rel: np.ndarray  # within-block row, [0, PB)
-    weight: np.ndarray
-    delay: np.ndarray     # 0 marks padding
-    channel: np.ndarray
-    plastic: np.ndarray
-    # flat views (NB*EB,) for the stdp kernel, same order
-    def flat(self, name):
-        return np.asarray(getattr(self, name)).reshape(-1)
-
-
-def blocked_layout(g: ShardGraph, *, pb: int = 256,
-                   eb_multiple: int = 128) -> BlockedGraph:
-    pre = np.asarray(g.pre_idx)
-    post = np.asarray(g.post_idx)
-    w = np.asarray(g.weight_init)
-    d = np.asarray(g.delay)
-    ch = np.asarray(g.channel)
-    pl_ = np.asarray(g.plastic)
-    real = d > 0
-    pre, post, w, d, ch, pl_ = (a[real] for a in (pre, post, w, d, ch, pl_))
-
-    nb = -(-g.n_local // pb)
-    block = post // pb
-    order = np.lexsort((post, d, block))
-    pre, post, w, d, ch, pl_ = (a[order] for a in (pre, post, w, d, ch, pl_))
-    counts = np.bincount(block[order], minlength=nb)
-    eb = int(max(counts.max() if counts.size else 1, 1))
-    eb = ((eb + eb_multiple - 1) // eb_multiple) * eb_multiple
-
-    def blocked(a, fill=0):
-        out = np.full((nb, eb), fill, dtype=a.dtype)
-        start = 0
-        for b in range(nb):
-            c = counts[b]
-            out[b, :c] = a[start:start + c]
-            start += c
-        return out
-
-    return BlockedGraph(
-        nb=nb, eb=eb, pb=pb, n_local=nb * pb,
-        pre_idx=blocked(pre.astype(np.int32)),
-        post_rel=blocked((post % pb).astype(np.int32)),
-        weight=blocked(w.astype(np.float32)),
-        delay=blocked(d.astype(np.int32)),
-        channel=blocked(ch.astype(np.int32)),
-        plastic=blocked(pl_, fill=False),
-    )
 
 
 def kernel_synaptic_sweep(bg: BlockedGraph, weights_blocked, ring, t, *,

@@ -25,6 +25,8 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import Mesh, PartitionSpec as P
 
+from repro.utils.jax_compat import shard_map
+
 __all__ = ["quantize", "dequantize", "ef_compress_step",
            "make_cross_pod_reduce", "init_error_state"]
 
@@ -89,9 +91,8 @@ def make_cross_pod_reduce(mesh: Mesh, *, compress: bool = True):
         # grads are already sharded over (data, model); shard_map manual
         # only over "pod", auto over the rest.
         spec = P()  # per-pod replica view of the (data,model)-sharded leaf
-        f = jax.shard_map(body, mesh=mesh, in_specs=(spec, spec),
-                          out_specs=(spec, spec),
-                          axis_names={"pod"}, check_vma=False)
+        f = shard_map(body, mesh=mesh, in_specs=(spec, spec),
+                      out_specs=(spec, spec), axis_names={"pod"})
         return f(g, err)
 
     def reduce_tree(grads, err_tree):

@@ -1,0 +1,68 @@
+"""Compatibility shims for jax APIs that moved between 0.4.x and 0.5+.
+
+Three surfaces the repo uses changed signature across the versions this
+codebase meets in the wild:
+
+* ``shard_map``: public ``jax.shard_map`` (kw ``check_vma``, optional
+  ``axis_names``) vs ``jax.experimental.shard_map.shard_map`` (kw
+  ``check_rep``, manual-axes complement via ``auto``);
+* ``AbstractMesh``: new ``(axis_sizes, axis_names)`` pair vs the 0.4.x
+  ``((name, size), ...)`` shape tuple.
+
+Everything else should import from here instead of sniffing versions
+locally.
+"""
+
+from __future__ import annotations
+
+import inspect
+
+import jax
+
+try:
+    from jax.sharding import AbstractMesh as _AbstractMesh
+except ImportError:  # very old 0.4.x: dry-runs unavailable, engine still works
+    _AbstractMesh = None
+
+__all__ = ["shard_map", "abstract_mesh"]
+
+
+if hasattr(jax, "shard_map"):
+    # the validity-check kwarg was renamed check_rep -> check_vma after the
+    # public promotion; probe the signature instead of assuming a band
+    _params = inspect.signature(jax.shard_map).parameters
+    _CHECK_KW = next((k for k in ("check_vma", "check_rep") if k in _params),
+                     None)
+
+    def shard_map(f, *, mesh, in_specs, out_specs, axis_names=None,
+                  check: bool = False):
+        kw = {_CHECK_KW: check} if _CHECK_KW else {}
+        if axis_names is not None:
+            kw["axis_names"] = set(axis_names)
+        return jax.shard_map(f, mesh=mesh, in_specs=in_specs,
+                             out_specs=out_specs, **kw)
+else:  # jax < 0.5: experimental entry point (the "jax-oldest" CI leg)
+    from jax.experimental.shard_map import shard_map as _shard_map_exp
+
+    def shard_map(f, *, mesh, in_specs, out_specs, axis_names=None,
+                  check: bool = False):
+        kw = {"check_rep": check}
+        if axis_names is not None:
+            # old API expresses "map over axis_names only" as the
+            # complement: every other mesh axis stays auto-sharded
+            auto = frozenset(mesh.axis_names) - frozenset(axis_names)
+            if auto:
+                kw["auto"] = auto
+        return _shard_map_exp(f, mesh=mesh, in_specs=in_specs,
+                              out_specs=out_specs, **kw)
+
+
+def abstract_mesh(axis_sizes: tuple[int, ...], axis_names: tuple[str, ...]):
+    """Device-less mesh for dry-runs, across both constructor signatures."""
+    if _AbstractMesh is None:
+        raise RuntimeError("this jax has no jax.sharding.AbstractMesh; "
+                           "dry-runs need jax >= 0.4.37")
+    try:
+        return _AbstractMesh(axis_sizes, axis_names)
+    except TypeError:
+        return _AbstractMesh(tuple(zip(axis_names, axis_sizes)))

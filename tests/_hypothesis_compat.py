@@ -1,0 +1,52 @@
+"""Optional-hypothesis shim: property tests skip when it isn't installed.
+
+Test modules import ``given`` / ``settings`` / ``st`` from here instead of
+from ``hypothesis`` directly.  With hypothesis installed this re-exports the
+real objects; without it, ``@given(...)`` replaces the test with a skipped
+stub (so the rest of the module still collects and runs) and ``st.*`` /
+``@settings(...)`` become inert placeholders.
+"""
+
+try:
+    from hypothesis import given, settings, strategies as st  # noqa: F401
+    HAVE_HYPOTHESIS = True
+except ImportError:
+    import inspect
+
+    import pytest
+
+    HAVE_HYPOTHESIS = False
+
+    def given(*gargs, **gkwargs):
+        def deco(f):
+            # hypothesis fills the RIGHTMOST params from positional
+            # strategies (kwargs by name); whatever is left over belongs to
+            # pytest (parametrize/fixtures) and must survive in the stub's
+            # signature for collection to succeed.
+            params = list(inspect.signature(f).parameters.values())
+            if gargs:
+                keep = params[:len(params) - len(gargs)]
+            else:
+                keep = [p for p in params if p.name not in gkwargs]
+
+            def stub(*_a, **_k):
+                pass
+            stub.__name__ = f.__name__
+            stub.__doc__ = f.__doc__
+            stub.__signature__ = inspect.Signature(keep)
+            return pytest.mark.skip(
+                reason="hypothesis not installed")(stub)
+        return deco
+
+    def settings(*_args, **_kwargs):
+        def deco(f):
+            return f
+        return deco
+
+    class _AnyStrategy:
+        """st.<anything>(...) placeholder; never executed."""
+
+        def __getattr__(self, _name):
+            return lambda *a, **k: None
+
+    st = _AnyStrategy()

@@ -1,5 +1,10 @@
 """Test config: single-device world (dry-run sets its own 512-device flag
-in subprocesses), deterministic hypothesis profile."""
+in subprocesses), deterministic hypothesis profile.
+
+``hypothesis`` is an optional test dependency (declared in pyproject's
+``test`` extra): the profile is registered only when it is importable, and
+property tests degrade to skips via ``tests/_hypothesis_compat``.
+"""
 
 import os
 import sys
@@ -8,9 +13,12 @@ import sys
 os.environ.pop("XLA_FLAGS", None)
 sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
 
-from hypothesis import HealthCheck, settings  # noqa: E402
-
-settings.register_profile(
-    "repro", max_examples=25, deadline=None,
-    suppress_health_check=[HealthCheck.too_slow])
-settings.load_profile("repro")
+try:
+    from hypothesis import HealthCheck, settings
+except ImportError:  # property tests skip via _hypothesis_compat
+    pass
+else:
+    settings.register_profile(
+        "repro", max_examples=25, deadline=None,
+        suppress_health_check=[HealthCheck.too_slow])
+    settings.load_profile("repro")

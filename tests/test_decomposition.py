@@ -2,7 +2,7 @@
 
 import numpy as np
 import pytest
-from hypothesis import given, strategies as st
+from _hypothesis_compat import given, st
 
 from repro.core import builder, models
 from repro.core.decomposition import (AreaSpec, apportion_devices,

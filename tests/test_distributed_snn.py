@@ -55,24 +55,30 @@ EQUIV_CODE = textwrap.dedent("""
     results = {}
     dec = dist.mesh_decompose(spec, n_rows=4, row_width=2)
     net = dist.prepare_stacked(spec, dec, 4, 2)
-    for mode in ("global", "area"):
-        for overlap in (False, True):
-            dcfg = dist.DistributedConfig(
-                engine=engine.EngineConfig(dt=0.1, stdp=stdp,
-                                           external_drive=False),
-                comm_mode=mode, overlap=overlap)
-            step, _ = dist.make_distributed_step(net, mesh,
-                                                 list(spec.groups), dcfg)
-            state = dist.init_stacked_state(net, list(spec.groups))
-            @jax.jit
-            def run(s):
-                return jax.lax.scan(lambda s, _: step(s), s, None, length=N)
-            _, bits = run(state)
-            bits = np.asarray(bits)
-            glob = np.zeros((N, spec.n_neurons), bool)
-            for si, part in enumerate(dec.parts):
-                glob[:, part] = bits[:, si, :part.size]
-            results[f"{mode}-{overlap}"] = bool((glob == ref).all())
+    # backend axis: flat across every comm x overlap combo; the pallas and
+    # bucketed backends through the SAME distributed code path (registry
+    # dispatch) on representative combos
+    combos = ([("flat", m, o) for m in ("global", "area")
+               for o in (False, True)]
+              + [("pallas", "area", True), ("pallas", "global", False),
+                 ("bucketed", "area", True)])
+    for sweep, mode, overlap in combos:
+        dcfg = dist.DistributedConfig(
+            engine=engine.EngineConfig(dt=0.1, stdp=stdp, sweep=sweep,
+                                       external_drive=False),
+            comm_mode=mode, overlap=overlap)
+        step, _ = dist.make_distributed_step(net, mesh,
+                                             list(spec.groups), dcfg)
+        state = dist.init_stacked_state(net, list(spec.groups))
+        @jax.jit
+        def run(s):
+            return jax.lax.scan(lambda s, _: step(s), s, None, length=N)
+        _, bits = run(state)
+        bits = np.asarray(bits)
+        glob = np.zeros((N, spec.n_neurons), bool)
+        for si, part in enumerate(dec.parts):
+            glob[:, part] = bits[:, si, :part.size]
+        results[f"{sweep}-{mode}-{overlap}"] = bool((glob == ref).all())
     results["spiked"] = int(ref.sum())
     print(json.dumps(results))
 """)

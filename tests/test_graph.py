@@ -3,7 +3,7 @@ asymmetry that makes indegree decomposition 'the only choice'."""
 
 import numpy as np
 import pytest
-from hypothesis import given, strategies as st
+from _hypothesis_compat import given, st
 
 from repro.core.graph import (DirectedGraph, SubGraph, indegree_subgraph,
                               join, meet, outdegree_subgraph,

@@ -9,9 +9,9 @@ import numpy as np
 import jax
 import jax.numpy as jnp
 import pytest
-from hypothesis import given, settings, strategies as st
+from _hypothesis_compat import given, settings, st
 
-from repro.core import builder, models, snn
+from repro.core import backends, builder, models, snn
 from repro.kernels import ops, ref
 from repro.kernels.lif_step import lif_step_kernel
 from repro.kernels.stdp_update import stdp_update_kernel
@@ -167,3 +167,59 @@ def test_kernel_engine_equivalence_full_step():
                                np.asarray(ex_e), atol=1e-3)
     np.testing.assert_allclose(np.asarray(in_k)[:g.n_local],
                                np.asarray(in_e), atol=1e-3)
+
+
+# --------------------------------------------------------------------------
+# execution-backend registry (DESIGN.md §9)
+# --------------------------------------------------------------------------
+
+def test_backend_registry_contents_and_errors():
+    assert {"flat", "bucketed", "pallas"} <= set(backends.available_backends())
+    with pytest.raises(ValueError, match="unknown sweep backend"):
+        backends.get_backend("triton")
+    with pytest.raises(ValueError, match="already registered"):
+        backends.register_backend("flat", backends.FlatBackend())
+
+
+def test_builder_emits_blocked_layout_natively():
+    """build_shards carries the post-block ELL twin on ShardGraph.blocked,
+    and edge_perm maps every blocked slot back to its flat edge."""
+    spec, _ = models.hpc_benchmark(scale=0.02)
+    g = builder.build_shards(spec, builder.decompose(spec, 1))[0]
+    bg = g.blocked
+    assert bg is not None and bg.n_local >= g.n_local
+    real = np.asarray(bg.delay) > 0
+    perm = np.asarray(bg.edge_perm)[real]
+    np.testing.assert_array_equal(np.asarray(g.pre_idx)[perm],
+                                  np.asarray(bg.pre_idx)[real])
+    np.testing.assert_array_equal(np.asarray(g.delay)[perm],
+                                  np.asarray(bg.delay)[real])
+    post_global = (np.arange(bg.nb)[:, None] * bg.pb
+                   + np.asarray(bg.post_rel))
+    np.testing.assert_array_equal(np.asarray(g.post_idx)[perm],
+                                  post_global[real])
+    # every real flat edge appears exactly once
+    assert perm.size == int((np.asarray(g.delay) > 0).sum())
+    assert np.unique(perm).size == perm.size
+
+
+def test_backend_sweeps_agree_on_built_graph():
+    """bucketed and pallas backend sweeps match flat on a real shard,
+    including the per-edge arrivals consumed by STDP."""
+    from repro.core import engine as eng
+    spec, _ = models.hpc_benchmark(scale=0.02)
+    g = builder.build_shards(spec, builder.decompose(spec, 1))[0] \
+        .device_arrays()
+    rng = np.random.default_rng(11)
+    ring = jnp.asarray((rng.uniform(size=(spec.max_delay, g.n_mirror))
+                        < 0.15).astype(np.float32))
+    t = jnp.asarray(77, jnp.int32)
+    ex_f, in_f, arr_f = eng.synaptic_sweep(g, g.weight_init, ring, t,
+                                           mode="flat")
+    for name in ("bucketed", "pallas"):
+        ex, inh, arr = eng.synaptic_sweep(g, g.weight_init, ring, t,
+                                          mode=name)
+        np.testing.assert_allclose(ex, ex_f, atol=1e-3, err_msg=name)
+        np.testing.assert_allclose(inh, in_f, atol=1e-3, err_msg=name)
+        np.testing.assert_array_equal(np.asarray(arr) > 0,
+                                      np.asarray(arr_f) > 0, err_msg=name)

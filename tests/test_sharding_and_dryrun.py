@@ -23,12 +23,12 @@ def test_param_rules_cover_all_archs():
     abstract 4x4 mesh, and at least half the big leaves are sharded."""
     import jax
     import jax.numpy as jnp
-    from jax.sharding import AbstractMesh
     from repro import configs
     from repro.models.model import build_model
     from repro.sharding import rules
+    from repro.utils.jax_compat import abstract_mesh
 
-    mesh = AbstractMesh((4, 4), ("data", "model"))
+    mesh = abstract_mesh((4, 4), ("data", "model"))
     for arch in configs.ARCH_NAMES:
         cfg = configs.get_smoke(arch)
         m = build_model(cfg)
@@ -53,10 +53,10 @@ def test_param_rules_cover_all_archs():
 def test_cache_specs_head_vs_seq_fallback():
     import jax
     import jax.numpy as jnp
-    from jax.sharding import AbstractMesh
     from repro.sharding import rules
+    from repro.utils.jax_compat import abstract_mesh
 
-    mesh = AbstractMesh((2, 8), ("data", "model"))
+    mesh = abstract_mesh((2, 8), ("data", "model"))
     cache = {"period": {"k": jax.ShapeDtypeStruct((4, 16, 64, 2, 8),
                                                   jnp.bfloat16),
                         "v": jax.ShapeDtypeStruct((4, 16, 64, 2, 8),
@@ -118,12 +118,12 @@ def test_input_specs_match_model_inputs():
     """input_specs must produce exactly the batch keys each family's loss
     expects (catches spec drift)."""
     import jax
-    from jax.sharding import AbstractMesh
     from repro import configs
     from repro.configs.shapes import SHAPES
     from repro.launch.dryrun import input_specs
+    from repro.utils.jax_compat import abstract_mesh
 
-    mesh = AbstractMesh((16, 16), ("data", "model"))
+    mesh = abstract_mesh((16, 16), ("data", "model"))
     for arch in configs.ARCH_NAMES:
         cfg = configs.get(arch)
         sp = input_specs(cfg, SHAPES["train_4k"], mesh)

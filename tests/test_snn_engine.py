@@ -95,6 +95,74 @@ def test_flat_equals_bucketed_sweep():
     assert np.allclose(np.asarray(f1.weights), np.asarray(f2.weights))
 
 
+def mixed_backend_spec():
+    """Two-group exc/inh net with heterogeneous delays, plastic E->E edges,
+    and an edge count that is NOT a multiple of the pad width - so the built
+    shard contains real padding edges (delay == 0) that every backend must
+    mask identically."""
+    ne, ni = 24, 9
+    area = AreaSpec("a", ne + ni, positions=np.zeros((ne + ni, 3)))
+    exc = snn.LIFParams(i_e=800.0, t_ref=1.0)
+    inh = snn.LIFParams(i_e=800.0, t_ref=1.0, tau_m=8.0)
+    pops = [Population("E", 0, 0, ne), Population("I", 0, 1, ni)]
+    projections = [
+        Projection(0, 0, 5, 45.0, 5.0, 1, 5, channel=0, plastic=True),
+        Projection(0, 1, 3, 45.0, 5.0, 1, 3, channel=0),
+        Projection(1, 0, 4, -200.0, 10.0, 2, 6, channel=1),
+        Projection(1, 1, 2, -200.0, 10.0, 1, 2, channel=1),
+    ]
+    return NetworkSpec(areas=[area], groups=[exc, inh], populations=pops,
+                       projections=projections, max_delay=8, seed=3)
+
+
+def test_cross_backend_trajectory_equivalence():
+    """flat == bucketed == pallas (interpret) over a whole 120-step
+    trajectory with STDP enabled: identical spikes, matching weights.
+
+    This is the backend-registry contract (DESIGN.md §9) on a network with
+    mixed channels, heterogeneous delays, and padding edges."""
+    spec = mixed_backend_spec()
+    stdp = models.HPC_STDP
+    results = {}
+    for sweep in ("flat", "bucketed", "pallas"):
+        cfg = engine.EngineConfig(dt=0.1, stdp=stdp, sweep=sweep,
+                                  external_drive=False)
+        final, spikes, g = run_spec(spec, 120, cfg)
+        results[sweep] = (spikes, np.asarray(final.weights))
+    # preconditions: padding edges exist, both channels present, it spiked
+    delay = np.asarray(g.delay)
+    assert (delay == 0).sum() > 0, "no padding edges - vacuous"
+    assert (np.asarray(g.channel)[delay > 0] == 1).any()
+    assert results["flat"][0].sum() > 10, "nothing spiked - vacuous"
+    for other in ("bucketed", "pallas"):
+        s_f, w_f = results["flat"]
+        s_o, w_o = results[other]
+        assert (s_f == s_o).all(), f"spike trajectories diverge: flat vs {other}"
+        np.testing.assert_allclose(w_f, w_o, atol=1e-4,
+                                   err_msg=f"weights diverge: flat vs {other}")
+
+
+def test_pallas_backend_conductance_model():
+    """The kernel path also serves the cond_exp synapse model."""
+    area = AreaSpec("a", 2, positions=np.zeros((2, 3)))
+    drive = snn.LIFParams(i_e=1500.0, t_ref=1.0)
+    quiet = snn.LIFParams(e_ex=0.0, e_in=-85.0)
+    spec = NetworkSpec(
+        areas=[area], groups=[drive, quiet],
+        populations=[Population("d", 0, 0, 1), Population("t", 0, 1, 1)],
+        projections=[Projection(0, 1, 1, 50.0, 0.0, 2, 2, channel=0)],
+        max_delay=4, seed=0)
+    cfg_p = engine.EngineConfig(dt=0.1, external_drive=False, sweep="pallas",
+                                synapse_model=snn.SynapseModel.COND_EXP)
+    cfg_f = dataclasses.replace(cfg_p, sweep="flat")
+    f_p, s_p, _ = run_spec(spec, 200, cfg_p)
+    f_f, s_f, _ = run_spec(spec, 200, cfg_f)
+    assert s_p.sum() > 0
+    assert (s_p == s_f).all()
+    np.testing.assert_allclose(np.asarray(f_p.neurons.v_m),
+                               np.asarray(f_f.neurons.v_m), atol=1e-4)
+
+
 def test_hpc_benchmark_rate_band():
     """§IV.A: asynchronous-irregular activity below ~10 Hz."""
     spec, stdp = models.hpc_benchmark(scale=0.04, stdp=True)

@@ -7,19 +7,27 @@ plus the blocked-layout conversion cost.  On TPU the same harness times the
 compiled kernels (interpret=False).
 """
 
+import argparse
+import os
+import sys
 import time
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
+# allow `python benchmarks/bench_kernels.py` without PYTHONPATH
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
 from repro.core import backends, builder, models, snn
 from repro.core.layout import blocked_layout
 
 
-def bench_sweep_sizes(out):
+def bench_sweep_sizes(out, *, quick=False):
     """Sweep-only step time per execution backend (registry dispatch)."""
-    for scale, tag in ((0.02, "small"), (0.08, "medium")):
+    sizes = ((0.02, "small"),) if quick else ((0.02, "small"),
+                                              (0.08, "medium"))
+    for scale, tag in sizes:
         spec, _ = models.hpc_benchmark(scale=scale, stdp=False)
         g = builder.build_shards(spec, builder.decompose(spec, 1))[0] \
             .device_arrays()
@@ -36,7 +44,7 @@ def bench_sweep_sizes(out):
 
             r = sweep(ring, jnp.asarray(5, jnp.int32))
             jax.block_until_ready(r)
-            n = 200
+            n = 20 if quick else 200
             t0 = time.perf_counter()
             for i in range(n):
                 r = sweep(ring, jnp.asarray(i % spec.max_delay, jnp.int32))
@@ -46,14 +54,16 @@ def bench_sweep_sizes(out):
                 f"edges={g.n_edges};edges_per_us={g.n_edges/us:.0f}")
 
 
-def bench_blocked_layout(out):
+def bench_blocked_layout(out, *, quick=False):
     """Build-time flat -> post-block ELL conversion (vectorized scatter)."""
-    for scale, tag in ((0.05, "small"), (0.2, "medium")):
+    sizes = ((0.05, "small"),) if quick else ((0.05, "small"),
+                                              (0.2, "medium"))
+    for scale, tag in sizes:
         spec, _ = models.hpc_benchmark(scale=scale, stdp=False)
         g = builder.build_shards(spec, builder.decompose(spec, 1),
                                  with_blocked=False)[0]
         blocked_layout(g)  # warm numpy caches
-        n = 20
+        n = 3 if quick else 20
         t0 = time.perf_counter()
         for _ in range(n):
             bg = blocked_layout(g)
@@ -62,8 +72,8 @@ def bench_blocked_layout(out):
             f"edges={g.n_edges};nb={bg.nb};eb={bg.eb}")
 
 
-def bench_lif_chain(out):
-    for n in (4096, 65536):
+def bench_lif_chain(out, *, quick=False):
+    for n in ((4096,) if quick else (4096, 65536)):
         gs = [snn.LIFParams()]
         table = snn.make_param_table(gs, dt=0.1)
         state = snn.init_state(n, np.zeros(n, np.int32), gs)
@@ -75,7 +85,7 @@ def bench_lif_chain(out):
 
         s = step(state)
         jax.block_until_ready(s.v_m)
-        reps = 200
+        reps = 20 if quick else 200
         t0 = time.perf_counter()
         for _ in range(reps):
             s = step(s)
@@ -85,7 +95,19 @@ def bench_lif_chain(out):
             f"neurons_per_us={n/us:.0f}")
 
 
-def main(out):
-    bench_sweep_sizes(out)
-    bench_lif_chain(out)
-    bench_blocked_layout(out)
+def main(out, *, quick: bool = False):
+    bench_sweep_sizes(out, quick=quick)
+    bench_lif_chain(out, quick=quick)
+    bench_blocked_layout(out, quick=quick)
+
+
+if __name__ == "__main__":
+    ap = argparse.ArgumentParser(
+        description="kernel-path microbenchmarks (CPU-executable proxies)")
+    ap.add_argument("--quick", action="store_true",
+                    help="tiny config: smallest sizes, few reps (CI smoke)")
+    args = ap.parse_args()
+    print("name,us_per_call,derived")
+    main(lambda name, us, derived="": print(f"{name},{us:.2f},{derived}",
+                                            flush=True),
+         quick=args.quick)

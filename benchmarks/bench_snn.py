@@ -9,13 +9,24 @@ On this CPU container we reproduce the *shape* of that comparison:
   {flat,bucketed,pallas}`` restricts the axis; pallas runs in interpret
   mode off-TPU, so its CPU numbers measure the emulated kernel, not the
   TPU lowering);
+* the distributed step across every spike-wire codec and comm mode
+  (``--spike-wire`` / ``--comm-mode`` restrict the axes) - the end-to-end
+  cost of the SpikeWire encode/collective/decode path, with the codec's
+  own wire bytes/step recorded next to the timing;
 * Area-Processes Mapping vs Random Equivalent Mapping: remote-mirror
   memory and per-step spike-exchange bytes (the Fig. 8/9/10 quantities,
   computed exactly from the built shards - these are the terms that
   dominate at Fugaku scale).
+
+Results also land as JSON (``--json``, default experiments/bench_snn.json)
+so the wire bytes/step ride along with the timings.  ``--quick`` shrinks
+every axis to a CI-smoke-sized config.  The wire benchmark shards over
+however many devices exist (set
+``XLA_FLAGS=--xla_force_host_platform_device_count=8`` for a real mesh).
 """
 
 import argparse
+import json
 import os
 import sys
 import time
@@ -28,9 +39,13 @@ sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
 
 from repro.core import builder, engine, models, snn
 from repro.core.backends import available_backends
-from repro.core.distributed import mesh_decompose, prepare_stacked
+from repro.core.distributed import (DistributedConfig, init_stacked_state,
+                                    make_distributed_step, mesh_decompose,
+                                    prepare_stacked, wire_bytes_per_step)
 
 DEFAULT_BACKENDS = available_backends()
+DEFAULT_WIRES = ("f32", "u8", "packed", "sparse")
+DEFAULT_COMM_MODES = ("area", "global")
 
 
 def _bytes_of_shard(g) -> int:
@@ -41,8 +56,10 @@ def _bytes_of_shard(g) -> int:
     return tot
 
 
-def bench_step_scaling(out, backends=DEFAULT_BACKENDS):
-    for scale in (0.02, 0.05, 0.1):
+def bench_step_scaling(out, backends=DEFAULT_BACKENDS, *, quick=False):
+    scales = (0.02,) if quick else (0.02, 0.05, 0.1)
+    reps = 20 if quick else 100
+    for scale in scales:
         spec, stdp = models.hpc_benchmark(scale=scale, stdp=True)
         dec = builder.decompose(spec, 1)
         g = builder.build_shards(spec, dec)[0].device_arrays()
@@ -52,20 +69,58 @@ def bench_step_scaling(out, backends=DEFAULT_BACKENDS):
             st = engine.init_state(g, list(spec.groups), jax.random.key(0))
             step = engine.make_step_fn(g, table, cfg)
             st, _ = step(st)  # compile+warm
-            n = 100
             t0 = time.perf_counter()
-            for _ in range(n):
+            for _ in range(reps):
                 st, _ = step(st)
             jax.block_until_ready(st.v_m if hasattr(st, "v_m")
                                   else st.neurons.v_m)
-            us = (time.perf_counter() - t0) / n * 1e6
+            us = (time.perf_counter() - t0) / reps * 1e6
             out(f"snn_step/{sweep}/scale{scale}", us,
-                f"edges={g.n_edges}")
+                dict(edges=g.n_edges))
 
 
-def bench_mapping_comparison(out):
+def bench_wire_exchange(out, wires=DEFAULT_WIRES,
+                        comm_modes=DEFAULT_COMM_MODES, *, quick=False):
+    """Distributed step time per (spike-wire codec x comm mode).
+
+    Uses whatever devices this process has (1 is fine: the encode/decode
+    work and the payload shapes are identical; only the collective hop is
+    degenerate), so the codecs are measured end-to-end through the real
+    shard_map step.
+    """
+    n_dev = jax.device_count()
+    width = 2 if n_dev % 2 == 0 else 1
+    rows = n_dev // width
+    mesh = jax.make_mesh((rows, width), ("data", "model"))
+    spec = models.marmoset(scale=0.004, n_areas=4)
+    dec = mesh_decompose(spec, rows, width)
+    net = prepare_stacked(spec, dec, rows, width, with_blocked=False)
+    reps = 10 if quick else 50
+    for mode in comm_modes:
+        for wire in wires:
+            cfg = DistributedConfig(
+                engine=engine.EngineConfig(dt=models.DT_MS),
+                comm_mode=mode, spike_wire=wire)
+            step, _ = make_distributed_step(net, mesh, list(spec.groups),
+                                            cfg)
+            state = init_stacked_state(net, list(spec.groups))
+            jstep = jax.jit(step)
+            state, _ = jstep(state)  # compile+warm
+            t0 = time.perf_counter()
+            for _ in range(reps):
+                state, _ = jstep(state)
+            jax.block_until_ready(state.v_m)
+            us = (time.perf_counter() - t0) / reps * 1e6
+            overflow = int(np.asarray(state.wire_overflow).sum())
+            out(f"snn_wire/{mode}/{wire}", us,
+                dict(wire_bytes_step=wire_bytes_per_step(net, mode, wire),
+                     mesh=f"{rows}x{width}", overflow=overflow))
+
+
+def bench_mapping_comparison(out, *, quick=False):
     """Area vs Random mapping: mirrors + spike traffic (paper Fig. 8-10)."""
-    for scale in (0.004, 0.008):
+    scales = (0.004,) if quick else (0.004, 0.008)
+    for scale in scales:
         spec = models.marmoset(scale=scale, n_areas=4)
         for method, tag in (("area", "cortex_area"),
                             ("random", "random_equiv")):
@@ -78,23 +133,59 @@ def bench_mapping_comparison(out):
             comm = (net.comm_bytes_area if method == "area"
                     else net.comm_bytes_global)
             out(f"snn_map/{tag}/scale{scale}", mem,
-                f"remote_mirrors={remote};comm_bytes_step={comm}")
+                dict(remote_mirrors=remote, comm_bytes_step=comm))
 
 
-def main(out, backend: str | None = None):
-    bench_step_scaling(out, (backend,) if backend else DEFAULT_BACKENDS)
-    bench_mapping_comparison(out)
+def main(out, backend: str | None = None, *, wires=DEFAULT_WIRES,
+         comm_modes=DEFAULT_COMM_MODES, quick: bool = False):
+    bench_step_scaling(out, (backend,) if backend else DEFAULT_BACKENDS,
+                       quick=quick)
+    bench_wire_exchange(out, wires, comm_modes, quick=quick)
+    bench_mapping_comparison(out, quick=quick)
 
 
 if __name__ == "__main__":
     ap = argparse.ArgumentParser(
-        description="SNN engine scaling benchmark with a backend axis")
+        description="SNN engine scaling benchmark with backend, spike-wire "
+                    "and comm-mode axes")
     ap.add_argument("--backend", default=None,
                     choices=sorted(available_backends()),
                     help="restrict the step benchmark to one execution "
                          "backend (default: flat, bucketed and pallas)")
+    ap.add_argument("--spike-wire", default=None,
+                    help="restrict the wire benchmark to one codec "
+                         "(f32|u8|packed|sparse|sparse:<rate>; default: "
+                         "all registered)")
+    ap.add_argument("--comm-mode", default=None,
+                    choices=DEFAULT_COMM_MODES,
+                    help="restrict the wire benchmark to one comm mode "
+                         "(default: area and global)")
+    ap.add_argument("--quick", action="store_true",
+                    help="tiny config: smallest scales, few reps (CI smoke)")
+    ap.add_argument("--json", default="experiments/bench_snn.json",
+                    help="write records (incl. wire bytes/step) as JSON; "
+                         "'' disables")
     args = ap.parse_args()
+    if args.spike_wire:  # fail fast, before the step-scaling phase runs
+        from repro.core.wire import get_wire
+        get_wire(args.spike_wire)
+
+    records = []
+
+    def _out(name, us, derived=None):
+        derived = derived or {}
+        records.append(dict(name=name, us_per_call=round(us, 2), **derived))
+        extra = ";".join(f"{k}={v}" for k, v in derived.items())
+        print(f"{name},{us:.2f},{extra}", flush=True)
+
     print("name,us_per_call,derived")
-    main(lambda name, us, derived="": print(f"{name},{us:.2f},{derived}",
-                                            flush=True),
-         args.backend)
+    main(_out, args.backend,
+         wires=(args.spike_wire,) if args.spike_wire else DEFAULT_WIRES,
+         comm_modes=(args.comm_mode,) if args.comm_mode
+         else DEFAULT_COMM_MODES,
+         quick=args.quick)
+    if args.json:
+        os.makedirs(os.path.dirname(args.json) or ".", exist_ok=True)
+        with open(args.json, "w") as f:
+            json.dump(records, f, indent=1)
+        print(f"-> {args.json}")

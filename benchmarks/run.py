@@ -10,7 +10,9 @@ import argparse
 import sys
 
 
-def _out(name: str, us: float, derived: str = "") -> None:
+def _out(name: str, us: float, derived="") -> None:
+    if isinstance(derived, dict):
+        derived = ";".join(f"{k}={v}" for k, v in derived.items())
     print(f"{name},{us:.2f},{derived}", flush=True)
 
 

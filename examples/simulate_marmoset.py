@@ -32,6 +32,9 @@ def main():
     ap.add_argument("--steps", type=int, default=2000)
     ap.add_argument("--ckpt", default="/tmp/marmoset_ckpt")
     ap.add_argument("--save-every", type=int, default=500)
+    ap.add_argument("--spike-wire", default="packed",
+                    help="spike-exchange codec: f32|u8|packed|sparse|"
+                         "sparse:<rate> (multi-device runs only)")
     args = ap.parse_args()
 
     spec = models.marmoset(scale=args.scale, n_areas=args.areas)
@@ -48,13 +51,21 @@ def main():
         dec = dist.mesh_decompose(spec, rows, width)
         net = dist.prepare_stacked(spec, dec, rows, width)
         dcfg = dist.DistributedConfig(
-            engine=engine.EngineConfig(dt=models.DT_MS))
+            engine=engine.EngineConfig(dt=models.DT_MS),
+            spike_wire=args.spike_wire)
         step, _ = dist.make_distributed_step(net, mesh, list(spec.groups),
                                              dcfg)
         state = dist.init_stacked_state(net, list(spec.groups))
         print(f"  mesh {rows}x{width}; spike traffic/step/shard: "
               f"area={net.comm_bytes_area}B vs "
               f"global={net.comm_bytes_global}B")
+        # what each wire codec would ship per step on THIS decomposition
+        # (the sparse ID wire wins below the packed crossover firing rate)
+        table_b = {w: dist.wire_bytes_per_step(net, "area", w)
+                   for w in ("f32", "u8", "packed", "sparse")}
+        print("  wire bytes/step (area): "
+              + "  ".join(f"{w}={b}B" for w, b in table_b.items())
+              + f"  [running: {args.spike_wire}]")
         jstep = jax.jit(step)
         counts = np.zeros(net.n_shards)
         for i in range(args.steps):
@@ -63,6 +74,10 @@ def main():
                 mgr.save(i + 1, state, blocking=False)
             counts += np.asarray(bits).sum(axis=-1)
         mgr.wait()
+        overflow = int(np.asarray(state.wire_overflow).sum())
+        if overflow:
+            print(f"  WARNING: lossy wire saturated {overflow} time(s) - "
+                  f"raise the sparse capacity (e.g. sparse:<rate>)")
         total = counts.sum()
         rate = total / (spec.n_neurons * args.steps * models.DT_MS * 1e-3)
     else:

@@ -33,6 +33,15 @@ pallas), so the distributed step and the single-shard engine share one code
 path; only the exchange and the overlap schedule are distributed-specific.
 For the pallas backend the stacked ``blk_*`` consts carry each shard's
 post-block ELL arrays (DESIGN.md §2/§9).
+
+The exchange payload itself goes through the SpikeWire codec registry of
+:mod:`repro.core.wire` (``cfg.spike_wire`` selects f32 / u8 / packed /
+sparse, DESIGN.md §10): both gathers - the intra-row local bitmap and the
+cross-row boundary payload - encode before and decode after the
+collective, so CORTEX's ID-based Spikes Broadcast ("sparse") and the dense
+bitmap wires are one config switch apart, and per-wire traffic accounting
+(:func:`wire_bytes_per_step`) comes from the same codec that runs on the
+wire.
 """
 
 from __future__ import annotations
@@ -47,6 +56,7 @@ from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
 from repro.core import backends as backends_mod
 from repro.core import snn, stdp as stdp_mod
+from repro.core import wire as wire_mod
 from repro.core.builder import NetworkSpec, build_shards
 from repro.core.decomposition import (Decomposition, apportion_devices,
                                       multisection_divide)
@@ -55,7 +65,8 @@ from repro.core.layout import BlockedGraph
 from repro.utils.jax_compat import shard_map
 
 __all__ = ["mesh_decompose", "StackedNetwork", "prepare_stacked",
-           "DistributedConfig", "make_distributed_step", "init_stacked_state"]
+           "DistributedConfig", "make_distributed_step", "init_stacked_state",
+           "wire_bytes_per_step", "wire_bytes_for_dims"]
 
 
 # --------------------------------------------------------------------------
@@ -176,11 +187,21 @@ class StackedNetwork:
     mirror_row_gather: Any     # (S, n_mirror) int32 -> row-gathered flat idx
     mirror_remote_gather: Any  # (S, n_mirror) int32 -> remote-gathered flat idx
     mirror_src_flat: Any       # (S, n_mirror) int32 (global mode)
-    comm_bytes_global: int     # per-step traffic accounting (per shard, fp32)
-    comm_bytes_area: int
     # static blocked-layout geometry (nb, eb, pb) when graph carries the
     # stacked ELL arrays blk_* for the pallas backend; None otherwise
     blocked_meta: tuple[int, int, int] | None = None
+
+    # per-shard per-step spike traffic (DESIGN.md §2/§10).  The fp32-bitmap
+    # figures are kept as the mapping-quality metric (they count exchanged
+    # NEURON SLOTS x 4, independent of wire choice); per-wire bytes go
+    # through the SpikeWire codec via :func:`wire_bytes_per_step`.
+    @property
+    def comm_bytes_global(self) -> int:
+        return int(wire_bytes_per_step(self, "global", "f32"))
+
+    @property
+    def comm_bytes_area(self) -> int:
+        return int(wire_bytes_per_step(self, "area", "f32"))
 
 
 def prepare_stacked(spec: NetworkSpec, dec: Decomposition,
@@ -220,7 +241,10 @@ def prepare_stacked(spec: NetworkSpec, dec: Decomposition,
     b_pad = max(max((b.size for b in boundary), default=1), 1)
     b_pad = ((b_pad + pad_to_multiple - 1) // pad_to_multiple) * pad_to_multiple
 
-    boundary_slots = np.zeros((S, b_pad), dtype=np.int32)
+    # pad slots carry the out-of-range sentinel n_local: the exchange reads
+    # them with a zero fill, so a pad slot never aliases a real neuron's
+    # bit (it would inflate the sparse wire's spike count otherwise)
+    boundary_slots = np.full((S, b_pad), n_local, dtype=np.int32)
     for s in range(S):
         boundary_slots[s, :boundary[s].size] = boundary[s]
 
@@ -279,9 +303,6 @@ def prepare_stacked(spec: NetworkSpec, dec: Decomposition,
             blk_edge_perm=bstack("edge_perm"),
         )
 
-    # per-shard per-step spike traffic (fp32 bitmap words, DESIGN.md §2)
-    comm_global = S * n_local * 4
-    comm_area = row_width * n_local * 4 + S * b_pad * 4
     return StackedNetwork(
         n_shards=S, row_width=row_width, n_local=n_local, n_mirror=n_mirror,
         n_edges=n_edges, b_pad=b_pad, max_delay=spec.max_delay, graph=graph,
@@ -289,8 +310,7 @@ def prepare_stacked(spec: NetworkSpec, dec: Decomposition,
         boundary_slots=boundary_slots, mirror_is_intra=mirror_is_intra,
         mirror_row_gather=mirror_row_gather,
         mirror_remote_gather=mirror_remote_gather,
-        mirror_src_flat=mirror_src_flat,
-        comm_bytes_global=comm_global, comm_bytes_area=comm_area)
+        mirror_src_flat=mirror_src_flat)
 
 
 # --------------------------------------------------------------------------
@@ -303,43 +323,20 @@ class DistributedConfig:
     comm_mode: str = "area"       # "area" | "global"
     overlap: bool = True          # paper §III.C schedule
     axis_names: tuple[str, ...] = ("data", "model")  # (outer..., inner)
-    # spike-exchange payload encoding: "f32" (naive bitmap words), "u8"
-    # (byte bitmap, 4x less traffic), "packed" (1 bit/neuron, 32x less -
-    # spikes ARE bits; §Perf iteration on the paper's own bottleneck)
+    # spike-exchange wire codec, resolved through the SpikeWire registry
+    # (repro.core.wire, DESIGN.md §10): "f32" / "u8" / "packed" dense
+    # bitmaps, "sparse" fixed-capacity (count, ids) payloads - CORTEX's
+    # ID-based Spikes Broadcast; "sparse:<rate>" provisions capacity for
+    # that per-step firing fraction.  A SpikeWire instance also works.
     spike_wire: str = "packed"
 
     @property
     def inner_axis(self) -> str:
         return self.axis_names[-1]
 
-
-def _wire_encode(bits, wire: str):
-    """bits (n,) f32 in {0,1} -> wire payload."""
-    if wire == "f32":
-        return bits
-    if wire == "u8":
-        return bits.astype(jnp.uint8)
-    if wire == "packed":
-        n = bits.shape[0]
-        pad = (-n) % 8
-        b = jnp.pad(bits, (0, pad)).astype(jnp.uint8).reshape(-1, 8)
-        weights = (2 ** jnp.arange(8, dtype=jnp.uint8)).astype(jnp.uint8)
-        return jnp.sum(b * weights, axis=-1, dtype=jnp.uint8)
-    raise ValueError(wire)
-
-
-def _wire_decode(payload, n: int, wire: str, dtype):
-    """wire payload -> (n,) dtype bits; works on any leading batch dims."""
-    if wire == "f32":
-        return payload.astype(dtype)
-    if wire == "u8":
-        return payload.astype(dtype)
-    if wire == "packed":
-        shifts = jnp.arange(8, dtype=jnp.uint8)
-        bits = (payload[..., :, None] >> shifts) & jnp.uint8(1)
-        bits = bits.reshape(*payload.shape[:-1], -1)
-        return bits[..., :n].astype(dtype)
-    raise ValueError(wire)
+    @property
+    def wire(self) -> wire_mod.SpikeWire:
+        return wire_mod.get_wire(self.spike_wire)
 
 
 @jax.tree_util.register_dataclass
@@ -357,6 +354,7 @@ class DistState:
     prev_bits: jax.Array     # (S, n_local) spikes fired last step (raw)
     t: jax.Array             # (S,) step counter (identical values)
     key: jax.Array           # (S, 2) per-shard PRNG key data
+    wire_overflow: jax.Array  # (S,) cumulative saturated lossy-wire payloads
 
 
 def init_stacked_state(net: StackedNetwork, groups: Sequence[snn.LIFParams],
@@ -382,39 +380,46 @@ def init_stacked_state(net: StackedNetwork, groups: Sequence[snn.LIFParams],
         prev_bits=jnp.zeros((S, net.n_local), dtype),
         t=jnp.zeros((S,), jnp.int32),
         key=jax.random.key_data(keys),
+        wire_overflow=jnp.zeros((S,), jnp.int32),
     )
 
 
-def _exchange(bits, g, cfg: DistributedConfig):
+def _exchange(bits, g, cfg: DistributedConfig, wire: wire_mod.SpikeWire):
     """Map this shard's freshly fired local bits to its mirror rows.
 
-    The wire format is config-selectable: spikes are 1-bit events, so the
-    payload can be packed 32x below the naive f32 bitmap (the same
-    small-message philosophy as the paper's planned BSB library)."""
-    wire = cfg.spike_wire
+    The wire codec is config-selectable (repro.core.wire): spikes are 1-bit
+    events, so the payload can be packed 32x below the naive f32 bitmap or
+    shipped as (count, ids) - CORTEX's Spikes Broadcast of IDs.  Returns
+    ``(mirror_bits, overflow)`` where ``overflow`` counts this step's
+    saturated payloads on a lossy wire (0 on dense wires)."""
     dtype = bits.dtype
     n_local = bits.shape[0]
     if cfg.comm_mode == "global":
-        payload = _wire_encode(bits, wire)
+        payload = wire.encode(bits)
+        overflow = wire.overflow_count(payload)
         all_p = jax.lax.all_gather(payload, axis_name=cfg.axis_names,
                                    tiled=False)              # (S, W)
-        all_bits = _wire_decode(all_p, n_local, wire, dtype)
+        all_bits = wire.decode(all_p, n_local, dtype)
         flat = all_bits.reshape(-1)
         return jnp.take(flat, g["mirror_src_flat"] * n_local
-                        + g["mirror_src_idx"])
+                        + g["mirror_src_idx"]), overflow
     if cfg.comm_mode == "area":
-        payload = _wire_encode(bits, wire)
+        payload = wire.encode(bits)
         row_p = jax.lax.all_gather(payload, axis_name=cfg.inner_axis,
                                    tiled=False)              # (M, W)
-        row_bits = _wire_decode(row_p, n_local, wire, dtype)
-        bbits = jnp.take(bits, g["boundary_slots"])          # (B,)
-        b_payload = _wire_encode(bbits, wire)
+        row_bits = wire.decode(row_p, n_local, dtype)
+        bbits = jnp.take(bits, g["boundary_slots"],          # (B,)
+                         mode="fill", fill_value=0)          # pads -> 0
+        b_payload = wire.encode(bbits)
+        overflow = (wire.overflow_count(payload)
+                    + wire.overflow_count(b_payload))
         remote_p = jax.lax.all_gather(b_payload, axis_name=cfg.axis_names,
                                       tiled=False)           # (S, Wb)
-        remote = _wire_decode(remote_p, bbits.shape[0], wire, dtype)
+        remote = wire.decode(remote_p, bbits.shape[0], dtype)
         intra_val = jnp.take(row_bits.reshape(-1), g["mirror_row_gather"])
         remote_val = jnp.take(remote.reshape(-1), g["mirror_remote_gather"])
-        return jnp.where(g["mirror_is_intra"], intra_val, remote_val)
+        return jnp.where(g["mirror_is_intra"], intra_val,
+                         remote_val), overflow
     raise ValueError(f"unknown comm mode {cfg.comm_mode!r}")
 
 
@@ -441,13 +446,30 @@ def _layout_from_consts(g: dict, n_local: int, n_mirror: int, max_delay: int,
         bucket_ptr=None, blocked=blk)
 
 
-def wire_bytes_per_step(net: StackedNetwork, mode: str = "area",
-                        wire: str = "packed") -> float:
-    """Per-shard spike-exchange bytes per step for a wire encoding."""
-    per = {"f32": 4.0, "u8": 1.0, "packed": 0.125}[wire]
+def wire_bytes_for_dims(mode: str, wire, *, n_shards: int, row_width: int,
+                        n_local: int, b_pad: int) -> int:
+    """Per-shard spike-exchange bytes per step from decomposition dims
+    alone (no StackedNetwork) - the dry-run traffic model.
+
+    ``global``: every shard decodes all S local payloads;
+    ``area``:   M intra-row local payloads + S boundary payloads
+    (the M*n_local + S*B split of DESIGN.md §7, in wire-payload bytes).
+    """
+    w = wire_mod.get_wire(wire)
     if mode == "global":
-        return net.n_shards * net.n_local * per
-    return net.row_width * net.n_local * per + net.n_shards * net.b_pad * per
+        return n_shards * w.bytes_per_step(n_local)
+    if mode == "area":
+        return (row_width * w.bytes_per_step(n_local)
+                + n_shards * w.bytes_per_step(b_pad))
+    raise ValueError(f"unknown comm mode {mode!r}")
+
+
+def wire_bytes_per_step(net: StackedNetwork, mode: str = "area",
+                        wire="packed") -> int:
+    """Per-shard spike-exchange bytes per step for a wire codec."""
+    return wire_bytes_for_dims(mode, wire, n_shards=net.n_shards,
+                               row_width=net.row_width,
+                               n_local=net.n_local, b_pad=net.b_pad)
 
 
 def make_raw_distributed_step(mesh: Mesh, groups: Sequence[snn.LIFParams],
@@ -506,6 +528,7 @@ def _build_step(mesh: Mesh, groups: Sequence[snn.LIFParams],
     table_np = np.asarray(snn.make_param_table(list(groups), cfg.engine.dt))
     D = max_delay
     backend = backends_mod.get_backend(cfg.engine.sweep)
+    wire = cfg.wire
 
     def step_local(g, state: DistState):
         """Body on ONE shard: every array already squeezed to per-shard.
@@ -531,7 +554,7 @@ def _build_step(mesh: Mesh, groups: Sequence[snn.LIFParams],
         layout = _layout_from_consts(g, n_local, n_mirror, D, blocked_meta)
 
         # ---- (1) exchange of last step's spikes (collective starts here) --
-        mirror_prev = _exchange(state.prev_bits, g, cfg)
+        mirror_prev, overflow = _exchange(state.prev_bits, g, cfg, wire)
 
         # ---- (2) synaptic sweep ------------------------------------------
         if cfg.overlap:
@@ -585,7 +608,8 @@ def _build_step(mesh: Mesh, groups: Sequence[snn.LIFParams],
             ref_count=neurons.ref_count, ring=ring, weights=weights,
             k_pre=k_pre, k_post=k_post,
             prev_bits=bits.astype(dtype), t=t + 1,
-            key=jax.random.key_data(key))
+            key=jax.random.key_data(key),
+            wire_overflow=state.wire_overflow + overflow)
         return new_state, bits
 
     # ---- shard_map wrapper ----------------------------------------------

@@ -27,7 +27,9 @@ from jax.sharding import NamedSharding, PartitionSpec as P
 
 from repro.core import snn
 from repro.core.distributed import (DistributedConfig, DistState,
-                                    make_raw_distributed_step)
+                                    make_raw_distributed_step,
+                                    wire_bytes_for_dims)
+from repro.core.wire import sparse_packed_crossover_fraction
 from repro.core.engine import EngineConfig
 from repro.launch.mesh import make_production_mesh
 from repro.utils.hlo_analysis import analyze_hlo
@@ -70,7 +72,7 @@ def state_and_consts_sds(dims, mesh, axes, *, compact: bool = False):
         ref_count=sds((nl,), i32), ring=sds((D, nm), f32),
         weights=sds((e,), f32), k_pre=sds((nm,), f32), k_post=sds((nl,), f32),
         prev_bits=sds((nl,), f32), t=sds((), i32),
-        key=sds((2,), jnp.uint32))
+        key=sds((2,), jnp.uint32), wire_overflow=sds((), i32))
     consts = dict(
         pre_idx=sds((e,), idx_t), post_idx=sds((e,), idx_t),
         delay=sds((e,), small_t), channel=sds((e,), small_t),
@@ -109,11 +111,24 @@ def run_cell(scale: float, multi_pod: bool, wire: str, *, stdp: bool = True,
         state_sds, consts_sds).compile()
     costs = analyze_hlo(compiled.as_text())
     ma = compiled.memory_analysis()
+    # analytic per-shard wire traffic from the codec itself (no graph, no
+    # HLO needed - the same SpikeWire.bytes_per_step the engine accounts
+    # with), vs the packed bitmap on identical dims
+    model_bytes = wire_bytes_for_dims(
+        cfg.comm_mode, wire, n_shards=S, row_width=mesh.shape["model"],
+        n_local=dims["n_local"], b_pad=dims["b_pad"])
+    packed_bytes = wire_bytes_for_dims(
+        cfg.comm_mode, "packed", n_shards=S, row_width=mesh.shape["model"],
+        n_local=dims["n_local"], b_pad=dims["b_pad"])
     rec = dict(
         scale=scale,
         mesh="2x16x16" if multi_pod else "16x16", wire=wire,
         compact=compact, overlap=overlap,
         n_neurons=n_neurons, n_edges_global=n_edges, **dims,
+        wire_model_bytes=model_bytes,
+        wire_vs_packed=round(model_bytes / packed_bytes, 3),
+        crossover_frac=round(
+            sparse_packed_crossover_fraction(dims["n_local"]), 5),
         compile_s=round(time.time() - t0, 1),
         peak_gib=round((ma.argument_size_in_bytes + ma.output_size_in_bytes
                         + ma.temp_size_in_bytes - ma.alias_size_in_bytes)
@@ -137,9 +152,11 @@ def main():
     results = []
     # (wire, compact, overlap): paper-faithful baseline -> each §Perf
     # iteration -> the final optimized config (overlap OFF once the wire
-    # is packed; EXPERIMENTS.md §Perf C3)
+    # is packed; EXPERIMENTS.md §Perf C3) -> the sparse ID wire (CORTEX's
+    # Spikes Broadcast; beats packed below the crossover firing rate)
     variants = (("f32", False, True), ("packed", False, True),
-                ("packed", True, True), ("packed", True, False))
+                ("packed", True, True), ("packed", True, False),
+                ("sparse", True, True))
     for multi_pod in (False, True):
         for scale in (1.0, 4.0):
             for wire, compact, overlap in variants:
@@ -153,7 +170,21 @@ def main():
                       f"c={rec['compute_s']*1e6:8.1f}us "
                       f"m={rec['memory_s']*1e6:8.1f}us "
                       f"n={rec['collective_s']*1e6:8.1f}us "
+                      f"wire_model={rec['wire_model_bytes']}B "
+                      f"({rec['wire_vs_packed']:.2f}x packed) "
                       f"dom={rec['dominant']}", flush=True)
+    # packed<->sparse crossover for the marmoset-scale (scale=1) cells: the
+    # per-step firing fraction (and Hz at the paper's dt) above which the
+    # fixed-capacity ID wire stops beating the 1-bit bitmap
+    dt_ms = 0.1
+    for rec in results:
+        if rec["scale"] == 1.0 and rec["wire"] == "sparse":
+            frac = rec["crossover_frac"]
+            print(f"[{rec['mesh']}] packed<->sparse crossover @ "
+                  f"n_local={rec['n_local']}: firing fraction {frac:.4f}"
+                  f"/step = {frac / (dt_ms * 1e-3):.0f} Hz at dt={dt_ms}ms "
+                  f"(sparse capacity must stay below this to win)",
+                  flush=True)
     os.makedirs(os.path.dirname(args.out) or ".", exist_ok=True)
     with open(args.out, "w") as f:
         json.dump(results, f, indent=1)

@@ -1,35 +1,174 @@
-"""Spike wire codecs: exact roundtrip for every encoding (§Perf C1)."""
+"""SpikeWire codec registry: exact roundtrip for every encoding, payload
+structs, sparse saturation + overflow telemetry, traffic model (§Perf C1,
+DESIGN.md §10)."""
 
+import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
 from _hypothesis_compat import given, settings, st
 
-from repro.core.distributed import _wire_decode, _wire_encode
+from repro.core import wire as wire_mod
+from repro.core.wire import (SparseWire, SpikeWire, available_wires,
+                             get_wire, register_wire,
+                             sparse_packed_crossover_fraction)
+
+# every registered dense wire is lossless for any bit pattern; the sparse
+# codec is lossless iff the step's spike count fits its capacity, so the
+# generic roundtrip uses a full-capacity variant and dedicated tests pin
+# the default "sparse" behavior below/at/above capacity.
+LOSSLESS = ["f32", "u8", "packed", "sparse:1.0"]
 
 
-@pytest.mark.parametrize("wire", ["f32", "u8", "packed"])
+@pytest.mark.parametrize("wire", LOSSLESS)
 @given(st.integers(0, 2**31 - 1), st.integers(1, 300))
 @settings(max_examples=15)
 def test_wire_roundtrip(wire, seed, n):
+    # n ranges over non-multiples of 8 too (packed tail, sparse capacity)
     rng = np.random.default_rng(seed)
     bits = jnp.asarray((rng.uniform(size=n) < 0.3).astype(np.float32))
-    payload = _wire_encode(bits, wire)
-    back = _wire_decode(payload, n, wire, jnp.float32)
+    w = get_wire(wire)
+    payload = w.encode(bits)
+    back = w.decode(payload, n, jnp.float32)
     np.testing.assert_array_equal(np.asarray(back), np.asarray(bits))
 
 
-def test_packed_is_32x_smaller():
-    bits = jnp.ones((1024,), jnp.float32)
-    assert _wire_encode(bits, "packed").nbytes * 32 == bits.nbytes
-    assert _wire_encode(bits, "u8").nbytes * 4 == bits.nbytes
+@pytest.mark.parametrize("wire", ["f32", "u8", "packed", "sparse"])
+@pytest.mark.parametrize("n", [1, 13, 64])
+def test_zero_spike_roundtrip(wire, n):
+    w = get_wire(wire)
+    bits = jnp.zeros((n,), jnp.float32)
+    back = w.decode(w.encode(bits), n, jnp.float32)
+    np.testing.assert_array_equal(np.asarray(back), np.zeros(n))
 
 
-def test_wire_decode_batched():
+@pytest.mark.parametrize("wire", ["f32", "u8", "packed", "sparse"])
+@pytest.mark.parametrize("n", [9, 40, 256])
+def test_payload_struct_matches_encode(wire, n):
+    """payload_struct is the dry-run stand-in: it must agree exactly with
+    what encode emits, and bytes_per_step with the payload's nbytes."""
+    w = get_wire(wire)
+    payload = w.encode(jnp.zeros((n,), jnp.float32))
+    s = w.payload_struct(n)
+    assert payload.shape == s.shape and payload.dtype == s.dtype
+    assert w.bytes_per_step(n) == payload.nbytes
+
+
+@pytest.mark.parametrize("wire", ["packed", "sparse:0.5"])
+def test_wire_decode_batched(wire):
+    """decode handles leading batch dims - the all_gather result shape."""
+    w = get_wire(wire)
     rng = np.random.default_rng(0)
-    rows = [(rng.uniform(size=64) < 0.5).astype(np.float32)
+    rows = [(rng.uniform(size=64) < 0.3).astype(np.float32)
             for _ in range(4)]
-    payloads = jnp.stack([_wire_encode(jnp.asarray(r), "packed")
-                          for r in rows])
-    back = _wire_decode(payloads, 64, "packed", jnp.float32)
+    payloads = jnp.stack([w.encode(jnp.asarray(r)) for r in rows])
+    back = w.decode(payloads, 64, jnp.float32)
     np.testing.assert_array_equal(np.asarray(back), np.stack(rows))
+
+
+def test_packed_is_32x_smaller():
+    n = 1024
+    assert get_wire("packed").bytes_per_step(n) * 32 == \
+        get_wire("f32").bytes_per_step(n)
+    assert get_wire("u8").bytes_per_step(n) * 4 == \
+        get_wire("f32").bytes_per_step(n)
+
+
+def test_sparse_roundtrip_below_capacity():
+    """Default 'sparse' is exact whenever the step fits its capacity."""
+    w = get_wire("sparse")
+    n = 512
+    k = w.capacity(n)
+    rng = np.random.default_rng(3)
+    ids = rng.choice(n, size=k, replace=False)  # exactly at capacity
+    bits = np.zeros(n, np.float32)
+    bits[ids] = 1.0
+    payload = w.encode(jnp.asarray(bits))
+    assert int(w.overflow_count(payload)) == 0
+    back = w.decode(payload, n, jnp.float32)
+    np.testing.assert_array_equal(np.asarray(back), bits)
+
+
+def test_sparse_saturation_at_capacity():
+    """Above capacity: the first K ids ship, the TRUE count rides slot 0,
+    and overflow_count flags the payload - saturation, not corruption."""
+    w = get_wire("sparse")
+    n = 256
+    k = w.capacity(n)
+    fired = 3 * k
+    bits = np.zeros(n, np.float32)
+    bits[:fired] = 1.0
+    payload = w.encode(jnp.asarray(bits))
+    assert int(payload[0]) == fired          # true count survives
+    assert int(w.overflow_count(payload)) == 1
+    back = np.asarray(w.decode(payload, n, jnp.float32))
+    assert back.sum() == k                   # exactly capacity bits decoded
+    assert (back[:k] == 1).all()             # ... and they are real spikes
+    assert (back[k:] == 0).all()
+
+
+def test_sparse_capacity_rules():
+    w = SparseWire(max_rate=0.02, min_capacity=8)
+    assert w.capacity(10_000) == 200         # ceil(200) already /8
+    assert w.capacity(100) == 8              # floor at min_capacity
+    assert w.capacity(4) == 4                # never above n (lossless)
+    assert get_wire("sparse:1.0").capacity(37) == 37
+
+
+def test_dense_wires_never_overflow():
+    for name in ("f32", "u8", "packed"):
+        w = get_wire(name)
+        p = w.encode(jnp.ones((64,), jnp.float32))
+        assert int(w.overflow_count(p)) == 0
+        assert not w.lossy
+    assert get_wire("sparse").lossy
+
+
+def test_sparse_beats_packed_at_two_percent():
+    """The ISSUE's headline number: a sparse wire provisioned for a 2%
+    per-step firing fraction ships fewer bytes than the packed bitmap."""
+    w = get_wire("sparse")
+    assert w.max_rate == 0.02
+    for n in (4096, 65536, 1_000_000):
+        assert w.bytes_per_step(n) < get_wire("packed").bytes_per_step(n)
+
+
+def test_crossover_fraction():
+    """Crossover ~ 1/32 - 1/n: sparse provisioned below it wins, above it
+    loses - checked against the codecs' own byte accounting."""
+    for n in (4096, 65536):
+        f = sparse_packed_crossover_fraction(n)
+        assert abs(f - (1 / 32 - 1 / n)) < 1e-3
+        below = SparseWire(max_rate=f * 0.8)
+        above = SparseWire(max_rate=f * 1.5)
+        packed = get_wire("packed").bytes_per_step(n)
+        assert below.bytes_per_step(n) < packed
+        assert above.bytes_per_step(n) > packed
+
+
+def test_registry():
+    for name in ("f32", "u8", "packed", "sparse"):
+        assert name in available_wires()
+        assert get_wire(name).name == name
+    # parameterized sparse variants resolve (and cache) by name
+    w = get_wire("sparse:0.05")
+    assert isinstance(w, SparseWire) and w.max_rate == 0.05
+    assert get_wire("sparse:0.05") is w
+    # instances pass through
+    assert get_wire(w) is w
+    with pytest.raises(ValueError):
+        get_wire("morse")
+    with pytest.raises(ValueError, match="sparse:<max_rate>"):
+        get_wire("sparse:0..5")
+    with pytest.raises(ValueError, match="\\[0, 1\\]"):
+        get_wire("sparse:-0.5")
+    with pytest.raises(ValueError):
+        register_wire("packed", SpikeWire())
+
+
+def test_sparse_decode_under_jit():
+    w = get_wire("sparse")
+    n = 128
+    f = jax.jit(lambda b: w.decode(w.encode(b), n, jnp.float32))
+    bits = jnp.zeros((n,), jnp.float32).at[jnp.asarray([3, 77])].set(1.0)
+    np.testing.assert_array_equal(np.asarray(f(bits)), np.asarray(bits))

@@ -20,6 +20,7 @@ import numpy as np
 sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
 
 from repro.core import backends, builder, models, snn
+from repro.core.autotune import autotune_report
 from repro.core.layout import blocked_layout
 
 
@@ -72,6 +73,27 @@ def bench_blocked_layout(out, *, quick=False):
             f"edges={g.n_edges};nb={bg.nb};eb={bg.eb}")
 
 
+def bench_autotune(out, *, quick=False):
+    """Chosen (PB, EB) vs the fixed defaults per shard-degree distribution
+    (single-shard and a stacked multi-shard set), with the padded-slot and
+    VMEM model terms that drove the choice."""
+    sizes = ((0.02, 1, "small-1dev"),) if quick else (
+        (0.02, 1, "small-1dev"), (0.1, 1, "medium-1dev"),
+        (0.05, 4, "small-4dev"))
+    for scale, n_dev, tag in sizes:
+        spec, _ = models.hpc_benchmark(scale=scale)
+        shards = builder.build_shards(spec, builder.decompose(spec, n_dev),
+                                      with_blocked=False)
+        rep = autotune_report(shards)
+        out(f"kernel_proxy/autotune/{tag}", rep["padded_slots"],
+            f"pb={rep['pb']};eb={rep['eb']};"
+            f"default=({rep['default_pb']},{rep['default_eb']});"
+            f"slots_vs_default={rep['slots_vs_default']};"
+            f"pad_ratio={rep['pad_ratio']};"
+            f"default_pad_ratio={rep['default_pad_ratio']};"
+            f"vmem_kib={rep['vmem_kib']};feasible={rep['feasible']}")
+
+
 def bench_lif_chain(out, *, quick=False):
     for n in ((4096,) if quick else (4096, 65536)):
         gs = [snn.LIFParams()]
@@ -95,10 +117,15 @@ def bench_lif_chain(out, *, quick=False):
             f"neurons_per_us={n/us:.0f}")
 
 
-def main(out, *, quick: bool = False):
+def main(out, *, quick: bool = False, autotune: bool = False):
+    if autotune:
+        # (PB, EB) table only - chosen vs the fixed defaults
+        bench_autotune(out, quick=quick)
+        return
     bench_sweep_sizes(out, quick=quick)
     bench_lif_chain(out, quick=quick)
     bench_blocked_layout(out, quick=quick)
+    bench_autotune(out, quick=quick)
 
 
 if __name__ == "__main__":
@@ -106,8 +133,11 @@ if __name__ == "__main__":
         description="kernel-path microbenchmarks (CPU-executable proxies)")
     ap.add_argument("--quick", action="store_true",
                     help="tiny config: smallest sizes, few reps (CI smoke)")
+    ap.add_argument("--autotune", action="store_true",
+                    help="print only the chosen (PB, EB) table vs the "
+                         "fixed defaults (repro.core.autotune)")
     args = ap.parse_args()
     print("name,us_per_call,derived")
     main(lambda name, us, derived="": print(f"{name},{us:.2f},{derived}",
                                             flush=True),
-         quick=args.quick)
+         quick=args.quick, autotune=args.autotune)

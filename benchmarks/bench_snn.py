@@ -32,12 +32,14 @@ import sys
 import time
 
 import jax
+import jax.numpy as jnp
 import numpy as np
 
 # allow `python benchmarks/bench_snn.py --backend ...` without PYTHONPATH
 sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
 
-from repro.core import builder, engine, models, snn
+from repro.core import backends as backends_mod
+from repro.core import builder, engine, models, snn, stdp as stdp_mod
 from repro.core.backends import available_backends
 from repro.core.distributed import (DistributedConfig, init_stacked_state,
                                     make_distributed_step, mesh_decompose,
@@ -66,7 +68,10 @@ def bench_step_scaling(out, backends=DEFAULT_BACKENDS, *, quick=False):
         table = snn.make_param_table(list(spec.groups), dt=0.1)
         for sweep in backends:
             cfg = engine.EngineConfig(dt=0.1, stdp=stdp, sweep=sweep)
-            st = engine.init_state(g, list(spec.groups), jax.random.key(0))
+            # native-layout weights: the measured loop is the resident hot
+            # path, not the flat-state compatibility conversion
+            st = engine.init_state(g, list(spec.groups), jax.random.key(0),
+                                   sweep=sweep)
             step = engine.make_step_fn(g, table, cfg)
             st, _ = step(st)  # compile+warm
             t0 = time.perf_counter()
@@ -77,6 +82,113 @@ def bench_step_scaling(out, backends=DEFAULT_BACKENDS, *, quick=False):
             us = (time.perf_counter() - t0) / reps * 1e6
             out(f"snn_step/{sweep}/scale{scale}", us,
                 dict(edges=g.n_edges))
+
+
+def _time(fn, args, reps):
+    r = fn(*args)
+    jax.block_until_ready(jax.tree.leaves(r)[0])
+    t0 = time.perf_counter()
+    for _ in range(reps):
+        r = fn(*args)
+    jax.block_until_ready(jax.tree.leaves(r)[0])
+    return (time.perf_counter() - t0) / reps * 1e6
+
+
+def bench_profile(out, backends=DEFAULT_BACKENDS, *, quick=False):
+    """Per-phase hot-path breakdown: sweep / neuron_update / stdp per
+    execution backend on one shard (weights in the backend's NATIVE layout,
+    as the engine carries them - the loop pays no ``edge_perm``
+    conversion), plus the spike-exchange phase through the real shard_map
+    collective path.  The ``sweep_plus_stdp`` record is the ISSUE's
+    acceptance metric for the fused blocked hot path."""
+    scale = 0.02 if quick else 0.1
+    reps = 5 if quick else 30
+    spec, stdp_params = models.hpc_benchmark(scale=scale, stdp=True)
+    g = builder.build_shards(spec, builder.decompose(spec, 1))[0] \
+        .device_arrays()
+    table = jnp.asarray(snn.make_param_table(list(spec.groups), dt=0.1))
+    rng = np.random.default_rng(0)
+    ring = jnp.asarray((rng.uniform(size=(spec.max_delay, g.n_mirror))
+                        < 0.02).astype(np.float32))
+    spk = jnp.asarray((rng.uniform(size=g.n_local) < 0.05)
+                      .astype(np.float32))
+    neurons = snn.init_state(g.n_local, np.asarray(g.group_id),
+                             list(spec.groups))
+    traces = stdp_mod.init_traces(g.n_mirror, g.n_local, jnp.float32)
+    iex = jnp.asarray(rng.uniform(0, 50, g.n_local).astype(np.float32))
+    iin = jnp.asarray(rng.uniform(-50, 0, g.n_local).astype(np.float32))
+    for name in backends:
+        backend = backends_mod.get_backend(name)
+        layout = backend.prepare(g)
+        w = backend.to_native_weights(layout, g.weight_init)
+        meta = dict(edges=g.n_edges, scale=scale, phase=None)
+
+        sweep = jax.jit(lambda w, ring, t: backend.sweep(layout, w, ring, t))
+        t5 = jnp.asarray(5, jnp.int32)
+        sweep_us = _time(sweep, (w, ring, t5), reps)
+        out(f"snn_profile/{name}/sweep", sweep_us,
+            dict(meta, phase="sweep"))
+
+        nup = jax.jit(lambda n, iex, iin: backend.neuron_update(
+            layout, n, table, iex, iin))
+        out(f"snn_profile/{name}/neuron_update",
+            _time(nup, (neurons, iex, iin), reps),
+            dict(meta, phase="neuron_update"))
+
+        _, _, arrived = sweep(w, ring, t5)
+        supd = jax.jit(lambda w, a, s: backend.stdp_update(
+            layout, w, a, s, traces, stdp_params))
+        stdp_us = _time(supd, (w, arrived, spk), reps)
+        out(f"snn_profile/{name}/stdp", stdp_us,
+            dict(meta, phase="stdp"))
+        out(f"snn_profile/{name}/sweep_plus_stdp", sweep_us + stdp_us,
+            dict(meta, phase="sweep_plus_stdp"))
+    _bench_profile_exchange(out, reps)
+
+
+def _bench_profile_exchange(out, reps):
+    """The exchange phase, isolated: encode -> collective(s) -> decode of
+    the two-level spike exchange on whatever host mesh exists."""
+    from jax.sharding import PartitionSpec as P
+    from repro.core.distributed import _exchange
+    from repro.utils.jax_compat import shard_map
+
+    n_dev = jax.device_count()
+    width = 2 if n_dev % 2 == 0 else 1
+    rows = n_dev // width
+    mesh = jax.make_mesh((rows, width), ("data", "model"))
+    spec = models.marmoset(scale=0.004, n_areas=4)
+    dec = mesh_decompose(spec, rows, width)
+    net = prepare_stacked(spec, dec, rows, width, with_blocked=False)
+    consts = dict(
+        boundary_slots=jnp.asarray(net.boundary_slots),
+        mirror_is_intra=jnp.asarray(net.mirror_is_intra),
+        mirror_row_gather=jnp.asarray(net.mirror_row_gather),
+        mirror_remote_gather=jnp.asarray(net.mirror_remote_gather),
+        mirror_src_flat=jnp.asarray(net.mirror_src_flat),
+        mirror_src_idx=jnp.asarray(net.graph["mirror_src_idx"]),
+    )
+    rng = np.random.default_rng(1)
+    bits = jnp.asarray((rng.uniform(size=(net.n_shards, net.n_local))
+                        < 0.01).astype(np.float32))
+    for mode in ("area", "global"):
+        cfg = DistributedConfig(engine=engine.EngineConfig(dt=0.1),
+                                comm_mode=mode, spike_wire="packed")
+        wire = cfg.wire
+
+        def local(b, g):
+            mirror, _ = _exchange(b[0], {k: v[0] for k, v in g.items()},
+                                  cfg, wire)
+            return mirror[None]
+
+        spec_p = P(("data", "model"))
+        ex = jax.jit(shard_map(local, mesh=mesh,
+                               in_specs=(spec_p, spec_p),
+                               out_specs=spec_p))
+        out(f"snn_profile/exchange/{mode}-packed",
+            _time(ex, (bits, consts), reps),
+            dict(phase="exchange", comm_mode=mode, mesh=f"{rows}x{width}",
+                 wire_bytes_step=wire_bytes_per_step(net, mode, "packed")))
 
 
 def bench_wire_exchange(out, wires=DEFAULT_WIRES,
@@ -137,7 +249,14 @@ def bench_mapping_comparison(out, *, quick=False):
 
 
 def main(out, backend: str | None = None, *, wires=DEFAULT_WIRES,
-         comm_modes=DEFAULT_COMM_MODES, quick: bool = False):
+         comm_modes=DEFAULT_COMM_MODES, quick: bool = False,
+         profile: bool = False):
+    if profile:
+        # per-phase breakdown mode (sweep / neuron_update / stdp /
+        # exchange) - the hot-path drill-down, instead of the scaling axes
+        bench_profile(out, (backend,) if backend else DEFAULT_BACKENDS,
+                      quick=quick)
+        return
     bench_step_scaling(out, (backend,) if backend else DEFAULT_BACKENDS,
                        quick=quick)
     bench_wire_exchange(out, wires, comm_modes, quick=quick)
@@ -149,9 +268,11 @@ if __name__ == "__main__":
         description="SNN engine scaling benchmark with backend, spike-wire "
                     "and comm-mode axes")
     ap.add_argument("--backend", default=None,
-                    choices=sorted(available_backends()),
+                    choices=sorted(set(available_backends())
+                                   | {"pallas:auto"}),
                     help="restrict the step benchmark to one execution "
-                         "backend (default: flat, bucketed and pallas)")
+                         "backend (default: flat, bucketed and pallas; "
+                         "'pallas:auto' runs with autotuned block shapes)")
     ap.add_argument("--spike-wire", default=None,
                     help="restrict the wire benchmark to one codec "
                          "(f32|u8|packed|sparse|sparse:<rate>; default: "
@@ -162,6 +283,10 @@ if __name__ == "__main__":
                          "(default: area and global)")
     ap.add_argument("--quick", action="store_true",
                     help="tiny config: smallest scales, few reps (CI smoke)")
+    ap.add_argument("--profile", action="store_true",
+                    help="per-phase hot-path breakdown (sweep / "
+                         "neuron_update / stdp / exchange) instead of the "
+                         "scaling axes; JSON records carry a 'phase' field")
     ap.add_argument("--json", default="experiments/bench_snn.json",
                     help="write records (incl. wire bytes/step) as JSON; "
                          "'' disables")
@@ -183,7 +308,7 @@ if __name__ == "__main__":
          wires=(args.spike_wire,) if args.spike_wire else DEFAULT_WIRES,
          comm_modes=(args.comm_mode,) if args.comm_mode
          else DEFAULT_COMM_MODES,
-         quick=args.quick)
+         quick=args.quick, profile=args.profile)
     if args.json:
         os.makedirs(os.path.dirname(args.json) or ".", exist_ok=True)
         with open(args.json, "w") as f:

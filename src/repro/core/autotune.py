@@ -1,0 +1,158 @@
+"""(PB, EB) block-shape autotuning from the shard degree distribution.
+
+The post-block ELL layout (DESIGN.md §2) has two free shape parameters:
+``PB`` (post neurons per block = the grid cell's ownership range) and
+``EB`` (padded edges per block).  The fixed defaults (256, 2048) are right
+for the marmoset-like degree distributions the kernels were written
+against, but a shard's real cost is
+
+    padded_slots = NB * EB,   NB = ceil(n_local / PB),
+    EB = roundup(max_b sum(indegree of block b), eb_multiple)
+
+- every padded slot is a gathered, multiplied, reduced lane, so the padding
+overhead IS the sweep time overhead - subject to the sweep kernel's VMEM
+budget per grid cell (the model in the ``synaptic_gather`` docstring)::
+
+    ring        D*M*4          fresh     M*4 (overlap dispatch)
+    edge arrays 5*EB*4         arrivals  EB*4
+    onehot      EB*PB*4        outputs   2*PB*4
+
+Small PB cuts per-block degree spread (less ELL padding) but shrinks the
+MXU one-hot tile and multiplies grid cells; large PB amortizes the ring
+residency but pads every block to the hottest one.  The tuner walks
+lane-aligned PB candidates, prices each by total padded slots, rejects
+shapes whose VMEM footprint exceeds the budget, and breaks ties toward
+larger PB (fewer grid launches).  Uniform multi-shard tuning (the
+distributed engine stacks shards on a device axis, so (NB, EB, PB) must be
+shared) takes the max EB across shards per candidate - exactly the
+``eb_min`` contract of :func:`repro.core.layout.blocked_layout`.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Sequence
+
+import numpy as np
+
+from repro.core.layout import (DEFAULT_EB_MULTIPLE, DEFAULT_PB, blocked_eb)
+
+__all__ = ["BlockShapes", "sweep_vmem_bytes", "autotune_block_shapes",
+           "resolve_block_shapes", "autotune_report", "DEFAULT_PB_CANDIDATES",
+           "DEFAULT_VMEM_BUDGET"]
+
+#: lane-aligned post-block candidates (the one-hot matmul wants PB >= 128)
+DEFAULT_PB_CANDIDATES = (128, 256, 512, 1024)
+#: per-core VMEM the sweep grid cell may claim (~16 MiB on current TPUs,
+#: minus headroom for the compiler's own buffers)
+DEFAULT_VMEM_BUDGET = 14 * 2 ** 20
+
+
+@dataclasses.dataclass(frozen=True)
+class BlockShapes:
+    """One chosen (PB, EB) pair plus the model terms that justified it."""
+
+    pb: int
+    eb: int
+    nb: int                 # grid cells (max across shards when uniform)
+    padded_slots: int       # NB * EB summed over shards (= sweep work)
+    vmem_bytes: int         # kernel footprint under the docstring model
+    feasible: bool          # vmem_bytes <= budget
+
+    def as_tuple(self) -> tuple[int, int]:
+        return self.pb, self.eb
+
+
+def sweep_vmem_bytes(pb: int, eb: int, *, max_delay: int, n_mirror: int,
+                     overlap: bool = True) -> int:
+    """VMEM per grid cell of the fused sweep kernel (f32 everywhere)."""
+    ring = max_delay * n_mirror * 4
+    fresh = n_mirror * 4 if overlap else 0
+    edges = 5 * eb * 4
+    arrivals = eb * 4
+    onehot = eb * pb * 4
+    outputs = 2 * pb * 4
+    return ring + fresh + edges + arrivals + onehot + outputs
+
+
+def _candidates(graphs, pb_candidates, eb_multiple, vmem_budget):
+    D = max(int(g.max_delay) for g in graphs)
+    M = max(int(g.n_mirror) for g in graphs)
+    out = []
+    for pb in pb_candidates:
+        eb = max(blocked_eb(g, pb=pb, eb_multiple=eb_multiple)
+                 for g in graphs)
+        nbs = [max(-(-int(g.n_local) // pb), 1) for g in graphs]
+        slots = sum(nb * eb for nb in nbs)
+        vmem = sweep_vmem_bytes(pb, eb, max_delay=D, n_mirror=M)
+        out.append(BlockShapes(pb=pb, eb=eb, nb=max(nbs),
+                               padded_slots=slots, vmem_bytes=vmem,
+                               feasible=vmem <= vmem_budget))
+    return out
+
+
+def autotune_block_shapes(graphs, *,
+                          pb_candidates: Sequence[int] = DEFAULT_PB_CANDIDATES,
+                          eb_multiple: int = DEFAULT_EB_MULTIPLE,
+                          vmem_budget: int = DEFAULT_VMEM_BUDGET
+                          ) -> BlockShapes:
+    """Pick (PB, EB) for one ShardGraph or a uniform set of them.
+
+    Minimizes total padded edge slots over VMEM-feasible candidates,
+    breaking ties toward larger PB; falls back to the smallest-footprint
+    candidate if nothing fits the budget (the kernel still runs - the
+    compiler spills - but the tuner flags it via ``feasible=False``).
+    """
+    gs = list(graphs) if isinstance(graphs, (list, tuple)) else [graphs]
+    if not gs:
+        raise ValueError("autotune_block_shapes needs at least one shard")
+    cands = _candidates(gs, pb_candidates, eb_multiple, vmem_budget)
+    feasible = [c for c in cands if c.feasible]
+    if feasible:
+        return min(feasible, key=lambda c: (c.padded_slots, -c.pb))
+    return min(cands, key=lambda c: c.vmem_bytes)
+
+
+def resolve_block_shapes(graphs, spec) -> BlockShapes | None:
+    """Normalize a user/backend ``block_shapes`` spec.
+
+    None -> None (keep the builder's layout / fixed defaults);
+    "auto" -> :func:`autotune_block_shapes`; a BlockShapes (or (pb, eb)
+    tuple) passes through pinned.
+    """
+    if spec is None:
+        return None
+    if spec == "auto":
+        return autotune_block_shapes(graphs)
+    if isinstance(spec, BlockShapes):
+        return spec
+    if isinstance(spec, tuple) and len(spec) == 2:
+        pb, eb = int(spec[0]), int(spec[1])
+        return BlockShapes(pb=pb, eb=eb, nb=0, padded_slots=0,
+                           vmem_bytes=0, feasible=True)
+    raise ValueError(f"unknown block_shapes spec {spec!r}")
+
+
+def autotune_report(graphs, **kw) -> dict:
+    """Chosen vs fixed-default shapes with the model terms - the
+    ``bench_kernels --autotune`` table."""
+    gs = list(graphs) if isinstance(graphs, (list, tuple)) else [graphs]
+    chosen = autotune_block_shapes(gs, **kw)
+    eb_multiple = kw.get("eb_multiple", DEFAULT_EB_MULTIPLE)
+    budget = kw.get("vmem_budget", DEFAULT_VMEM_BUDGET)
+    [default] = _candidates(gs, [DEFAULT_PB], eb_multiple, budget)
+    real = sum(int((np.asarray(g.delay) > 0).sum()) for g in gs)
+    return dict(
+        pb=chosen.pb, eb=chosen.eb, nb=chosen.nb,
+        padded_slots=chosen.padded_slots,
+        vmem_kib=chosen.vmem_bytes // 1024,
+        feasible=chosen.feasible,
+        default_pb=default.pb, default_eb=default.eb,
+        default_padded_slots=default.padded_slots,
+        default_vmem_kib=default.vmem_bytes // 1024,
+        real_edges=real,
+        pad_ratio=round(chosen.padded_slots / max(real, 1), 3),
+        default_pad_ratio=round(default.padded_slots / max(real, 1), 3),
+        slots_vs_default=round(
+            chosen.padded_slots / max(default.padded_slots, 1), 3),
+    )

@@ -20,7 +20,9 @@ network description):
 * ``pallas``   - the Pallas TPU kernels (``synaptic_gather``, ``lif_step``,
                  ``stdp_update``) on the post-block ELL layout of
                  :mod:`repro.core.layout`; interpret mode off-TPU, compiled
-                 on TPU.
+                 on TPU.  ``"pallas:auto"`` resolves the same backend with
+                 (PB, EB) autotuned from the shard degree distribution
+                 (:mod:`repro.core.autotune`).
 
 Both the single-shard engine (:mod:`repro.core.engine`) and the distributed
 engine (:mod:`repro.core.distributed`) dispatch through this registry; the
@@ -30,14 +32,25 @@ realize the paper's §III.C communication/computation overlap schedule.
 Layout contract: a backend consumes an :class:`EdgeLayout` built either from
 a ``ShardGraph`` (host side, numpy/jnp constants) or from shard_map-traced
 per-shard arrays (device side).  Static geometry (counts, block shapes)
-must be Python ints in both cases; array fields may be traced.  New
-backends (sparse spike exchange, GPU Triton, multi-host) register with
-:func:`register_backend` and become selectable via ``EngineConfig.sweep``.
+must be Python ints in both cases; array fields may be traced.
+
+Weight/arrivals layout (the blocked-resident hot path): a backend declares
+``weights_layout`` - ``"flat"`` (owner-sorted (E,), the default) or
+``"blocked"`` (the ELL slot order, (NB*EB,)).  Run-time weights live in the
+backend's native layout inside engine/distributed state; ``edge_perm``
+conversions happen only at the build / checkpoint / telemetry boundaries
+(:func:`to_native_weights` / :func:`to_flat_weights`), never per step.
+``sweep`` returns ``arrived`` in the same native order, and
+:meth:`SweepBackend.edge_pre_index` names the per-edge pre index aligned
+with it (trace updates consume the pair).  New backends (GPU Triton,
+multi-host) register with :func:`register_backend` and become selectable
+via ``EngineConfig.sweep``.
 """
 
 from __future__ import annotations
 
 import dataclasses
+import weakref
 from typing import Any
 
 import jax
@@ -53,7 +66,9 @@ from repro.kernels.synaptic_gather import synaptic_gather
 
 __all__ = ["EdgeLayout", "SweepBackend", "FlatBackend", "BucketedBackend",
            "PallasBackend", "register_backend", "get_backend",
-           "available_backends"]
+           "available_backends", "to_native_weights", "to_flat_weights",
+           "flat_edge_values", "layout_tag", "layout_kind",
+           "resolve_runtime_weights"]
 
 
 # --------------------------------------------------------------------------
@@ -80,6 +95,10 @@ class EdgeLayout:
     bucket_ptr: np.ndarray | None = None
     blocked: BlockedGraph | None = None
 
+    @property
+    def n_edges(self) -> int:
+        return int(self.pre_idx.shape[0])
+
 
 def layout_of(graph) -> EdgeLayout:
     """EdgeLayout view of a :class:`repro.core.engine.ShardGraph`."""
@@ -90,6 +109,27 @@ def layout_of(graph) -> EdgeLayout:
         channel=graph.channel, plastic=graph.plastic,
         bucket_ptr=graph.bucket_ptr,
         blocked=getattr(graph, "blocked", None),
+    )
+
+
+def _device_blocked(bg: BlockedGraph) -> BlockedGraph:
+    """Device-resident copy of the blocked static edge arrays.
+
+    Done ONCE in ``prepare`` so traced sweep calls never re-``jnp.asarray``
+    the constants (each call would re-stage a host->device transfer into
+    the jaxpr); build-time-only fields (weight) are dropped.
+    """
+    as_j = lambda a, dt: (None if a is None
+                          else jnp.asarray(np.asarray(a), dtype=dt))
+    return dataclasses.replace(
+        bg,
+        pre_idx=as_j(bg.pre_idx, jnp.int32),
+        post_rel=as_j(bg.post_rel, jnp.int32),
+        delay=as_j(bg.delay, jnp.int32),
+        channel=as_j(bg.channel, jnp.int32),
+        plastic=as_j(bg.plastic, jnp.bool_),
+        edge_perm=as_j(bg.edge_perm, jnp.int32),
+        weight=None,
     )
 
 
@@ -118,6 +158,141 @@ def _flat_arrivals(layout: EdgeLayout, ring, t):
 
 
 # --------------------------------------------------------------------------
+# weight/arrivals layout conversion (build / checkpoint / telemetry only)
+# --------------------------------------------------------------------------
+
+def _require_blocked(layout: EdgeLayout) -> BlockedGraph:
+    if layout.blocked is None:
+        raise ValueError("layout carries no blocked ELL arrays; build "
+                         "graphs via builder.build_shards(with_blocked="
+                         "True) or call PallasBackend.prepare")
+    return layout.blocked
+
+
+def layout_kind(tag: str) -> str:
+    """"flat" / "blocked:256x2048" / "blocked" -> the layout KIND."""
+    return tag.split(":", 1)[0]
+
+
+def layout_tag(layout: EdgeLayout, kind: str) -> str:
+    """Canonical run-time layout tag for state markers.
+
+    "flat" stays "flat"; "blocked" resolves to ``"blocked:{pb}x{eb}"`` so a
+    state built under one (PB, EB) can never be silently stepped under
+    another - equal slot TOTALS with different shapes would apply every
+    weight to the wrong edge otherwise.
+    """
+    if kind == "flat":
+        return "flat"
+    if layout_kind(kind) == "blocked":
+        if kind != "blocked":   # shape-qualified: must name THIS layout
+            _check_blocked_tag(layout, kind)
+        bg = _require_blocked(layout)
+        return f"blocked:{bg.pb}x{bg.eb}"
+    raise ValueError(f"unknown weights layout {kind!r}")
+
+
+def _check_blocked_tag(layout: EdgeLayout, tag: str):
+    """A blocked tag must name THIS layout's block shapes - converting a
+    vector minted under different (PB, EB) through this layout's edge_perm
+    would scramble it."""
+    want = layout_tag(layout, "blocked")
+    if tag not in ("blocked", want):   # bare "blocked" = trust the caller
+        raise ValueError(
+            f"weights carry layout {tag!r} but this graph's blocked layout "
+            f"is {want!r} - different (PB, EB) block shapes; re-express "
+            "through 'flat' with the ORIGINAL layout first")
+
+
+def to_native_weights(layout: EdgeLayout, w_flat, target: str):
+    """Flat owner-sorted weights -> ``target`` layout ("flat"|"blocked").
+
+    Blocked padding slots receive ``w_flat[edge_perm=0]`` garbage; every
+    consumer masks them (sweep by ``delay>0``, STDP by ``plastic``), and
+    :func:`to_flat_weights` drops them on the way back.
+    """
+    kind = layout_kind(target)
+    if kind == "flat":
+        return w_flat
+    if kind == "blocked":
+        _check_blocked_tag(layout, target)
+        bg = _require_blocked(layout)
+        return jnp.take(w_flat, bg.edge_perm.reshape(-1))
+    raise ValueError(f"unknown weights layout {target!r}")
+
+
+def flat_edge_values(layout: EdgeLayout, vals, source: str, *, fill=0):
+    """Per-edge values in ``source`` layout -> FLAT edge order.
+
+    Blocked padding slots are dropped (flat padding edges read ``fill``);
+    flat padding edges (delay==0 tail) also read ``fill`` - they carry no
+    state in either layout.
+    """
+    kind = layout_kind(source)
+    if kind == "flat":
+        return vals
+    if kind == "blocked":
+        _check_blocked_tag(layout, source)
+        bg = _require_blocked(layout)
+        e = layout.n_edges
+        perm = bg.edge_perm.reshape(-1)
+        live = bg.delay.reshape(-1) > 0
+        idx = jnp.where(live, perm, e)          # padding -> dump slot
+        out = jnp.full((e + 1,), fill, vals.dtype).at[idx].set(vals)
+        return out[:e]
+    raise ValueError(f"unknown weights layout {source!r}")
+
+
+def to_flat_weights(layout: EdgeLayout, w, source: str):
+    """Inverse of :func:`to_native_weights` (flat padding slots read 0)."""
+    return flat_edge_values(layout, w, source)
+
+
+def convert_weights(layout: EdgeLayout, w, src: str, dst: str):
+    if layout_kind(src) == layout_kind(dst):
+        if layout_kind(src) == "blocked":   # same kind: shapes must match
+            _check_blocked_tag(layout, src)
+            _check_blocked_tag(layout, dst)
+        return w
+    return to_native_weights(layout, to_flat_weights(layout, w, src), dst)
+
+
+def resolve_runtime_weights(backend: "SweepBackend", layout: EdgeLayout,
+                            weights, state_tag: str):
+    """One shared entry for both engines' per-step weight residency.
+
+    Returns ``(w_native, native_tag, convert_back)``: ``w_native`` in the
+    backend's native layout, and ``convert_back=True`` iff the caller must
+    re-express updated weights as ``state_tag`` to keep its scan carry
+    stable (the flat-state COMPATIBILITY path - one edge gather per
+    direction per step; carry native state to avoid it).
+    """
+    native_tag = layout_tag(layout, backend.weights_layout)
+    if state_tag == native_tag or (state_tag == "blocked"
+                                   and layout_kind(native_tag) == "blocked"):
+        ne = backend.native_edge_count(layout)
+        if weights.shape[0] != ne:
+            raise ValueError(
+                f"state weights have {weights.shape[0]} slots but the "
+                f"{native_tag!r} layout expects {ne} - mismatched block "
+                "shapes; re-express through 'flat' first")
+        return weights, native_tag, False
+    if (layout_kind(state_tag) == "blocked"
+            and layout_kind(native_tag) == "blocked"):
+        raise ValueError(
+            f"state weights carry layout {state_tag!r} but backend "
+            f"{backend.name!r} on this graph expects {native_tag!r} - "
+            "different (PB, EB) block shapes; convert the state to 'flat' "
+            "with the layout it was built under first")
+    # cross-KIND conversion (flat state under a blocked backend, or a
+    # blocked state under a flat backend): both directions go through the
+    # tag-checked converters - a blocked tag minted under different
+    # (PB, EB) than this layout is rejected inside convert_weights
+    w_native = convert_weights(layout, weights, state_tag, native_tag)
+    return w_native, native_tag, True
+
+
+# --------------------------------------------------------------------------
 # backend interface + implementations
 # --------------------------------------------------------------------------
 
@@ -134,18 +309,44 @@ class SweepBackend:
     #: True if sweep() consumes EdgeLayout.blocked - the distributed engine
     #: uses this to decide whether to ship the stacked ELL consts
     needs_blocked: bool = False
+    #: run-time layout of the weight and ``arrived`` vectors this backend's
+    #: sweep/stdp_update consume and produce: "flat" or "blocked".  Engine
+    #: state stores weights in THIS layout; conversions happen only at the
+    #: build/checkpoint/telemetry boundaries (DESIGN.md §9).
+    weights_layout: str = "flat"
 
     def prepare(self, graph) -> EdgeLayout:
         """Build-time: ShardGraph -> the layout this backend consumes."""
         return layout_of(graph)
 
+    # -- run-time edge-vector layout --------------------------------------
+    def native_edge_count(self, layout: EdgeLayout) -> int:
+        """Length of the run-time weight/arrivals vectors."""
+        if self.weights_layout == "blocked":
+            bg = _require_blocked(layout)
+            return bg.nb * bg.eb
+        return layout.n_edges
+
+    def to_native_weights(self, layout: EdgeLayout, w_flat):
+        return to_native_weights(layout, w_flat, self.weights_layout)
+
+    def to_flat_weights(self, layout: EdgeLayout, w):
+        return to_flat_weights(layout, w, self.weights_layout)
+
+    def edge_pre_index(self, layout: EdgeLayout):
+        """Per-edge pre (mirror) index aligned with ``arrived``'s order."""
+        if self.weights_layout == "blocked":
+            return _require_blocked(layout).pre_idx.reshape(-1)
+        return layout.pre_idx
+
     # -- synaptic sweep ---------------------------------------------------
     def sweep(self, layout: EdgeLayout, weights, ring, t):
-        """Accumulate (input_ex, input_in, arrived[E]) for step ``t``.
+        """Accumulate (input_ex, input_in, arrived) for step ``t``.
 
-        ``arrived[e]`` is 1.0 iff edge ``e``'s pre spike arrives exactly
-        now - consumed by both the current accumulation and the STDP
-        depression rule.
+        ``weights`` and the returned ``arrived`` are in ``weights_layout``
+        order; ``arrived[e]`` is 1.0 iff edge ``e``'s pre spike arrives
+        exactly now - consumed by both the current accumulation and the
+        STDP depression rule.
         """
         raise NotImplementedError
 
@@ -176,8 +377,9 @@ class SweepBackend:
     # -- plasticity -------------------------------------------------------
     def stdp_update(self, layout: EdgeLayout, weights, arrived, post_spike,
                     traces, params: stdp_mod.STDPParams):
-        """pl-STDP weight update on owned edges; non-plastic edges pass
-        through unchanged."""
+        """pl-STDP weight update on owned edges (``weights``/``arrived`` in
+        ``weights_layout`` order); non-plastic edges pass through
+        unchanged."""
         new_w = stdp_mod.stdp_edge_update(
             weights, layout.pre_idx, layout.post_idx, arrived, post_spike,
             traces, params)
@@ -270,21 +472,37 @@ class PallasBackend(SweepBackend):
     """Kernel path: post-block ELL sweep on the MXU, fused LIF chain, and
     pl-STDP edge update as Pallas TPU kernels (interpret mode off-TPU).
 
-    Run-time weights stay FLAT in engine state; each step gathers them into
-    blocked slot order via ``BlockedGraph.edge_perm`` so plasticity and
-    checkpointing are layout-agnostic.  Per-edge arrivals for STDP are
-    produced by the same fused ring gather as the flat backend (the kernel
-    only emits the per-neuron reductions).
+    The blocked layout is the RESIDENT hot-path representation: run-time
+    weights live in ELL slot order ((NB*EB,)) in engine/distributed state,
+    the sweep kernel emits the per-edge arrivals from its own fused ring
+    gather (one edge pass per step - no second ring gather for STDP, no
+    per-step ``edge_perm`` re-gather of weights), and the STDP kernel
+    consumes the blocked arrivals/weights directly with block-relative post
+    rows.  ``edge_perm`` conversions run only at build, checkpoint and
+    telemetry boundaries.
+
+    ``block_shapes``: None uses the layout the builder emitted (or the
+    fixed defaults), ``"auto"`` autotunes (PB, EB) from the shard's degree
+    distribution against the sweep kernel's VMEM model
+    (:mod:`repro.core.autotune`), an explicit
+    :class:`repro.core.autotune.BlockShapes` pins them.
     """
 
     name = "pallas"
     needs_blocked = True
+    weights_layout = "blocked"
     #: neuron block for the LIF kernel (lane-aligned)
     lif_nb = 128
 
-    def __init__(self, interpret: bool | None = None):
-        # None -> auto: compiled on TPU, interpreter everywhere else
+    def __init__(self, interpret: bool | None = None, block_shapes=None):
+        # interpret None -> auto: compiled on TPU, interpreter elsewhere
         self.interpret = interpret
+        self.block_shapes = block_shapes
+        # (id(anchor), spec) -> (weakref(anchor), device BlockedGraph);
+        # repeated prepare calls (init_state + make_step_fn + run on one
+        # graph) reuse the same device buffers - and, on the autotuned
+        # path, the same relayout - instead of redoing both per call
+        self._dev_cache: dict[tuple, tuple] = {}
 
     def _interp(self) -> bool:
         if self.interpret is None:
@@ -293,28 +511,69 @@ class PallasBackend(SweepBackend):
 
     def prepare(self, graph) -> EdgeLayout:
         lay = layout_of(graph)
-        if lay.blocked is None:
-            lay = dataclasses.replace(lay, blocked=blocked_layout(graph))
-        return lay
+        # the cache anchor is whatever long-lived host object determines
+        # the result: the prebuilt BlockedGraph if one exists, else the
+        # graph itself (autotuned relayouts are derived from it)
+        anchor = lay.blocked if lay.blocked is not None else graph
+        key = (id(anchor), str(self.block_shapes))
+        hit = self._dev_cache.get(key)
+        if hit is not None and hit[0]() is anchor:
+            return dataclasses.replace(lay, blocked=hit[1])
+        bg = lay.blocked
+        if self.block_shapes is not None:
+            from repro.core.autotune import resolve_block_shapes
+            shapes = resolve_block_shapes(graph, self.block_shapes)
+            # a prebuilt layout already satisfying the resolved shapes is
+            # reused (a wider uniform-stacked EB is still valid); only a
+            # genuine mismatch pays the O(E log E) relayout
+            if shapes is not None and (
+                    bg is None or bg.pb != shapes.pb or bg.eb < shapes.eb):
+                bg = blocked_layout(graph, pb=shapes.pb, eb_min=shapes.eb)
+        if bg is None:
+            bg = blocked_layout(graph)
+        if not isinstance(bg.pre_idx, jax.Array):
+            bg = _device_blocked(bg)
+        try:
+            ref = weakref.ref(anchor)
+        except TypeError:       # non-weakrefable anchor: skip caching
+            return dataclasses.replace(lay, blocked=bg)
+        # drop dead entries on EVERY insert (a dead anchor's device arrays
+        # would otherwise stay pinned in HBM), then hard-bound the rest
+        self._dev_cache = {k: v for k, v in self._dev_cache.items()
+                           if v[0]() is not None}
+        while len(self._dev_cache) >= 64:       # evict oldest live entry
+            self._dev_cache.pop(next(iter(self._dev_cache)))
+        self._dev_cache[key] = (ref, bg)
+        return dataclasses.replace(lay, blocked=bg)
+
+    def _gather(self, layout, weights, ring, t, fresh):
+        bg = _require_blocked(layout)
+        w_blk = weights.astype(jnp.float32).reshape(bg.nb, bg.eb)
+        i_ex, i_in, arrived = synaptic_gather(
+            bg.pre_idx, bg.post_rel, w_blk, bg.delay, bg.channel,
+            ring.astype(jnp.float32), jnp.asarray(t, jnp.int32),
+            max_delay=layout.max_delay, pb=bg.pb, interpret=self._interp(),
+            emit_arrivals=True,
+            fresh=None if fresh is None else fresh.astype(jnp.float32))
+        dtype = ring.dtype
+        return (i_ex[:layout.n_local].astype(dtype),
+                i_in[:layout.n_local].astype(dtype),
+                arrived.reshape(-1).astype(dtype))
 
     def sweep(self, layout, weights, ring, t):
-        bg = layout.blocked
-        if bg is None:
-            raise ValueError("pallas backend needs a blocked layout; build "
-                             "graphs via builder.build_shards or call "
-                             "PallasBackend.prepare")
-        w_blk = jnp.take(weights.astype(jnp.float32),
-                         jnp.asarray(bg.edge_perm))
-        i_ex, i_in = synaptic_gather(
-            jnp.asarray(bg.pre_idx), jnp.asarray(bg.post_rel), w_blk,
-            jnp.asarray(bg.delay), jnp.asarray(bg.channel),
-            ring.astype(jnp.float32), jnp.asarray(t, jnp.int32),
-            max_delay=layout.max_delay, pb=bg.pb, interpret=self._interp())
-        dtype = ring.dtype
-        i_ex = i_ex[:layout.n_local].astype(dtype)
-        i_in = i_in[:layout.n_local].astype(dtype)
-        arrived = _flat_arrivals(layout, ring, t)
-        return i_ex, i_in, arrived
+        return self._gather(layout, weights, ring, t, None)
+
+    def sweep_overlap(self, layout, weights, ring, t, fresh_bits):
+        # One dispatch serves the §III.C split: the kernel reads delay>=2
+        # arrivals from the OLD ring and delay==1 from ``fresh_bits``, so
+        # the slot-(t-1) ring write below is independent of the sweep (XLA
+        # updates it in place instead of materializing a pre-sweep copy)
+        # and only the delay-1 term waits on the exchange collective.
+        ex, inh, arrived = self._gather(layout, weights, ring, t,
+                                        fresh_bits)
+        ring = jax.lax.dynamic_update_index_in_dim(
+            ring, fresh_bits, jnp.mod(t - 1, layout.max_delay), axis=0)
+        return ex, inh, arrived, ring
 
     def neuron_update(self, layout, neurons, table, input_ex, input_in, *,
                       synapse_model: str = snn.SynapseModel.CURRENT_EXP):
@@ -341,22 +600,25 @@ class PallasBackend(SweepBackend):
 
     def stdp_update(self, layout, weights, arrived, post_spike, traces,
                     params: stdp_mod.STDPParams):
-        e = weights.shape[0]
-        from repro.kernels.stdp_update import DEFAULT_EB
-        eb = DEFAULT_EB if e >= DEFAULT_EB else ((e + 127) // 128) * 128
-        pad = (-e) % eb
-        p = lambda a: jnp.pad(a, (0, pad)) if pad else a
+        bg = _require_blocked(layout)
+        if bg.plastic is None:
+            raise ValueError(
+                "blocked layout lacks the plastic mask (ship the "
+                "blk_plastic const alongside the other blk_* arrays) - "
+                "required by the blocked-resident STDP kernel")
+        # blocked-resident path: weights/arrived already in ELL slot order,
+        # post rows block-relative - zero layout conversion, one grid cell
+        # per post block (race-free by eq. 14)
         new_w = stdp_update_kernel(
-            p(weights.astype(jnp.float32)), p(layout.pre_idx),
-            p(layout.post_idx), p(layout.plastic),
-            p(arrived.astype(jnp.float32)),
+            weights.astype(jnp.float32), bg.pre_idx.reshape(-1),
+            bg.post_rel.reshape(-1), bg.plastic.reshape(-1),
+            arrived.astype(jnp.float32),
             post_spike.astype(jnp.float32),
             traces.k_pre.astype(jnp.float32),
             traces.k_post.astype(jnp.float32),
             params=(params.lam, params.alpha, params.mu, params.w0,
                     params.w_min, params.w_max),
-            eb=eb, interpret=self._interp())
-        new_w = new_w[:e] if pad else new_w
+            eb=bg.eb, pb=bg.pb, interpret=self._interp())
         return new_w.astype(weights.dtype)
 
 
@@ -375,13 +637,22 @@ def register_backend(name: str, backend: SweepBackend,
     _REGISTRY[name] = backend
 
 
-def get_backend(name: str) -> SweepBackend:
-    try:
+def get_backend(name) -> SweepBackend:
+    if isinstance(name, SweepBackend):
+        return name
+    if name in _REGISTRY:
         return _REGISTRY[name]
-    except KeyError:
-        raise ValueError(
-            f"unknown sweep backend {name!r}; available: "
-            f"{sorted(_REGISTRY)}") from None
+    # parameterized variants resolve (and cache) on first use, the same
+    # move as the "sparse:<rate>" wire names (DESIGN.md §10)
+    if isinstance(name, str) and name.startswith("pallas:"):
+        mode = name.split(":", 1)[1]
+        if mode == "auto":
+            backend = PallasBackend(block_shapes="auto")
+            _REGISTRY[name] = backend
+            return backend
+    raise ValueError(
+        f"unknown sweep backend {name!r}; available: "
+        f"{sorted(_REGISTRY)}") from None
 
 
 def available_backends() -> tuple[str, ...]:

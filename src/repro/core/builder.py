@@ -179,7 +179,8 @@ def _generate_projection_edges(spec: NetworkSpec, pi: int,
 def build_shards(spec: NetworkSpec, dec: Decomposition, *,
                  pad_to_multiple: int = 8,
                  uniform_pad: bool = True,
-                 with_blocked: bool = True) -> list[ShardGraph]:
+                 with_blocked: bool = True,
+                 block_shapes=None) -> list[ShardGraph]:
     """Generate every projection's edges, route them to owner shards, and
     emit one delay-sorted padded ShardGraph per device.
 
@@ -192,7 +193,15 @@ def build_shards(spec: NetworkSpec, dec: Decomposition, *,
     backend is selectable without a separate conversion pass.  Shards built
     for stacking share one blocked shape: a first pass finds the widest
     per-block edge count, the second pads every shard to it.
+    ``block_shapes`` picks the (PB, EB) pair: None keeps the fixed
+    defaults, ``"auto"`` autotunes them from the shards' degree
+    distribution (:mod:`repro.core.autotune`), an explicit ``BlockShapes``
+    (or ``(pb, eb)`` tuple) pins them.
     """
+    if block_shapes is not None and not with_blocked:
+        raise ValueError("block_shapes has no effect with "
+                         "with_blocked=False - drop it or build the "
+                         "blocked layout")
     n_dev = dec.n_devices
     off = spec.pop_offsets()
     group_of = spec.group_of()
@@ -317,7 +326,24 @@ def build_shards(spec: NetworkSpec, dec: Decomposition, *,
         # one (NB, EB) shape across shards so the distributed engine can
         # stack the blocked arrays on a leading device axis; the widest
         # shard is found with a counts-only pass so each shard converts once
-        eb_min = max(blocked_eb(g) for g in shards) if uniform_pad else 0
+        from repro.core.autotune import resolve_block_shapes
+        shapes = resolve_block_shapes(shards, block_shapes)
+        if shapes is None:
+            pb_kw = {}
+            eb_min = max(blocked_eb(g) for g in shards) if uniform_pad else 0
+        else:
+            pb_kw = dict(pb=shapes.pb)
+            eb_min = shapes.eb
+            if uniform_pad:
+                # a pinned EB smaller than the widest shard's need would
+                # silently widen only that shard and break device-axis
+                # stacking later - fail here with the actual requirement
+                need = max(blocked_eb(g, pb=shapes.pb) for g in shards)
+                if eb_min < need:
+                    raise ValueError(
+                        f"block_shapes eb={eb_min} is below the widest "
+                        f"shard's per-block edge count {need} at "
+                        f"pb={shapes.pb} - raise eb (or use 'auto')")
         shards = [dataclasses.replace(g, blocked=blocked_layout(
-            g, eb_min=eb_min)) for g in shards]
+            g, eb_min=eb_min, **pb_kw)) for g in shards]
     return shards

@@ -190,6 +190,11 @@ class StackedNetwork:
     # static blocked-layout geometry (nb, eb, pb) when graph carries the
     # stacked ELL arrays blk_* for the pallas backend; None otherwise
     blocked_meta: tuple[int, int, int] | None = None
+    # how the baked shapes were chosen (the prepare_stacked block_shapes
+    # arg: None = fixed defaults, "auto" = autotuned, or a pinned spec) -
+    # lets make_distributed_step warn ONLY when a shape-tuning backend is
+    # paired with an untuned net
+    block_shapes_spec: Any = None
 
     # per-shard per-step spike traffic (DESIGN.md §2/§10).  The fp32-bitmap
     # figures are kept as the mapping-quality metric (they count exchanged
@@ -207,15 +212,18 @@ class StackedNetwork:
 def prepare_stacked(spec: NetworkSpec, dec: Decomposition,
                     n_rows: int, row_width: int, *,
                     pad_to_multiple: int = 8,
-                    with_blocked: bool = True) -> StackedNetwork:
+                    with_blocked: bool = True,
+                    block_shapes=None) -> StackedNetwork:
     """Build uniform shards and the area/remote exchange index tables.
 
     ``with_blocked=False`` skips building/stacking the post-block ELL
     arrays (saves build time + host memory) for runs that will never select
-    the pallas backend.
+    the pallas backend.  ``block_shapes`` (None | "auto" | BlockShapes)
+    picks the shared (PB, EB) pair - see ``builder.build_shards``.
     """
     shards = build_shards(spec, dec, pad_to_multiple=pad_to_multiple,
-                          uniform_pad=True, with_blocked=with_blocked)
+                          uniform_pad=True, with_blocked=with_blocked,
+                          block_shapes=block_shapes)
     S = len(shards)
     assert S == n_rows * row_width
     n_local = shards[0].n_local
@@ -300,13 +308,14 @@ def prepare_stacked(spec: NetworkSpec, dec: Decomposition,
             blk_post_rel=bstack("post_rel"),
             blk_delay=bstack("delay"),
             blk_channel=bstack("channel"),
+            blk_plastic=bstack("plastic"),
             blk_edge_perm=bstack("edge_perm"),
         )
 
     return StackedNetwork(
         n_shards=S, row_width=row_width, n_local=n_local, n_mirror=n_mirror,
         n_edges=n_edges, b_pad=b_pad, max_delay=spec.max_delay, graph=graph,
-        blocked_meta=blocked_meta,
+        blocked_meta=blocked_meta, block_shapes_spec=block_shapes,
         boundary_slots=boundary_slots, mirror_is_intra=mirror_is_intra,
         mirror_row_gather=mirror_row_gather,
         mirror_remote_gather=mirror_remote_gather,
@@ -339,7 +348,6 @@ class DistributedConfig:
         return wire_mod.get_wire(self.spike_wire)
 
 
-@jax.tree_util.register_dataclass
 @dataclasses.dataclass
 class DistState:
     """Scan-carried state; every leaf is (S, ...) sharded on axis 0."""
@@ -348,39 +356,68 @@ class DistState:
     syn_in: jax.Array
     ref_count: jax.Array
     ring: jax.Array          # (S, D, n_mirror)
-    weights: jax.Array       # (S, E)
+    weights: jax.Array       # (S, E) flat or (S, NB*EB) blocked - see marker
     k_pre: jax.Array
     k_post: jax.Array
     prev_bits: jax.Array     # (S, n_local) spikes fired last step (raw)
     t: jax.Array             # (S,) step counter (identical values)
     key: jax.Array           # (S, 2) per-shard PRNG key data
     wire_overflow: jax.Array  # (S,) cumulative saturated lossy-wire payloads
+    #: static marker: layout of ``weights`` - "flat" or a shape-qualified
+    #: blocked tag "blocked:{pb}x{eb}" (backends.layout_tag); pytree
+    #: metadata so blocked-resident state is never misread as flat nor
+    #: stepped under different (PB, EB) block shapes
+    weights_layout: str = "flat"
+
+
+jax.tree_util.register_dataclass(
+    DistState,
+    data_fields=["v_m", "syn_ex", "syn_in", "ref_count", "ring", "weights",
+                 "k_pre", "k_post", "prev_bits", "t", "key",
+                 "wire_overflow"],
+    meta_fields=["weights_layout"])
 
 
 def init_stacked_state(net: StackedNetwork, groups: Sequence[snn.LIFParams],
                        seed: int = 0, dtype=jnp.float32,
-                       weight_dtype=None) -> DistState:
+                       weight_dtype=None, sweep: str | None = None
+                       ) -> DistState:
     """``weight_dtype`` may be narrower than the neuron dtype (bf16) for
     non-plastic evaluation runs - weights are the largest per-edge stream
-    (§Perf C4)."""
+    (§Perf C4).  ``sweep`` (a backend name) stores the weights in that
+    backend's native layout up front (blocked ELL slot order for pallas) so
+    the distributed step never pays a per-step ``edge_perm`` conversion;
+    without it the state is flat and the step converts at trace time."""
     S = net.n_shards
     e_l = np.asarray([g.e_l for g in groups], dtype=np.float64)
     gid = np.asarray(net.graph["group_id"])
     keys = jax.random.split(jax.random.key(seed), S)
+    weights = np.asarray(net.graph["weight_init"])
+    weights_layout = "flat"
+    if sweep is not None and backends_mod.get_backend(
+            sweep).weights_layout == "blocked":
+        if net.blocked_meta is None:
+            raise ValueError(
+                f"sweep={sweep!r} stores blocked-resident weights; build "
+                "the StackedNetwork with prepare_stacked(with_blocked=True)")
+        perm = np.asarray(net.graph["blk_edge_perm"]).reshape(S, -1)
+        weights = np.take_along_axis(weights, perm, axis=1)
+        nb, eb, pb = net.blocked_meta
+        weights_layout = f"blocked:{pb}x{eb}"
     return DistState(
         v_m=jnp.asarray(e_l[gid], dtype),
         syn_ex=jnp.zeros((S, net.n_local), dtype),
         syn_in=jnp.zeros((S, net.n_local), dtype),
         ref_count=jnp.zeros((S, net.n_local), jnp.int32),
         ring=jnp.zeros((S, net.max_delay, net.n_mirror), dtype),
-        weights=jnp.asarray(net.graph["weight_init"],
-                            weight_dtype or dtype),
+        weights=jnp.asarray(weights, weight_dtype or dtype),
         k_pre=jnp.zeros((S, net.n_mirror), dtype),
         k_post=jnp.zeros((S, net.n_local), dtype),
         prev_bits=jnp.zeros((S, net.n_local), dtype),
         t=jnp.zeros((S,), jnp.int32),
         key=jax.random.key_data(keys),
         wire_overflow=jnp.zeros((S,), jnp.int32),
+        weights_layout=weights_layout,
     )
 
 
@@ -438,6 +475,7 @@ def _layout_from_consts(g: dict, n_local: int, n_mirror: int, max_delay: int,
                            pre_idx=g["blk_pre_idx"],
                            post_rel=g["blk_post_rel"],
                            delay=g["blk_delay"], channel=g["blk_channel"],
+                           plastic=g.get("blk_plastic"),
                            edge_perm=g["blk_edge_perm"])
     return backends_mod.EdgeLayout(
         n_local=n_local, n_mirror=n_mirror, max_delay=max_delay,
@@ -483,7 +521,8 @@ def make_raw_distributed_step(mesh: Mesh, groups: Sequence[snn.LIFParams],
             and blocked_meta is None):
         raise ValueError(
             f"sweep={cfg.engine.sweep!r} on the raw step needs "
-            "blocked_meta=(nb, eb, pb) plus blk_* entries in the consts")
+            "blocked_meta=(nb, eb, pb) plus blk_* entries in the consts "
+            "(incl. blk_plastic) and blocked-resident state weights")
     return _build_step(mesh, groups, cfg, max_delay, n_local, n_mirror,
                        blocked_meta)
 
@@ -497,11 +536,24 @@ def make_distributed_step(net: StackedNetwork, mesh: Mesh,
     constants.  The returned function is shard_map'ed over the mesh and can
     be scanned or called per-step.
     """
-    needs_blocked = backends_mod.get_backend(cfg.engine.sweep).needs_blocked
+    backend = backends_mod.get_backend(cfg.engine.sweep)
+    needs_blocked = backend.needs_blocked
     if needs_blocked and net.blocked_meta is None:
         raise ValueError(
             f"sweep={cfg.engine.sweep!r} needs a StackedNetwork built with "
             "blocked layouts (prepare_stacked with_blocked=True)")
+    if (getattr(backend, "block_shapes", None) is not None
+            and net.block_shapes_spec is None):
+        # stacked blk_* consts are baked at build time; a backend-side
+        # block_shapes spec (e.g. "pallas:auto") cannot retune them here -
+        # the distributed path tunes through prepare_stacked(block_shapes=).
+        # A net that WAS built with a block_shapes spec stays silent.
+        import warnings
+        warnings.warn(
+            f"sweep={cfg.engine.sweep!r}: the distributed step uses the "
+            f"StackedNetwork's baked block shapes {net.blocked_meta}; pass "
+            "block_shapes to prepare_stacked/build_shards to autotune "
+            "them", stacklevel=2)
     smapped = _build_step(mesh, groups, cfg, net.max_delay, net.n_local,
                           net.n_mirror,
                           net.blocked_meta if needs_blocked else None)
@@ -543,7 +595,9 @@ def _build_step(mesh: Mesh, groups: Sequence[snn.LIFParams],
         g = dict(g)
         for k in ("pre_idx", "post_idx", "delay", "channel",
                   "mirror_src_idx", "boundary_slots", "mirror_row_gather",
-                  "mirror_remote_gather", "mirror_src_flat"):
+                  "mirror_remote_gather", "mirror_src_flat",
+                  "blk_pre_idx", "blk_post_rel", "blk_delay",
+                  "blk_channel", "blk_edge_perm"):
             if k in g and g[k].dtype != jnp.int32:
                 g[k] = g[k].astype(jnp.int32)
         # neuron-state dtype drives the math; WEIGHTS may be stored
@@ -552,6 +606,14 @@ def _build_step(mesh: Mesh, groups: Sequence[snn.LIFParams],
         dtype = state.v_m.dtype
         t = state.t
         layout = _layout_from_consts(g, n_local, n_mirror, D, blocked_meta)
+
+        # weights in the backend's native layout; converting here is the
+        # compatibility path (state built without ``sweep=``) and costs one
+        # edge gather per direction per step - init_stacked_state(sweep=...)
+        # carries native state and skips both.  The shared resolver also
+        # rejects a state minted under different (PB, EB) block shapes.
+        w_native, native_tag, convert = backends_mod.resolve_runtime_weights(
+            backend, layout, state.weights, state.weights_layout)
 
         # ---- (1) exchange of last step's spikes (collective starts here) --
         mirror_prev, overflow = _exchange(state.prev_bits, g, cfg, wire)
@@ -562,14 +624,14 @@ def _build_step(mesh: Mesh, groups: Sequence[snn.LIFParams],
             # collective) from delay == 1 (the fresh exchange) when it can;
             # otherwise it degrades to write-then-sweep
             input_ex, input_in, arrived, ring = backend.sweep_overlap(
-                layout, state.weights, state.ring, t, mirror_prev)
+                layout, w_native, state.ring, t, mirror_prev)
         else:
             # naive schedule: write first, then one full sweep (the sweep
             # then depends on the collective - no overlap possible)
             ring = jax.lax.dynamic_update_index_in_dim(
                 state.ring, mirror_prev, jnp.mod(t - 1, D), axis=0)
             input_ex, input_in, arrived = backend.sweep(
-                layout, state.weights, ring, t)
+                layout, w_native, ring, t)
 
         # ---- (3) external drive + neuron dynamics ------------------------
         key = jax.random.wrap_key_data(state.key)
@@ -593,15 +655,22 @@ def _build_step(mesh: Mesh, groups: Sequence[snn.LIFParams],
         if cfg.engine.stdp is not None:
             traces = stdp_mod.TraceState(k_pre=state.k_pre,
                                          k_post=state.k_post)
-            weights = backend.stdp_update(layout, state.weights, arrived,
+            weights = backend.stdp_update(layout, w_native, arrived,
                                           bits, traces, cfg.engine.stdp)
-            pre_arr = jax.ops.segment_max(arrived, g["pre_idx"],
-                                          num_segments=n_mirror)
+            pre_arr = jax.ops.segment_max(
+                arrived, backend.edge_pre_index(layout),
+                num_segments=n_mirror)
             traces = stdp_mod.update_traces(traces, cfg.engine.stdp,
                                             cfg.engine.dt, pre_arr, bits)
             k_pre, k_post = traces.k_pre, traces.k_post
+            if convert:  # scan carry keeps the state's own layout
+                weights = backends_mod.convert_weights(
+                    layout, weights, native_tag, state.weights_layout)
         else:
-            weights, k_pre, k_post = state.weights, state.k_pre, state.k_post
+            # weights unchanged: carry the state's own vector (a round-trip
+            # would cost two edge passes and zero flat padding slots)
+            weights, k_pre, k_post = (state.weights, state.k_pre,
+                                      state.k_post)
 
         new_state = DistState(
             v_m=neurons.v_m, syn_ex=neurons.syn_ex, syn_in=neurons.syn_in,
@@ -609,7 +678,8 @@ def _build_step(mesh: Mesh, groups: Sequence[snn.LIFParams],
             k_pre=k_pre, k_post=k_post,
             prev_bits=bits.astype(dtype), t=t + 1,
             key=jax.random.key_data(key),
-            wire_overflow=state.wire_overflow + overflow)
+            wire_overflow=state.wire_overflow + overflow,
+            weights_layout=state.weights_layout)
         return new_state, bits
 
     # ---- shard_map wrapper ----------------------------------------------

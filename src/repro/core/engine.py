@@ -30,8 +30,19 @@ execution-backend registry of :mod:`repro.core.backends` (DESIGN.md §9):
 ``EngineConfig.sweep`` selects ``"flat"`` (fused gather + segment_sum, the
 TPU/XLA-idiomatic form), ``"bucketed"`` (the paper's literal low-to-high
 delay sweep, the structural cross-check), or ``"pallas"`` (the TPU kernels
-on the post-block ELL layout; interpret mode off-TPU).  Tests assert the
-three produce identical spike trajectories.
+on the post-block ELL layout; interpret mode off-TPU; ``"pallas:auto"``
+autotunes the block shapes).  Tests assert the three produce identical
+spike trajectories.
+
+Run-time weights live in the backend's native layout
+(``EngineState.weights_layout``: flat owner-sorted for flat/bucketed, ELL
+slot order for pallas) so the hot path never pays a per-step ``edge_perm``
+conversion; the public API stays FLAT-facing - ``init_state`` defaults to
+flat, ``run`` returns flat weights, and :func:`state_with_weights_layout`
+converts at the checkpoint/telemetry boundary.  ``engine_step`` accepts
+either layout and converts at trace time only when state and backend
+disagree (the compatibility path; pass ``sweep=`` to ``init_state`` to
+avoid it in hand-rolled step loops).
 
 Writes are conflict-free by construction: every backend reduces over
 owner-sorted ``post_idx`` rows it exclusively owns - the vector analogue of
@@ -52,7 +63,8 @@ from repro.core import snn
 from repro.core import stdp as stdp_mod
 
 __all__ = ["ShardGraph", "EngineConfig", "EngineState", "init_state",
-           "engine_step", "run", "synaptic_sweep"]
+           "engine_step", "run", "synaptic_sweep",
+           "state_with_weights_layout"]
 
 
 @dataclasses.dataclass(frozen=True)
@@ -115,29 +127,71 @@ class EngineConfig:
     record_spikes: bool = True
 
 
-@jax.tree_util.register_dataclass
 @dataclasses.dataclass
 class EngineState:
     neurons: snn.NeuronState
     ring: jax.Array          # (D, n_mirror) float32 spike bits
-    weights: jax.Array       # (E,)
+    weights: jax.Array       # (E,) flat or (NB*EB,) blocked - see marker
     traces: stdp_mod.TraceState
     t: jax.Array             # () int32 step counter
     key: jax.Array           # PRNG key for stochastic drive
+    #: static marker: layout of ``weights`` - "flat" or a shape-qualified
+    #: blocked tag like "blocked:256x2048" (backends.layout_tag).  Pytree
+    #: metadata, so a blocked-resident state can never be silently misread
+    #: as flat NOR stepped under different (PB, EB) block shapes (equal
+    #: slot totals with different shapes would scramble every edge)
+    weights_layout: str = "flat"
+
+
+jax.tree_util.register_dataclass(
+    EngineState,
+    data_fields=["neurons", "ring", "weights", "traces", "t", "key"],
+    meta_fields=["weights_layout"])
 
 
 def init_state(graph: ShardGraph, groups: list[snn.LIFParams],
-               key: jax.Array, *, dtype=jnp.float32) -> EngineState:
+               key: jax.Array, *, dtype=jnp.float32,
+               sweep: str | None = None) -> EngineState:
+    """Fresh engine state.  ``sweep`` (a backend name) stores the weights in
+    that backend's native layout up front - hand-rolled ``make_step_fn``
+    loops then never pay the per-step layout conversion; without it the
+    state is flat and ``engine_step``/``run`` convert at the boundary."""
     neurons = snn.init_state(graph.n_local, np.asarray(graph.group_id),
                              groups, dtype=dtype)
+    weights = jnp.asarray(graph.weight_init, dtype=dtype)
+    weights_layout = "flat"
+    if sweep is not None:
+        backend = backends_mod.get_backend(sweep)
+        if backend.weights_layout != "flat":
+            layout = backend.prepare(graph)
+            weights = backend.to_native_weights(layout, weights)
+            weights_layout = backends_mod.layout_tag(
+                layout, backend.weights_layout)
     return EngineState(
         neurons=neurons,
         ring=jnp.zeros((graph.max_delay, graph.n_mirror), dtype=dtype),
-        weights=jnp.asarray(graph.weight_init, dtype=dtype),
+        weights=weights,
         traces=stdp_mod.init_traces(graph.n_mirror, graph.n_local, dtype),
         t=jnp.zeros((), jnp.int32),
         key=key,
+        weights_layout=weights_layout,
     )
+
+
+def state_with_weights_layout(state: EngineState, graph: ShardGraph,
+                              target: str = "flat", *,
+                              backend=None) -> EngineState:
+    """Checkpoint/telemetry boundary: re-express ``state.weights`` in
+    ``target`` layout ("flat" or "blocked").  The conversion runs through
+    ``edge_perm`` exactly once; everything else is untouched."""
+    layout = (backend.prepare(graph) if backend is not None
+              else backends_mod.layout_of(graph))
+    tag = backends_mod.layout_tag(layout, target)
+    if state.weights_layout == tag:
+        return state
+    w = backends_mod.convert_weights(layout, state.weights,
+                                     state.weights_layout, tag)
+    return dataclasses.replace(state, weights=w, weights_layout=tag)
 
 
 def synaptic_sweep(graph: ShardGraph, weights: jax.Array, ring: jax.Array,
@@ -145,11 +199,20 @@ def synaptic_sweep(graph: ShardGraph, weights: jax.Array, ring: jax.Array,
     """Accumulate (input_ex, input_in, arrived[E]) for step ``t`` through the
     ``mode`` backend (see :mod:`repro.core.backends`).
 
-    ``arrived[e]`` is 1.0 iff edge ``e``'s pre spike arrives exactly now -
-    consumed by both the current accumulation and the STDP depression rule.
+    Flat-facing convenience wrapper: ``weights`` and the returned
+    ``arrived`` are in FLAT edge order regardless of the backend's native
+    layout (the hot path proper keeps everything native; this entry point
+    converts at both ends).  ``arrived[e]`` is 1.0 iff edge ``e``'s pre
+    spike arrives exactly now - consumed by both the current accumulation
+    and the STDP depression rule.
     """
     backend = backends_mod.get_backend(mode)
-    return backend.sweep(backend.prepare(graph), weights, ring, t)
+    layout = backend.prepare(graph)
+    w = backend.to_native_weights(layout, weights)
+    ex, inh, arrived = backend.sweep(layout, w, ring, t)
+    arrived = backends_mod.flat_edge_values(layout, arrived,
+                                            backend.weights_layout)
+    return ex, inh, arrived
 
 
 def _poisson_drive(key, graph: ShardGraph, dt: float, dtype):
@@ -175,9 +238,18 @@ def engine_step(state: EngineState, graph: ShardGraph, table: jax.Array,
     if layout is None:
         layout = backend.prepare(graph)
 
+    # weights in the backend's native layout; converting here is the
+    # COMPATIBILITY path (state built without ``sweep=``) - it costs one
+    # edge gather per direction per step, so steady-state loops should
+    # carry native state (init_state(sweep=...) / run() do).  The shared
+    # resolver also rejects a blocked state minted under different
+    # (PB, EB) block shapes than this backend's layout.
+    w_native, native_tag, convert = backends_mod.resolve_runtime_weights(
+        backend, layout, state.weights, state.weights_layout)
+
     # (1) synaptic sweep over owned edges
     input_ex, input_in, arrived = backend.sweep(
-        layout, state.weights, state.ring, state.t)
+        layout, w_native, state.ring, state.t)
 
     # (2) external stochastic drive
     key, sub = jax.random.split(state.key)
@@ -192,16 +264,24 @@ def engine_step(state: EngineState, graph: ShardGraph, table: jax.Array,
     # (4) plasticity: weights first (traces exclude this step's spikes:
     #     all-pairs convention), then trace update.
     if cfg.stdp is not None:
-        weights = backend.stdp_update(layout, state.weights, arrived,
+        weights = backend.stdp_update(layout, w_native, arrived,
                                       spike_bits, state.traces, cfg.stdp)
         # pre trace is indexed by ARRIVAL at the mirror (axonal delay folded
         # in by reading the ring), so increment it with arrivals mapped back
-        # to mirrors; post trace with this step's spikes.
+        # to mirrors (through the pre index matching ``arrived``'s layout);
+        # post trace with this step's spikes.
         pre_arrived_mirror = jax.ops.segment_max(
-            arrived, graph.pre_idx, num_segments=graph.n_mirror)
+            arrived, backend.edge_pre_index(layout),
+            num_segments=graph.n_mirror)
         traces = stdp_mod.update_traces(
             state.traces, cfg.stdp, cfg.dt, pre_arrived_mirror, spike_bits)
+        if convert:  # keep the carried layout stable for scan/loop callers
+            weights = backends_mod.convert_weights(
+                layout, weights, native_tag, state.weights_layout)
     else:
+        # weights unchanged: carry the state's own vector (never the
+        # round-tripped one - that would cost two edge passes and zero the
+        # flat padding slots)
         weights, traces = state.weights, state.traces
 
     # (5) write this step's spikes into the ring at slot t % D.  In the
@@ -213,7 +293,8 @@ def engine_step(state: EngineState, graph: ShardGraph, table: jax.Array,
         state.ring, mirror_bits, jnp.mod(state.t, graph.max_delay), axis=0)
 
     new_state = EngineState(neurons=neurons, ring=ring, weights=weights,
-                            traces=traces, t=state.t + 1, key=key)
+                            traces=traces, t=state.t + 1, key=key,
+                            weights_layout=state.weights_layout)
     return new_state, spike_bits
 
 
@@ -231,9 +312,22 @@ def make_step_fn(graph: ShardGraph, table: jax.Array, cfg: EngineConfig):
 
 def run(state: EngineState, graph: ShardGraph, table: jax.Array,
         cfg: EngineConfig, n_steps: int):
-    """Scan ``n_steps``; returns (final_state, spikes (n_steps, n_local) bool)."""
+    """Scan ``n_steps``; returns (final_state, spikes (n_steps, n_local) bool).
+
+    Flat-facing: whatever layout ``state`` arrives in, the scan carries the
+    backend's NATIVE weights (one conversion in) and the returned final
+    state is FLAT (one conversion out) - the per-step hot path never
+    touches ``edge_perm``.
+    """
     backend = backends_mod.get_backend(cfg.sweep)
     layout = backend.prepare(graph)
+    native_tag = backends_mod.layout_tag(layout, backend.weights_layout)
+    if state.weights_layout != native_tag:
+        state = dataclasses.replace(
+            state,
+            weights=backends_mod.convert_weights(
+                layout, state.weights, state.weights_layout, native_tag),
+            weights_layout=native_tag)
 
     def body(s, _):
         s, bits = engine_step(s, graph, table, cfg, backend=backend,
@@ -241,4 +335,10 @@ def run(state: EngineState, graph: ShardGraph, table: jax.Array,
         return s, (bits if cfg.record_spikes else None)
 
     final, spikes = jax.lax.scan(body, state, None, length=n_steps)
+    if final.weights_layout != "flat":
+        final = dataclasses.replace(
+            final,
+            weights=backends_mod.convert_weights(
+                layout, final.weights, final.weights_layout, "flat"),
+            weights_layout="flat")
     return final, spikes

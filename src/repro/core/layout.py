@@ -9,10 +9,17 @@ same edge count (ELL-of-blocks) - grid cell ``i`` then writes only rows
 
 This module is build-time numpy.  ``BlockedGraph`` carries, besides the
 blocked static edge arrays, ``edge_perm``: for every (block, slot) the index
-of that edge in the FLAT owner-sorted arrays.  Run-time weights live flat in
-``EngineState.weights`` regardless of backend; the Pallas backend gathers
-them into blocked order per step via ``edge_perm`` so plasticity updates and
-checkpointing stay layout-agnostic.
+of that edge in the FLAT owner-sorted arrays.  The blocked layout is the
+RESIDENT hot-path representation for blocked backends (DESIGN.md §9):
+run-time weights live in ELL slot order inside engine state and
+``edge_perm`` is used only at the build / checkpoint / telemetry
+boundaries (``repro.core.backends.to_native_weights`` /
+``to_flat_weights``), never per step.
+
+Block shapes (PB, EB) default to the fixed constants below;
+``repro.core.autotune`` picks them per shard degree distribution when
+requested (``build_shards(block_shapes="auto")`` / the ``"pallas:auto"``
+backend).
 
 The fill is a single vectorized scatter (no per-block Python loop): edges
 are lexsorted by (block, delay, post), their within-block rank is computed

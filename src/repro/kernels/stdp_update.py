@@ -12,6 +12,16 @@ per shard and live fully in VMEM; the two per-edge gathers are flat VMEM
 gathers.  The power ``w^mu`` runs as exp(mu*log(w)) on the VPU
 (transcendental), masked on padding edges.
 
+Two edge layouts are served (DESIGN.md §9):
+
+* flat owner-sorted ``(E,)`` arrays with absolute ``post_idx`` - the
+  original form, blocked internally into ``eb``-wide grid cells;
+* the post-block ELL layout ``(NB, EB)`` with **block-relative** post rows
+  (``pb`` given): grid cell ``i`` owns post rows ``[i*pb, (i+1)*pb)``, so
+  the absolute post index is reconstructed as ``i*pb + post_rel`` inside
+  the kernel - the blocked-resident hot path consumes the sweep kernel's
+  arrivals and weights without any layout conversion.
+
 Validated against :func:`repro.core.stdp.stdp_edge_update` in interpret
 mode, including the clip and the non-plastic passthrough.
 """
@@ -30,12 +40,15 @@ DEFAULT_EB = 2048
 
 
 def _kernel(w_ref, pre_ref, post_ref, plast_ref, arrived_ref, spike_ref,
-            kpre_ref, kpost_ref, w_out, *, lam, alpha, mu, w0, wmin, wmax):
+            kpre_ref, kpost_ref, w_out, *, lam, alpha, mu, w0, wmin, wmax,
+            pb: int):
     w = w_ref[...][0]
     pre = pre_ref[...][0]
     post = post_ref[...][0]
     plastic = plast_ref[...][0]
     arrived = arrived_ref[...][0]
+    if pb:  # ELL layout: post rows are block-relative, offset by the owner
+        post = post + pl.program_id(0) * pb
 
     k_post = jnp.take(kpost_ref[...].reshape(-1), post, axis=0)
     k_pre = jnp.take(kpre_ref[...].reshape(-1), pre, axis=0)
@@ -48,13 +61,22 @@ def _kernel(w_ref, pre_ref, post_ref, plast_ref, arrived_ref, spike_ref,
     w_out[...] = jnp.where(plastic, w2, w)[None]
 
 
-@functools.partial(jax.jit, static_argnames=("eb", "interpret", "params"))
+@functools.partial(jax.jit, static_argnames=("eb", "interpret", "params",
+                                             "pb"))
 def stdp_update_kernel(weights, pre_idx, post_idx, plastic, arrived,
                        post_spike, k_pre, k_post, *, params,
-                       eb: int = DEFAULT_EB, interpret: bool = True):
+                       eb: int = DEFAULT_EB, interpret: bool = True,
+                       pb: int = 0):
     """weights/pre/post/plastic/arrived: (E,) owner-sorted (E % eb == 0);
     post_spike (n_local,) f32; traces k_pre (M,), k_post (n_local,).
-    ``params`` is a hashable tuple (lam, alpha, mu, w0, wmin, wmax)."""
+    ``params`` is a hashable tuple (lam, alpha, mu, w0, wmin, wmax).
+
+    With ``pb > 0`` the edge arrays are the blocked ELL layout flattened to
+    ``(NB*EB,)`` slot order: ``post_idx`` holds block-RELATIVE rows and
+    ``eb`` must be the layout's per-block edge count, so grid cell ``i``
+    covers exactly post block ``i``.  The returned weights stay in the same
+    slot order.
+    """
     lam, alpha, mu, w0, wmin, wmax = params
     e = weights.shape[0]
     assert e % eb == 0, (e, eb)
@@ -67,7 +89,7 @@ def stdp_update_kernel(weights, pre_idx, post_idx, plastic, arrived,
         0 for _ in shape))
     out = pl.pallas_call(
         functools.partial(_kernel, lam=lam, alpha=alpha, mu=mu, w0=w0,
-                          wmin=wmin, wmax=wmax),
+                          wmin=wmin, wmax=wmax, pb=pb),
         grid=(nb,),
         in_specs=[blk, blk, blk, blk, blk,
                   full((nl,)), full((m,)), full((nl,))],

@@ -15,9 +15,28 @@ to the TPU memory hierarchy (DESIGN.md §2):
   Mapping buys, §III.A); per-edge arrivals are a flat VMEM gather;
 * the per-block reduction uses a **one-hot matmul** (``contrib @ onehot``)
   so the accumulation runs on the MXU instead of a serial scatter - the
-  TPU-native replacement for the CPU's owner-thread loop.
+  TPU-native replacement for the CPU's owner-thread loop;
+* with ``emit_arrivals=True`` the kernel ALSO writes the per-edge arrival
+  bits (blocked (NB, EB) order) as a third output - the same fused ring
+  gather then feeds both the MXU reduction and the STDP depression rule,
+  so the plasticity path pays no second edge-sized ring gather
+  (DESIGN.md §9: this is the single edge pass of the hot path);
+* with ``fresh`` (a (M,) bitmap of spikes fired at ``t-1`` that are NOT yet
+  in the ring) the delay==1 arrivals are read from ``fresh`` instead of the
+  ring - the paper's §III.C overlap schedule folded into the one dispatch:
+  the ring write for slot ``t-1`` becomes independent of the sweep and the
+  exchange collective only gates the delay-1 term.
 
-VMEM budget per grid cell: ring D*M*4 + 5 edge arrays EB*4 + onehot EB*PB*4.
+VMEM budget per grid cell (the model ``repro.core.autotune`` sizes
+(PB, EB) against)::
+
+    ring        D*M*4
+    fresh       M*4            (overlap dispatch only)
+    edge arrays 5*EB*4         (pre, post_rel, w, delay, channel)
+    arrivals    EB*4           (emit_arrivals output)
+    onehot      EB*PB*4
+    outputs     2*PB*4
+
 Defaults (D<=64, M<=32768, EB=2048, PB=256) stay under ~12 MiB.
 
 Validated against :func:`repro.kernels.ref.synaptic_gather_ref` in
@@ -39,8 +58,14 @@ DEFAULT_PB = 256    # post neurons per block
 
 
 def _kernel(pre_ref, post_rel_ref, w_ref, delay_ref, chan_ref, ring_ref,
-            t_ref, ex_ref, in_ref, *, max_delay: int, n_mirror: int,
-            pb: int):
+            t_ref, *refs, max_delay: int, n_mirror: int, pb: int,
+            emit_arrivals: bool, with_fresh: bool):
+    # trailing refs: [fresh_ref?], ex_ref, in_ref, [arr_ref?]
+    refs = list(refs)
+    fresh_ref = refs.pop(0) if with_fresh else None
+    ex_ref, in_ref = refs[0], refs[1]
+    arr_ref = refs[2] if emit_arrivals else None
+
     t = t_ref[0]
     pre = pre_ref[...][0]          # (EB,) int32 mirror index
     post_rel = post_rel_ref[...][0]  # (EB,) int32 in [0, PB)
@@ -52,8 +77,16 @@ def _kernel(pre_ref, post_rel_ref, w_ref, delay_ref, chan_ref, ring_ref,
     row = jnp.mod(t - delay, max_delay)
     flat = ring_ref[...].reshape(-1)
     arrived = jnp.take(flat, row * n_mirror + pre, axis=0)
+    if with_fresh:
+        # §III.C overlap: spikes fired at t-1 are not in the ring yet -
+        # delay-1 edges read them from the exchange result instead
+        fresh_arr = jnp.take(fresh_ref[...].reshape(-1), pre, axis=0)
+        arrived = jnp.where(delay == 1, fresh_arr, arrived)
     live = (delay > 0).astype(w.dtype)
-    contrib = w * arrived * live
+    arrived = arrived * live
+    contrib = w * arrived
+    if emit_arrivals:
+        arr_ref[...] = arrived[None, :]
 
     # one-hot reduction on the MXU: (1, EB) @ (EB, PB) -> (1, PB)
     onehot = (post_rel[:, None] ==
@@ -67,39 +100,60 @@ def _kernel(pre_ref, post_rel_ref, w_ref, delay_ref, chan_ref, ring_ref,
                               preferred_element_type=jnp.float32)
 
 
-@functools.partial(jax.jit, static_argnames=("max_delay", "pb",
-                                             "interpret"))
+@functools.partial(jax.jit, static_argnames=("max_delay", "pb", "interpret",
+                                             "emit_arrivals"))
 def synaptic_gather(pre_idx, post_rel, weight, delay, channel, ring, t, *,
                     max_delay: int, pb: int = DEFAULT_PB,
-                    interpret: bool = True):
+                    interpret: bool = True, emit_arrivals: bool = False,
+                    fresh=None):
     """Blocked edge arrays (NB, EB) -> (i_ex, i_in) each (NB*PB,).
 
-    Args mirror the blocked layout from :func:`repro.kernels.ops.blocked_layout`.
+    Args mirror the blocked layout of :class:`repro.core.layout.BlockedGraph`.
     ``ring`` is (D, M) f32; ``t`` a scalar int32 array.
+
+    ``emit_arrivals=True`` appends the per-edge arrival bits in blocked
+    (NB, EB) order to the result: ``(i_ex, i_in, arrived)``.  ``fresh``
+    (optional (M,) f32) supplies the not-yet-written spikes of step ``t-1``
+    for delay==1 edges (overlap dispatch).
     """
     nb, eb = pre_idx.shape
     d, m = ring.shape
     assert d == max_delay
+    with_fresh = fresh is not None
     kern = functools.partial(_kernel, max_delay=max_delay, n_mirror=m,
-                             pb=pb)
+                             pb=pb, emit_arrivals=emit_arrivals,
+                             with_fresh=with_fresh)
     edge_spec = pl.BlockSpec((1, eb), lambda i: (i, 0))
-    out_ex, out_in = pl.pallas_call(
+    in_specs = [
+        edge_spec, edge_spec, edge_spec, edge_spec, edge_spec,
+        pl.BlockSpec((d, m), lambda i: (0, 0)),   # full ring, all cells
+        pl.BlockSpec(memory_space=pl.ANY),        # t scalar
+    ]
+    operands = [pre_idx, post_rel, weight, delay, channel, ring,
+                t.reshape(1).astype(jnp.int32)]
+    if with_fresh:
+        in_specs.append(pl.BlockSpec((1, m), lambda i: (0, 0)))
+        operands.append(fresh.reshape(1, m).astype(jnp.float32))
+    out_specs = [
+        pl.BlockSpec((1, pb), lambda i: (i, 0)),
+        pl.BlockSpec((1, pb), lambda i: (i, 0)),
+    ]
+    out_shape = [
+        jax.ShapeDtypeStruct((nb, pb), jnp.float32),
+        jax.ShapeDtypeStruct((nb, pb), jnp.float32),
+    ]
+    if emit_arrivals:
+        out_specs.append(edge_spec)
+        out_shape.append(jax.ShapeDtypeStruct((nb, eb), jnp.float32))
+    out = pl.pallas_call(
         kern,
         grid=(nb,),
-        in_specs=[
-            edge_spec, edge_spec, edge_spec, edge_spec, edge_spec,
-            pl.BlockSpec((d, m), lambda i: (0, 0)),   # full ring, all cells
-            pl.BlockSpec(memory_space=pl.ANY),        # t scalar
-        ],
-        out_specs=[
-            pl.BlockSpec((1, pb), lambda i: (i, 0)),
-            pl.BlockSpec((1, pb), lambda i: (i, 0)),
-        ],
-        out_shape=[
-            jax.ShapeDtypeStruct((nb, pb), jnp.float32),
-            jax.ShapeDtypeStruct((nb, pb), jnp.float32),
-        ],
+        in_specs=in_specs,
+        out_specs=out_specs,
+        out_shape=out_shape,
         interpret=interpret,
-    )(pre_idx, post_rel, weight, delay, channel, ring,
-      t.reshape(1).astype(jnp.int32))
-    return out_ex.reshape(nb * pb), out_in.reshape(nb * pb)
+    )(*operands)
+    ex, inh = out[0].reshape(nb * pb), out[1].reshape(nb * pb)
+    if emit_arrivals:
+        return ex, inh, out[2]
+    return ex, inh

@@ -30,7 +30,7 @@ import re
 from collections import defaultdict
 from functools import lru_cache
 
-__all__ = ["HloCosts", "analyze_hlo"]
+__all__ = ["HloCosts", "analyze_hlo", "op_census"]
 
 DTYPE_BYTES = {
     "f64": 8, "f32": 4, "f16": 2, "bf16": 2, "f8e4m3fn": 1, "f8e5m2": 1,
@@ -224,6 +224,36 @@ def _op_tag(op: _Op) -> str:
     m = re.search(r'op_name="([^"]*)"', op.line)
     src = "/".join(m.group(1).split("/")[-2:]) if m else ""
     return f"{op.kind}:{src}:{op.out_type[:60]}"
+
+
+def op_census(text: str, kinds: tuple = ("gather",)) -> list[dict]:
+    """Structural census of ops across ALL computations of an HLO module.
+
+    Unlike :func:`analyze_hlo` this counts each TEXTUAL op exactly once -
+    no trip-count multiplication, fusion interiors included - which is what
+    layout regressions care about ("the compiled step contains exactly one
+    ring-sized gather", not "the gather runs N times").  Returns one record
+    per matching op::
+
+        {kind, name, computation, out_type, out_elems,
+         operand_types: [str], operand_elems: [int]}
+
+    ``operand_*`` resolve through the computation's symbol table; operands
+    whose type is unknown (e.g. cross-computation refs) report 0 elements.
+    """
+    comps, _ = _parse(text)
+    recs = []
+    for comp in comps.values():
+        for op in comp.ops:
+            if kinds and op.kind not in kinds:
+                continue
+            otypes = [comp.symbols.get(o, "") for o in op.operands]
+            recs.append(dict(
+                kind=op.kind, name=op.name, computation=comp.name,
+                out_type=op.out_type, out_elems=op.out_elems,
+                operand_types=otypes,
+                operand_elems=[_shape_info(t)[1] for t in otypes]))
+    return recs
 
 
 def analyze_hlo(text: str) -> HloCosts:

@@ -1,0 +1,126 @@
+"""(PB, EB) block-shape autotuning: model invariants, builder threading,
+and the ``pallas:auto`` registry variant's numerical contract."""
+
+import dataclasses
+
+import jax
+import numpy as np
+import pytest
+
+from repro.core import autotune, backends, builder, engine, models, snn
+from repro.core.autotune import (BlockShapes, autotune_block_shapes,
+                                 autotune_report, resolve_block_shapes,
+                                 sweep_vmem_bytes)
+from repro.core.builder import NetworkSpec, Population, Projection
+from repro.core.decomposition import AreaSpec
+
+
+def _shards(scale=0.02, n_dev=1):
+    spec, _ = models.hpc_benchmark(scale=scale)
+    return spec, builder.build_shards(spec, builder.decompose(spec, n_dev),
+                                      with_blocked=False)
+
+
+def test_chosen_shapes_respect_model_and_candidates():
+    _, shards = _shards()
+    chosen = autotune_block_shapes(shards)
+    assert chosen.pb in autotune.DEFAULT_PB_CANDIDATES
+    assert chosen.eb % autotune.DEFAULT_EB_MULTIPLE == 0
+    assert chosen.vmem_bytes == sweep_vmem_bytes(
+        chosen.pb, chosen.eb, max_delay=shards[0].max_delay,
+        n_mirror=shards[0].n_mirror)
+    assert chosen.feasible
+    assert chosen.vmem_bytes <= autotune.DEFAULT_VMEM_BUDGET
+
+
+def test_autotune_never_worse_than_default_when_default_feasible():
+    """The fixed (256, ...) default is itself a candidate, so the tuner's
+    padded-slot count can only match or beat it."""
+    for scale in (0.02, 0.05):
+        _, shards = _shards(scale)
+        rep = autotune_report(shards)
+        assert rep["slots_vs_default"] <= 1.0, rep
+        assert rep["pad_ratio"] <= rep["default_pad_ratio"] + 1e-9, rep
+
+
+def test_vmem_budget_rejects_fat_blocks():
+    """With a tiny budget the tuner must not pick a shape whose one-hot
+    tile blows it while a feasible candidate exists."""
+    _, shards = _shards()
+    g = shards[0]
+    ring = g.max_delay * g.n_mirror * 4 + g.n_mirror * 4
+    # budget that only admits the smallest candidate's footprint
+    smallest = min(
+        sweep_vmem_bytes(pb, autotune.blocked_eb(g, pb=pb),
+                         max_delay=g.max_delay, n_mirror=g.n_mirror)
+        for pb in autotune.DEFAULT_PB_CANDIDATES)
+    chosen = autotune_block_shapes(shards, vmem_budget=smallest)
+    assert chosen.feasible
+    assert chosen.vmem_bytes <= smallest
+    # an impossible budget degrades to the smallest footprint, flagged
+    starved = autotune_block_shapes(shards, vmem_budget=ring)
+    assert not starved.feasible
+
+
+def test_resolve_block_shapes_specs():
+    _, shards = _shards()
+    assert resolve_block_shapes(shards, None) is None
+    auto = resolve_block_shapes(shards, "auto")
+    assert isinstance(auto, BlockShapes)
+    pinned = resolve_block_shapes(shards, (128, 512))
+    assert pinned.as_tuple() == (128, 512)
+    assert resolve_block_shapes(shards, auto) is auto
+    with pytest.raises(ValueError, match="block_shapes"):
+        resolve_block_shapes(shards, "fastest")
+
+
+def test_builder_threads_block_shapes():
+    """build_shards(block_shapes=...) lands on ShardGraph.blocked with the
+    chosen (PB, EB); 'auto' matches a direct autotune call."""
+    spec, raw = _shards()
+    dec = builder.decompose(spec, 1)
+    chosen = autotune_block_shapes(raw)
+    auto = builder.build_shards(spec, dec, block_shapes="auto")[0].blocked
+    assert (auto.pb, auto.eb) == chosen.as_tuple()
+    pinned = builder.build_shards(spec, dec,
+                                  block_shapes=(128, chosen.eb))[0].blocked
+    assert pinned.pb == 128 and pinned.eb >= chosen.eb
+
+
+def test_pallas_auto_backend_matches_flat_trajectory():
+    """'pallas:auto' resolves through the registry (cached) and keeps the
+    §9 numerical contract on a short STDP trajectory."""
+    b = backends.get_backend("pallas:auto")
+    assert b is backends.get_backend("pallas:auto")
+    assert b.weights_layout == "blocked"
+
+    ne, ni = 20, 8
+    area = AreaSpec("a", ne + ni, positions=np.zeros((ne + ni, 3)))
+    exc = snn.LIFParams(i_e=800.0, t_ref=1.0)
+    inh = snn.LIFParams(i_e=800.0, t_ref=1.0, tau_m=8.0)
+    spec = NetworkSpec(
+        areas=[area], groups=[exc, inh],
+        populations=[Population("E", 0, 0, ne), Population("I", 0, 1, ni)],
+        projections=[
+            Projection(0, 0, 4, 45.0, 5.0, 1, 4, channel=0, plastic=True),
+            Projection(1, 0, 3, -200.0, 10.0, 1, 3, channel=1),
+        ],
+        max_delay=6, seed=5)
+    g = builder.build_shards(spec, builder.decompose(spec, 1))[0] \
+        .device_arrays()
+    table = snn.make_param_table(list(spec.groups), dt=0.1)
+    outs = {}
+    for sweep in ("flat", "pallas:auto"):
+        cfg = engine.EngineConfig(dt=0.1, stdp=models.HPC_STDP, sweep=sweep,
+                                  external_drive=False)
+        st = engine.init_state(g, list(spec.groups), jax.random.key(0),
+                               sweep=sweep)
+        final, spikes = jax.jit(
+            lambda s, c=cfg: engine.run(s, g, table, c, 120))(st)
+        assert final.weights_layout == "flat"   # run() is flat-facing
+        outs[sweep] = (np.asarray(spikes), np.asarray(final.weights))
+    s_f, w_f = outs["flat"]
+    s_a, w_a = outs["pallas:auto"]
+    assert s_f.sum() > 0, "vacuous - nothing spiked"
+    assert (s_f == s_a).all()
+    np.testing.assert_allclose(w_f, w_a, atol=1e-4)

@@ -59,19 +59,23 @@ EQUIV_CODE = textwrap.dedent("""
     net = dist.prepare_stacked(spec, dec, 4, 2)
     # backend axis: flat across every comm x overlap combo; the pallas and
     # bucketed backends through the SAME distributed code path (registry
-    # dispatch) on representative combos
-    combos = ([("flat", m, o) for m in ("global", "area")
+    # dispatch) on representative combos.  The pallas rows cover BOTH
+    # weight residencies: native blocked state (init with sweep=) and the
+    # flat-state compatibility path (per-step edge_perm conversion).
+    combos = ([("flat", m, o, True) for m in ("global", "area")
                for o in (False, True)]
-              + [("pallas", "area", True), ("pallas", "global", False),
-                 ("bucketed", "area", True)])
-    for sweep, mode, overlap in combos:
+              + [("pallas", "area", True, True),
+                 ("pallas", "global", False, False),
+                 ("bucketed", "area", True, True)])
+    for sweep, mode, overlap, native in combos:
         dcfg = dist.DistributedConfig(
             engine=engine.EngineConfig(dt=0.1, stdp=stdp, sweep=sweep,
                                        external_drive=False),
             comm_mode=mode, overlap=overlap)
         step, _ = dist.make_distributed_step(net, mesh,
                                              list(spec.groups), dcfg)
-        state = dist.init_stacked_state(net, list(spec.groups))
+        state = dist.init_stacked_state(net, list(spec.groups),
+                                        sweep=sweep if native else None)
         @jax.jit
         def run(s):
             return jax.lax.scan(lambda s, _: step(s), s, None, length=N)

@@ -1,0 +1,116 @@
+"""HLO regressions for the fused blocked hot path (DESIGN.md §2/§9).
+
+The blocked-resident pallas path promises ONE edge pass per step: the sweep
+kernel's fused ring gather feeds both the MXU reduction and the STDP
+arrivals, weights live in ELL slot order so no per-step ``edge_perm``
+re-gather exists.  These tests pin that against the compiled HLO of the
+jitted engine step via :func:`repro.utils.hlo_analysis.op_census` - a
+structural count of textual ops (fusion interiors included), so a second
+ring gather or a weight-layout conversion sneaking back into the step is a
+test failure, not a silent 2x on the edge stream.
+
+Sizes in the fixture spec are chosen pairwise-distinct (ring D*M, flat E,
+blocked NB*EB, n_local, n_mirror) so the census predicates cannot alias.
+"""
+
+import jax
+import numpy as np
+import pytest
+
+from repro.core import builder, engine, models, snn
+from repro.core.builder import NetworkSpec, Population, Projection
+from repro.core.decomposition import AreaSpec
+from repro.utils.hlo_analysis import op_census
+
+
+def _fixture():
+    ne, ni = 24, 9
+    area = AreaSpec("a", ne + ni, positions=np.zeros((ne + ni, 3)))
+    exc = snn.LIFParams(i_e=800.0, t_ref=1.0)
+    inh = snn.LIFParams(i_e=800.0, t_ref=1.0, tau_m=8.0)
+    pops = [Population("E", 0, 0, ne), Population("I", 0, 1, ni)]
+    projections = [
+        Projection(0, 0, 5, 45.0, 5.0, 1, 5, channel=0, plastic=True),
+        Projection(0, 1, 3, 45.0, 5.0, 1, 3, channel=0),
+        Projection(1, 0, 4, -200.0, 10.0, 2, 6, channel=1),
+        Projection(1, 1, 2, -200.0, 10.0, 1, 2, channel=1),
+    ]
+    spec = NetworkSpec(areas=[area], groups=[exc, inh], populations=pops,
+                       projections=projections, max_delay=8, seed=3)
+    g = builder.build_shards(spec, builder.decompose(spec, 1))[0] \
+        .device_arrays()
+    table = snn.make_param_table(list(spec.groups), dt=0.1)
+    return spec, g, table
+
+
+def _compiled_step_text(g, table, cfg, state):
+    step = engine.make_step_fn(g, table, cfg)
+    return step.lower(state).compile().as_text()
+
+
+def test_pallas_stdp_step_single_ring_gather():
+    """The compiled pallas+STDP engine step contains exactly one ring-sized
+    gather (the kernel's fused arrivals gather) and ZERO gathers touching
+    the flat weight vector (no per-step edge_perm conversion)."""
+    spec, g, table = _fixture()
+    cfg = engine.EngineConfig(dt=0.1, stdp=models.HPC_STDP, sweep="pallas",
+                              external_drive=False)
+    state = engine.init_state(g, list(spec.groups), jax.random.key(0),
+                              sweep="pallas")
+    assert state.weights_layout.startswith("blocked:")
+
+    ring_elems = g.max_delay * g.n_mirror
+    e_flat = g.n_edges
+    e_blocked = g.blocked.nb * g.blocked.eb
+    # n_local == n_mirror in a single shard (identity mirror table); the
+    # census predicates only need the edge/ring sizes pairwise distinct
+    # and distinct from the neuron sizes
+    sizes = {ring_elems, e_flat, e_blocked}
+    assert len(sizes) == 3 and not sizes & {g.n_local, g.n_mirror}, (
+        f"fixture sizes alias: {sizes}, {g.n_local}, {g.n_mirror}")
+
+    gathers = op_census(_compiled_step_text(g, table, cfg, state),
+                        kinds=("gather",))
+    assert gathers, "no gathers found - census is broken or HLO changed"
+    ring_gathers = [r for r in gathers
+                    if ring_elems in r["operand_elems"]]
+    assert len(ring_gathers) == 1, (
+        f"expected exactly 1 ring-sized gather, got "
+        f"{[(r['computation'], r['name']) for r in ring_gathers]}")
+    # the single ring gather IS the blocked arrivals producer
+    assert ring_gathers[0]["out_elems"] == e_blocked
+    perm_gathers = [r for r in gathers if e_flat in r["operand_elems"]
+                    or r["out_elems"] == e_flat]
+    assert not perm_gathers, (
+        f"per-step flat-weight/edge_perm gathers present: "
+        f"{[(r['computation'], r['name']) for r in perm_gathers]}")
+
+
+def test_flat_state_compat_path_pays_the_conversion():
+    """Counter-fixture: a FLAT-layout state stepped through the pallas
+    backend must show the edge_perm conversion in HLO - proving the census
+    actually detects it (and that the fast path above is not vacuous)."""
+    spec, g, table = _fixture()
+    cfg = engine.EngineConfig(dt=0.1, stdp=models.HPC_STDP, sweep="pallas",
+                              external_drive=False)
+    state = engine.init_state(g, list(spec.groups), jax.random.key(0))
+    assert state.weights_layout == "flat"
+    gathers = op_census(_compiled_step_text(g, table, cfg, state),
+                        kinds=("gather",))
+    e_flat = g.n_edges
+    perm_gathers = [r for r in gathers if e_flat in r["operand_elems"]]
+    assert perm_gathers, "compat path shows no flat-weight gather"
+
+
+def test_flat_backend_single_ring_gather():
+    """The flat backend's sweep is also a single fused ring gather per
+    step (the §2 claim it was designed around)."""
+    spec, g, table = _fixture()
+    cfg = engine.EngineConfig(dt=0.1, stdp=models.HPC_STDP, sweep="flat",
+                              external_drive=False)
+    state = engine.init_state(g, list(spec.groups), jax.random.key(0))
+    ring_elems = g.max_delay * g.n_mirror
+    gathers = op_census(_compiled_step_text(g, table, cfg, state),
+                        kinds=("gather",))
+    ring_gathers = [r for r in gathers if ring_elems in r["operand_elems"]]
+    assert len(ring_gathers) == 1

@@ -5,6 +5,8 @@ target).  Sweeps cover block shapes, ring geometry, group counts, and both
 synapse models; property tests randomize edge topology.
 """
 
+import dataclasses
+
 import numpy as np
 import jax
 import jax.numpy as jnp
@@ -126,6 +128,110 @@ def test_stdp_kernel_sweep(eb, nl, m):
     w_r = ref.stdp_update_ref(w, pre, post, plast, arrived, spk, kpre,
                               kpost, params=STDP_PARAMS)
     np.testing.assert_allclose(w_k, w_r, atol=1e-4)
+
+
+def _random_flat_graph(rng, *, with_padding=True):
+    """Random UNSORTED flat edge arrays as a ShardGraph-shaped namespace;
+    n_local deliberately NOT a multiple of any block size most of the time."""
+    from types import SimpleNamespace
+    n_local = int(rng.integers(50, 400))
+    n_mirror = n_local + int(rng.integers(0, 64))
+    d_max = int(rng.integers(2, 12))
+    e_real = int(rng.integers(50, 1200))
+    e_pad = int(rng.integers(0, 40)) if with_padding else 0
+    e = e_real + e_pad
+    delay = np.concatenate([rng.integers(1, d_max + 1, e_real),
+                            np.zeros(e_pad, np.int64)]).astype(np.int32)
+    return SimpleNamespace(
+        n_local=n_local, n_mirror=n_mirror, max_delay=d_max,
+        pre_idx=rng.integers(0, n_mirror, e).astype(np.int32),
+        post_idx=rng.integers(0, n_local, e).astype(np.int32),
+        delay=delay,
+        channel=rng.integers(0, 2, e).astype(np.int32),
+        plastic=(rng.uniform(size=e) < 0.5),
+        weight_init=rng.normal(0, 30, e).astype(np.float32),
+        bucket_ptr=None, blocked=None)
+
+
+@given(st.integers(0, 2**31 - 1))
+@settings(max_examples=10, deadline=None)
+def test_blocked_arrivals_match_flat_property(seed):
+    """Tentpole guard: the sweep kernel's blocked per-edge arrivals,
+    scattered back through ``edge_perm``, are BIT-exact vs ``_flat_arrivals``
+    on random graphs - incl. padded slots, delay==1 fresh bits (overlap
+    dispatch) and n_local not a multiple of PB."""
+    rng = np.random.default_rng(seed)
+    g = _random_flat_graph(rng)
+    pb = 128
+    bg = ops.blocked_layout(g, pb=pb)
+    layout = backends.layout_of(g)
+    layout_blk = dataclasses.replace(layout, blocked=bg)
+    ring = jnp.asarray((rng.uniform(size=(g.max_delay, g.n_mirror)) < 0.3)
+                       .astype(np.float32))
+    t = jnp.asarray(int(rng.integers(0, 5000)), jnp.int32)
+    w_blk = jnp.asarray(bg.weight.reshape(bg.nb, bg.eb))
+    args = (jnp.asarray(bg.pre_idx), jnp.asarray(bg.post_rel), w_blk,
+            jnp.asarray(bg.delay), jnp.asarray(bg.channel), ring, t)
+
+    flat_ref = np.asarray(backends._flat_arrivals(layout, ring, t))
+    _, _, arr_blk = synaptic_gather(*args, max_delay=g.max_delay, pb=pb,
+                                    emit_arrivals=True)
+    got = np.asarray(backends.flat_edge_values(
+        layout_blk, arr_blk.reshape(-1), "blocked"))
+    np.testing.assert_array_equal(got, flat_ref)
+
+    # overlap dispatch: delay==1 reads the fresh bits, not the ring
+    fresh = jnp.asarray((rng.uniform(size=g.n_mirror) < 0.3)
+                        .astype(np.float32))
+    flat_b = backends.FlatBackend()
+    _, _, arr_ref_o, _ = flat_b.sweep_overlap(
+        layout, jnp.asarray(g.weight_init), ring, t, fresh)
+    _, _, arr_blk_o = synaptic_gather(*args, max_delay=g.max_delay, pb=pb,
+                                      emit_arrivals=True, fresh=fresh)
+    got_o = np.asarray(backends.flat_edge_values(
+        layout_blk, arr_blk_o.reshape(-1), "blocked"))
+    np.testing.assert_array_equal(got_o, np.asarray(arr_ref_o))
+
+
+@pytest.mark.parametrize("nb,eb,pb,m", [(3, 128, 128, 96),
+                                        (2, 256, 256, 512)])
+def test_stdp_kernel_blocked_mode(nb, eb, pb, m):
+    """pb>0 mode: block-RELATIVE post rows, grid cell i owning post block
+    i - the blocked-resident plasticity path - matches the flat oracle."""
+    rng = np.random.default_rng(nb * eb)
+    e = nb * eb
+    nl = nb * pb
+    w = jnp.asarray(rng.uniform(1, 100, e).astype(np.float32))
+    pre = jnp.asarray(rng.integers(0, m, e).astype(np.int32))
+    post_rel = rng.integers(0, pb, e).astype(np.int32)
+    post_abs = (np.repeat(np.arange(nb), eb) * pb + post_rel).astype(np.int32)
+    plast = jnp.asarray(rng.uniform(size=e) < 0.7)
+    arrived = jnp.asarray((rng.uniform(size=e) < 0.15).astype(np.float32))
+    spk = jnp.asarray((rng.uniform(size=nl) < 0.1).astype(np.float32))
+    kpre = jnp.asarray(rng.uniform(0, 3, m).astype(np.float32))
+    kpost = jnp.asarray(rng.uniform(0, 3, nl).astype(np.float32))
+    w_k = stdp_update_kernel(w, pre, jnp.asarray(post_rel), plast, arrived,
+                             spk, kpre, kpost, params=STDP_PARAMS, eb=eb,
+                             pb=pb)
+    w_r = ref.stdp_update_ref(w, pre, jnp.asarray(post_abs), plast, arrived,
+                              spk, kpre, kpost, params=STDP_PARAMS)
+    np.testing.assert_allclose(w_k, w_r, atol=1e-4)
+
+
+def test_weight_layout_roundtrip_and_padding():
+    """to_native_weights -> to_flat_weights is the identity on real edges;
+    flat padding slots read back 0 and blocked padding is masked."""
+    rng = np.random.default_rng(7)
+    g = _random_flat_graph(rng)
+    backend = backends.get_backend("pallas")
+    layout = backend.prepare(g)
+    w = jnp.asarray(g.weight_init)
+    w_native = backend.to_native_weights(layout, w)
+    assert w_native.shape[0] == backend.native_edge_count(layout)
+    back = np.asarray(backend.to_flat_weights(layout, w_native))
+    real = np.asarray(g.delay) > 0
+    np.testing.assert_array_equal(back[real], np.asarray(w)[real])
+    assert (back[~real] == 0).all()
 
 
 def test_blocked_layout_roundtrip():

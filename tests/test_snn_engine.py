@@ -163,6 +163,119 @@ def test_pallas_backend_conductance_model():
                                np.asarray(f_f.neurons.v_m), atol=1e-4)
 
 
+def test_blocked_resident_state_and_boundaries(tmp_path):
+    """Blocked-resident weights (init_state(sweep='pallas')) step through
+    make_step_fn with NO per-step layout conversion, the flat-state compat
+    path converges to the same trajectory, and the checkpoint/telemetry
+    boundary (state_with_weights_layout + CheckpointManager) roundtrips
+    bit-exactly through the flat representation."""
+    from repro.checkpoint.manager import CheckpointManager
+    from repro.core import backends
+
+    spec = mixed_backend_spec()
+    dec = builder.decompose(spec, 1)
+    g = builder.build_shards(spec, dec)[0].device_arrays()
+    table = snn.make_param_table(list(spec.groups), dt=0.1)
+    cfg = engine.EngineConfig(dt=0.1, stdp=models.HPC_STDP, sweep="pallas",
+                              external_drive=False)
+    step = engine.make_step_fn(g, table, cfg)
+
+    st_native = engine.init_state(g, list(spec.groups), jax.random.key(0),
+                                  sweep="pallas")
+    st_flat = engine.init_state(g, list(spec.groups), jax.random.key(0))
+    bg = g.blocked
+    assert st_native.weights_layout == f"blocked:{bg.pb}x{bg.eb}"
+    assert st_flat.weights_layout == "flat"
+    assert st_native.weights.shape[0] == bg.nb * bg.eb
+
+    for _ in range(40):
+        st_native, bits_n = step(st_native)
+        st_flat, bits_f = step(st_flat)
+        assert (np.asarray(bits_n) == np.asarray(bits_f)).all()
+    assert st_native.weights_layout.startswith("blocked:")  # carried stably
+    assert st_flat.weights_layout == "flat"
+
+    # telemetry boundary: both states express the same flat weights
+    flat_view = engine.state_with_weights_layout(st_native, g, "flat")
+    real = np.asarray(g.delay) > 0
+    np.testing.assert_allclose(np.asarray(flat_view.weights)[real],
+                               np.asarray(st_flat.weights)[real],
+                               atol=1e-4)
+
+    # checkpoint boundary: save flat, restore, convert back - bit-exact
+    mgr = CheckpointManager(str(tmp_path), keep=1)
+    mgr.save(1, flat_view)
+    restored, _ = mgr.restore(flat_view)
+    back = engine.state_with_weights_layout(
+        restored, g, "blocked", backend=backends.get_backend("pallas"))
+    live = np.asarray(bg.delay).reshape(-1) > 0
+    np.testing.assert_array_equal(
+        np.asarray(back.weights)[live], np.asarray(st_native.weights)[live])
+
+
+def test_non_plastic_compat_path_keeps_weights_untouched():
+    """stdp=None + flat state + blocked backend: the step must carry the
+    state's own weight vector (no layout round-trip - that would cost two
+    edge passes per step and zero the flat padding slots)."""
+    spec = mixed_backend_spec()
+    g = builder.build_shards(spec, builder.decompose(spec, 1))[0] \
+        .device_arrays()
+    table = snn.make_param_table(list(spec.groups), dt=0.1)
+    cfg = engine.EngineConfig(dt=0.1, stdp=None, sweep="pallas",
+                              external_drive=False)
+    st = engine.init_state(g, list(spec.groups), jax.random.key(0))
+    step = engine.make_step_fn(g, table, cfg)
+    st2, _ = step(st)
+    np.testing.assert_array_equal(np.asarray(st2.weights),
+                                  np.asarray(st.weights))
+
+
+def test_blocked_state_steps_under_flat_backend():
+    """Cross-KIND compat: a blocked-resident state stepped through the
+    flat backend converts at the boundary (same trajectory as a flat
+    state) instead of erroring - only mismatched (PB, EB) blocked shapes
+    are rejected."""
+    spec = mixed_backend_spec()
+    g = builder.build_shards(spec, builder.decompose(spec, 1))[0] \
+        .device_arrays()
+    table = snn.make_param_table(list(spec.groups), dt=0.1)
+    cfg = engine.EngineConfig(dt=0.1, stdp=models.HPC_STDP, sweep="flat",
+                              external_drive=False)
+    step = engine.make_step_fn(g, table, cfg)
+    st_b = engine.init_state(g, list(spec.groups), jax.random.key(0),
+                             sweep="pallas")
+    st_f = engine.init_state(g, list(spec.groups), jax.random.key(0))
+    for _ in range(30):
+        st_b, bits_b = step(st_b)
+        st_f, bits_f = step(st_f)
+        assert (np.asarray(bits_b) == np.asarray(bits_f)).all()
+    assert st_b.weights_layout.startswith("blocked:")  # layout preserved
+
+
+def test_mismatched_blocked_shapes_rejected():
+    """A blocked state built under different (PB, EB) than the backend's
+    layout must be rejected with a clear error, not silently misapplied."""
+    import dataclasses as dc
+    spec = mixed_backend_spec()
+    g = builder.build_shards(spec, builder.decompose(spec, 1))[0] \
+        .device_arrays()
+    table = snn.make_param_table(list(spec.groups), dt=0.1)
+    cfg = engine.EngineConfig(dt=0.1, sweep="pallas", external_drive=False)
+    st = engine.init_state(g, list(spec.groups), jax.random.key(0),
+                           sweep="pallas")
+    step = engine.make_step_fn(g, table, cfg)
+    # right tag, wrong slot count
+    bad_len = dc.replace(st, weights=jnp.concatenate(
+        [st.weights, jnp.zeros(128, st.weights.dtype)]))
+    with pytest.raises(ValueError, match="block shapes"):
+        step(bad_len)
+    # same slot count, different (PB, EB) tag - the coincidence that used
+    # to scramble edges silently
+    bad_tag = dc.replace(st, weights_layout="blocked:64x512")
+    with pytest.raises(ValueError, match="block shapes"):
+        step(bad_tag)
+
+
 def test_hpc_benchmark_rate_band():
     """§IV.A: asynchronous-irregular activity below ~10 Hz."""
     spec, stdp = models.hpc_benchmark(scale=0.04, stdp=True)

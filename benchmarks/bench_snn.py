@@ -10,9 +10,14 @@ On this CPU container we reproduce the *shape* of that comparison:
   mode off-TPU, so its CPU numbers measure the emulated kernel, not the
   TPU lowering);
 * the distributed step across every spike-wire codec and comm mode
-  (``--spike-wire`` / ``--comm-mode`` restrict the axes) - the end-to-end
-  cost of the SpikeWire encode/collective/decode path, with the codec's
-  own wire bytes/step recorded next to the timing;
+  (``--spike-wire`` / ``--comm-mode`` restrict the axes;
+  ``--spike-wire-remote`` puts a different codec on the cross-row
+  boundary tier) - the end-to-end cost of the SpikeWire
+  encode/collective/decode path, with the codec's own wire bytes/step
+  split intra/inter-host next to the timing;
+* the same step across N REAL local processes (``--processes``, via the
+  ``repro.launch.multihost`` launcher - gloo collectives on a
+  host-aligned mesh), the multi-host scaling axis;
 * Area-Processes Mapping vs Random Equivalent Mapping: remote-mirror
   memory and per-step spike-exchange bytes (the Fig. 8/9/10 quantities,
   computed exactly from the built shards - these are the terms that
@@ -43,7 +48,8 @@ from repro.core import builder, engine, models, snn, stdp as stdp_mod
 from repro.core.backends import available_backends
 from repro.core.distributed import (DistributedConfig, init_stacked_state,
                                     make_distributed_step, mesh_decompose,
-                                    prepare_stacked, wire_bytes_per_step)
+                                    prepare_stacked, wire_bytes_per_step,
+                                    wire_bytes_split)
 
 DEFAULT_BACKENDS = available_backends()
 DEFAULT_WIRES = ("f32", "u8", "packed", "sparse")
@@ -192,13 +198,16 @@ def _bench_profile_exchange(out, reps):
 
 
 def bench_wire_exchange(out, wires=DEFAULT_WIRES,
-                        comm_modes=DEFAULT_COMM_MODES, *, quick=False):
+                        comm_modes=DEFAULT_COMM_MODES, *,
+                        remote_wire=None, quick=False):
     """Distributed step time per (spike-wire codec x comm mode).
 
     Uses whatever devices this process has (1 is fine: the encode/decode
     work and the payload shapes are identical; only the collective hop is
     degenerate), so the codecs are measured end-to-end through the real
-    shard_map step.
+    shard_map step.  ``remote_wire`` puts a different codec on the
+    cross-row boundary tier (the inter-host hop under a host-aligned
+    mesh); the JSON records split the wire bytes intra/inter either way.
     """
     n_dev = jax.device_count()
     width = 2 if n_dev % 2 == 0 else 1
@@ -212,7 +221,8 @@ def bench_wire_exchange(out, wires=DEFAULT_WIRES,
         for wire in wires:
             cfg = DistributedConfig(
                 engine=engine.EngineConfig(dt=models.DT_MS),
-                comm_mode=mode, spike_wire=wire)
+                comm_mode=mode, spike_wire=wire,
+                spike_wire_remote=remote_wire)
             step, _ = make_distributed_step(net, mesh, list(spec.groups),
                                             cfg)
             state = init_stacked_state(net, list(spec.groups))
@@ -224,9 +234,53 @@ def bench_wire_exchange(out, wires=DEFAULT_WIRES,
             jax.block_until_ready(state.v_m)
             us = (time.perf_counter() - t0) / reps * 1e6
             overflow = int(np.asarray(state.wire_overflow).sum())
-            out(f"snn_wire/{mode}/{wire}", us,
-                dict(wire_bytes_step=wire_bytes_per_step(net, mode, wire),
+            split = wire_bytes_split(
+                mode, wire, remote_wire, n_shards=net.n_shards,
+                row_width=net.row_width, n_local=net.n_local,
+                b_pad=net.b_pad)
+            tag = wire if remote_wire is None else f"{wire}+{remote_wire}"
+            out(f"snn_wire/{mode}/{tag}", us,
+                dict(wire_bytes_step=split["intra"] + split["inter"],
+                     wire_bytes_intra=split["intra"],
+                     wire_bytes_inter=split["inter"],
                      mesh=f"{rows}x{width}", overflow=overflow))
+
+
+def bench_multiprocess(out, *, processes: int, devices_per_process: int,
+                       backend=None, wires=("packed",),
+                       comm_modes=("area",), remote_wire=None, quick=False):
+    """Real multi-process step timing through the
+    ``repro.launch.multihost`` launcher (N local CPU processes, gloo
+    collectives, host-aligned mesh): process 0's per-step timing with the
+    intra/inter-host wire-byte split.  The launcher owns all spawn/env
+    mechanics (per-child XLA_FLAGS, PYTHONPATH, coordinator)."""
+    import tempfile
+
+    import repro.launch.multihost as mh_launch
+
+    steps = 10 if quick else 40
+    for mode in comm_modes:
+        for wire in wires:
+            with tempfile.NamedTemporaryFile(suffix=".json") as f:
+                argv = ["--processes", str(processes),
+                        "--devices-per-process", str(devices_per_process),
+                        "--steps", str(steps), "--bench",
+                        "--comm-mode", mode, "--wire", wire,
+                        "--out", f.name]
+                if backend:
+                    argv += ["--sweep", backend]
+                if remote_wire:
+                    argv += ["--wire-remote", remote_wire]
+                rec = mh_launch.run_launcher(
+                    mh_launch.build_parser().parse_args(argv))
+            tag = wire if remote_wire is None else f"{wire}+{remote_wire}"
+            out(f"snn_mp/{mode}/{tag}/p{processes}", rec["us_per_step"],
+                dict(processes=processes,
+                     devices_per_process=devices_per_process,
+                     sweep=rec["sweep"],
+                     wire_bytes_intra=rec["wire_bytes_intra"],
+                     wire_bytes_inter=rec["wire_bytes_inter"],
+                     overflow=rec["overflow"]))
 
 
 def bench_mapping_comparison(out, *, quick=False):
@@ -249,17 +303,28 @@ def bench_mapping_comparison(out, *, quick=False):
 
 
 def main(out, backend: str | None = None, *, wires=DEFAULT_WIRES,
-         comm_modes=DEFAULT_COMM_MODES, quick: bool = False,
-         profile: bool = False):
+         comm_modes=DEFAULT_COMM_MODES, remote_wire=None,
+         processes: int | None = None, devices_per_process: int = 2,
+         quick: bool = False, profile: bool = False):
     if profile:
         # per-phase breakdown mode (sweep / neuron_update / stdp /
         # exchange) - the hot-path drill-down, instead of the scaling axes
         bench_profile(out, (backend,) if backend else DEFAULT_BACKENDS,
                       quick=quick)
         return
+    if processes:
+        # multi-process axis only: real cross-process collectives through
+        # the repro.launch.multihost launcher
+        bench_multiprocess(out, processes=processes,
+                           devices_per_process=devices_per_process,
+                           backend=backend, wires=wires,
+                           comm_modes=comm_modes,
+                           remote_wire=remote_wire, quick=quick)
+        return
     bench_step_scaling(out, (backend,) if backend else DEFAULT_BACKENDS,
                        quick=quick)
-    bench_wire_exchange(out, wires, comm_modes, quick=quick)
+    bench_wire_exchange(out, wires, comm_modes, remote_wire=remote_wire,
+                        quick=quick)
     bench_mapping_comparison(out, quick=quick)
 
 
@@ -277,10 +342,20 @@ if __name__ == "__main__":
                     help="restrict the wire benchmark to one codec "
                          "(f32|u8|packed|sparse|sparse:<rate>; default: "
                          "all registered)")
+    ap.add_argument("--spike-wire-remote", default=None,
+                    help="codec for the cross-row boundary tier (the "
+                         "inter-host hop) - e.g. packed intra + sparse "
+                         "inter; default: same as --spike-wire")
     ap.add_argument("--comm-mode", default=None,
                     choices=DEFAULT_COMM_MODES,
                     help="restrict the wire benchmark to one comm mode "
                          "(default: area and global)")
+    ap.add_argument("--processes", type=int, default=None,
+                    help="run the wire benchmark across N REAL local "
+                         "processes via the repro.launch.multihost "
+                         "launcher (skips the in-process axes)")
+    ap.add_argument("--devices-per-process", type=int, default=2,
+                    help="forced host devices per process for --processes")
     ap.add_argument("--quick", action="store_true",
                     help="tiny config: smallest scales, few reps (CI smoke)")
     ap.add_argument("--profile", action="store_true",
@@ -294,6 +369,9 @@ if __name__ == "__main__":
     if args.spike_wire:  # fail fast, before the step-scaling phase runs
         from repro.core.wire import get_wire
         get_wire(args.spike_wire)
+    if args.spike_wire_remote:
+        from repro.core.wire import get_wire
+        get_wire(args.spike_wire_remote)
 
     records = []
 
@@ -305,9 +383,13 @@ if __name__ == "__main__":
 
     print("name,us_per_call,derived")
     main(_out, args.backend,
-         wires=(args.spike_wire,) if args.spike_wire else DEFAULT_WIRES,
+         wires=(args.spike_wire,) if args.spike_wire
+         else (("packed",) if args.processes else DEFAULT_WIRES),
          comm_modes=(args.comm_mode,) if args.comm_mode
-         else DEFAULT_COMM_MODES,
+         else (("area",) if args.processes else DEFAULT_COMM_MODES),
+         remote_wire=args.spike_wire_remote,
+         processes=args.processes,
+         devices_per_process=args.devices_per_process,
          quick=args.quick, profile=args.profile)
     if args.json:
         os.makedirs(os.path.dirname(args.json) or ".", exist_ok=True)

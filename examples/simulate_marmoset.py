@@ -35,6 +35,10 @@ def main():
     ap.add_argument("--spike-wire", default="packed",
                     help="spike-exchange codec: f32|u8|packed|sparse|"
                          "sparse:<rate> (multi-device runs only)")
+    ap.add_argument("--spike-wire-remote", default=None,
+                    help="codec for the cross-row boundary tier (the "
+                         "inter-host hop on a host-aligned mesh); "
+                         "default: same as --spike-wire")
     args = ap.parse_args()
 
     spec = models.marmoset(scale=args.scale, n_areas=args.areas)
@@ -52,7 +56,8 @@ def main():
         net = dist.prepare_stacked(spec, dec, rows, width)
         dcfg = dist.DistributedConfig(
             engine=engine.EngineConfig(dt=models.DT_MS),
-            spike_wire=args.spike_wire)
+            spike_wire=args.spike_wire,
+            spike_wire_remote=args.spike_wire_remote)
         step, _ = dist.make_distributed_step(net, mesh, list(spec.groups),
                                              dcfg)
         state = dist.init_stacked_state(net, list(spec.groups))
@@ -63,9 +68,16 @@ def main():
         # (the sparse ID wire wins below the packed crossover firing rate)
         table_b = {w: dist.wire_bytes_per_step(net, "area", w)
                    for w in ("f32", "u8", "packed", "sparse")}
+        split = dist.wire_bytes_split(
+            "area", args.spike_wire, args.spike_wire_remote,
+            n_shards=net.n_shards, row_width=net.row_width,
+            n_local=net.n_local, b_pad=net.b_pad)
+        run_tag = args.spike_wire + (
+            f"+{args.spike_wire_remote}" if args.spike_wire_remote else "")
         print("  wire bytes/step (area): "
               + "  ".join(f"{w}={b}B" for w, b in table_b.items())
-              + f"  [running: {args.spike_wire}]")
+              + f"  [running: {run_tag}: intra-host {split['intra']}B + "
+              + f"inter-host {split['inter']}B]")
         jstep = jax.jit(step)
         counts = np.zeros(net.n_shards)
         for i in range(args.steps):

@@ -42,9 +42,12 @@ conversions happen only at the build / checkpoint / telemetry boundaries
 (:func:`to_native_weights` / :func:`to_flat_weights`), never per step.
 ``sweep`` returns ``arrived`` in the same native order, and
 :meth:`SweepBackend.edge_pre_index` names the per-edge pre index aligned
-with it (trace updates consume the pair).  New backends (GPU Triton,
-multi-host) register with :func:`register_backend` and become selectable
-via ``EngineConfig.sweep``.
+with it (trace updates consume the pair).  New backends (e.g. GPU
+Triton) register with :func:`register_backend` and become selectable via
+``EngineConfig.sweep`` - and are multi-host-capable for free: the
+multi-process engine (:mod:`repro.core.multihost`, DESIGN.md §11) runs
+the same registry-dispatched step across hosts, changing only array
+placement.
 """
 
 from __future__ import annotations

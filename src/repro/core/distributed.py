@@ -40,8 +40,12 @@ sparse, DESIGN.md §10): both gathers - the intra-row local bitmap and the
 cross-row boundary payload - encode before and decode after the
 collective, so CORTEX's ID-based Spikes Broadcast ("sparse") and the dense
 bitmap wires are one config switch apart, and per-wire traffic accounting
-(:func:`wire_bytes_per_step`) comes from the same codec that runs on the
-wire.
+(:func:`wire_bytes_per_step` / :func:`wire_bytes_split`) comes from the
+same codec that runs on the wire.  The two tiers may ride DIFFERENT wires
+(``cfg.spike_wire_remote``): under the host-aligned mesh of
+:mod:`repro.core.multihost` the intra-row tier never leaves a host while
+the boundary tier is the inter-host hop, so e.g. "packed" intra-host +
+"sparse" inter-host puts the ID wire exactly where small messages matter.
 """
 
 from __future__ import annotations
@@ -66,7 +70,8 @@ from repro.utils.jax_compat import shard_map
 
 __all__ = ["mesh_decompose", "StackedNetwork", "prepare_stacked",
            "DistributedConfig", "make_distributed_step", "init_stacked_state",
-           "wire_bytes_per_step", "wire_bytes_for_dims"]
+           "wire_bytes_per_step", "wire_bytes_for_dims", "wire_bytes_split",
+           "stacked_consts", "check_net_backend"]
 
 
 # --------------------------------------------------------------------------
@@ -104,14 +109,12 @@ def mesh_decompose(spec: NetworkSpec, n_rows: int, row_width: int, *,
         area_starts[a] = max(area_starts[a], area_starts[a - 1])
 
     if method == "random":
+        # equal random split across rows (Random Equivalent Mapping):
+        # array_split keeps row sizes within 1 of each other even when
+        # n_neurons % n_rows != 0
         perm = rng.permutation(spec.n_neurons)
-        row_of_neuron = np.repeat(np.arange(n_rows),
-                                  -(-spec.n_neurons // n_rows))[
-            np.argsort(perm, kind="stable")][:spec.n_neurons]
-        # (equal random split across rows)
         row_of_neuron = np.empty(spec.n_neurons, dtype=np.int64)
-        splits = np.array_split(perm, n_rows)
-        for r, s in enumerate(splits):
+        for r, s in enumerate(np.array_split(perm, n_rows)):
             row_of_neuron[s] = r
     else:
         if n_areas >= n_rows:
@@ -338,6 +341,15 @@ class DistributedConfig:
     # ID-based Spikes Broadcast; "sparse:<rate>" provisions capacity for
     # that per-step firing fraction.  A SpikeWire instance also works.
     spike_wire: str = "packed"
+    # wire for the REMOTE tier: the cross-row boundary payload in "area"
+    # mode (inter-host traffic under the host-aligned mesh of
+    # repro.core.multihost) and the whole gather in "global" mode (every
+    # payload crosses rows there).  None = same as ``spike_wire``.  The
+    # split matters because the tiers see different regimes: intra-row
+    # bitmaps are wide and dense-ish, boundary payloads are narrow and
+    # fire hot - e.g. "packed" intra-host with "sparse" inter-host, where
+    # the ID wire's small messages matter most (DESIGN.md §11).
+    spike_wire_remote: Any = None
 
     @property
     def inner_axis(self) -> str:
@@ -346,6 +358,12 @@ class DistributedConfig:
     @property
     def wire(self) -> wire_mod.SpikeWire:
         return wire_mod.get_wire(self.spike_wire)
+
+    @property
+    def remote_wire(self) -> wire_mod.SpikeWire:
+        spec = (self.spike_wire if self.spike_wire_remote is None
+                else self.spike_wire_remote)
+        return wire_mod.get_wire(spec)
 
 
 @dataclasses.dataclass
@@ -421,43 +439,82 @@ def init_stacked_state(net: StackedNetwork, groups: Sequence[snn.LIFParams],
     )
 
 
-def _exchange(bits, g, cfg: DistributedConfig, wire: wire_mod.SpikeWire):
-    """Map this shard's freshly fired local bits to its mirror rows.
+def _exchange_issue(bits, g, cfg: DistributedConfig,
+                    wire: wire_mod.SpikeWire,
+                    remote_wire: wire_mod.SpikeWire):
+    """Encode this shard's freshly fired local bits and ISSUE the exchange
+    collectives (nothing is decoded yet).
 
-    The wire codec is config-selectable (repro.core.wire): spikes are 1-bit
-    events, so the payload can be packed 32x below the naive f32 bitmap or
-    shipped as (count, ids) - CORTEX's Spikes Broadcast of IDs.  Returns
-    ``(mirror_bits, overflow)`` where ``overflow`` counts this step's
-    saturated payloads on a lossy wire (0 on dense wires)."""
-    dtype = bits.dtype
-    n_local = bits.shape[0]
+    Two tiers in "area" mode: the cross-row boundary payload (inter-host
+    under the host-aligned mesh - the slow hop, so its collective is
+    issued FIRST) on ``remote_wire``, then the intra-row local payload on
+    ``wire``.  "global" mode is a single all-rows gather - every payload
+    crosses rows, so it rides ``remote_wire``.
+
+    Returns ``(payloads, overflow)``: an opaque tuple for
+    :func:`_exchange_finish`, and this step's saturated-payload count
+    (each tier counted exactly once; 0 on dense wires).  Keeping issue
+    separate from finish puts the collectives ahead of the delay>=2 sweep
+    in the dataflow, so only the delay-1 path (which consumes the decoded
+    result) waits on the wire - the §III.C / Du et al. 2022 overlap.
+    """
     if cfg.comm_mode == "global":
-        payload = wire.encode(bits)
-        overflow = wire.overflow_count(payload)
+        payload = remote_wire.encode(bits)
+        overflow = remote_wire.overflow_count(payload)
         all_p = jax.lax.all_gather(payload, axis_name=cfg.axis_names,
                                    tiled=False)              # (S, W)
-        all_bits = wire.decode(all_p, n_local, dtype)
-        flat = all_bits.reshape(-1)
-        return jnp.take(flat, g["mirror_src_flat"] * n_local
-                        + g["mirror_src_idx"]), overflow
+        return (all_p,), overflow
     if cfg.comm_mode == "area":
+        # remote tier first: boundary neurons only (n(boundary) << n_local)
+        bbits = jnp.take(bits, g["boundary_slots"],          # (B,)
+                         mode="fill", fill_value=0)          # pads -> 0
+        b_payload = remote_wire.encode(bbits)
+        remote_p = jax.lax.all_gather(b_payload, axis_name=cfg.axis_names,
+                                      tiled=False)           # (S, Wb)
+        # intra tier: dense-ish local bitmap along the model axis only
         payload = wire.encode(bits)
         row_p = jax.lax.all_gather(payload, axis_name=cfg.inner_axis,
                                    tiled=False)              # (M, W)
-        row_bits = wire.decode(row_p, n_local, dtype)
-        bbits = jnp.take(bits, g["boundary_slots"],          # (B,)
-                         mode="fill", fill_value=0)          # pads -> 0
-        b_payload = wire.encode(bbits)
         overflow = (wire.overflow_count(payload)
-                    + wire.overflow_count(b_payload))
-        remote_p = jax.lax.all_gather(b_payload, axis_name=cfg.axis_names,
-                                      tiled=False)           # (S, Wb)
-        remote = wire.decode(remote_p, bbits.shape[0], dtype)
-        intra_val = jnp.take(row_bits.reshape(-1), g["mirror_row_gather"])
-        remote_val = jnp.take(remote.reshape(-1), g["mirror_remote_gather"])
-        return jnp.where(g["mirror_is_intra"], intra_val,
-                         remote_val), overflow
+                    + remote_wire.overflow_count(b_payload))
+        return (row_p, remote_p), overflow
     raise ValueError(f"unknown comm mode {cfg.comm_mode!r}")
+
+
+def _exchange_finish(payloads, g, cfg: DistributedConfig,
+                     wire: wire_mod.SpikeWire,
+                     remote_wire: wire_mod.SpikeWire, n_local: int, dtype):
+    """Decode the gathered payloads and map them onto this shard's mirror
+    rows - the only consumer of the collectives' results."""
+    if cfg.comm_mode == "global":
+        (all_p,) = payloads
+        all_bits = remote_wire.decode(all_p, n_local, dtype)
+        flat = all_bits.reshape(-1)
+        return jnp.take(flat, g["mirror_src_flat"] * n_local
+                        + g["mirror_src_idx"])
+    row_p, remote_p = payloads
+    row_bits = wire.decode(row_p, n_local, dtype)
+    b_pad = g["boundary_slots"].shape[0]
+    remote = remote_wire.decode(remote_p, b_pad, dtype)
+    intra_val = jnp.take(row_bits.reshape(-1), g["mirror_row_gather"])
+    remote_val = jnp.take(remote.reshape(-1), g["mirror_remote_gather"])
+    return jnp.where(g["mirror_is_intra"], intra_val, remote_val)
+
+
+def _exchange(bits, g, cfg: DistributedConfig, wire: wire_mod.SpikeWire,
+              remote_wire: wire_mod.SpikeWire | None = None):
+    """Map this shard's freshly fired local bits to its mirror rows.
+
+    The wire codec is config-selectable per tier (repro.core.wire): spikes
+    are 1-bit events, so the payload can be packed 32x below the naive f32
+    bitmap or shipped as (count, ids) - CORTEX's Spikes Broadcast of IDs.
+    Returns ``(mirror_bits, overflow)`` where ``overflow`` counts this
+    step's saturated payloads on a lossy wire (0 on dense wires)."""
+    remote_wire = wire if remote_wire is None else remote_wire
+    payloads, overflow = _exchange_issue(bits, g, cfg, wire, remote_wire)
+    mirror = _exchange_finish(payloads, g, cfg, wire, remote_wire,
+                              bits.shape[0], bits.dtype)
+    return mirror, overflow
 
 
 def _layout_from_consts(g: dict, n_local: int, n_mirror: int, max_delay: int,
@@ -484,28 +541,44 @@ def _layout_from_consts(g: dict, n_local: int, n_mirror: int, max_delay: int,
         bucket_ptr=None, blocked=blk)
 
 
-def wire_bytes_for_dims(mode: str, wire, *, n_shards: int, row_width: int,
-                        n_local: int, b_pad: int) -> int:
-    """Per-shard spike-exchange bytes per step from decomposition dims
-    alone (no StackedNetwork) - the dry-run traffic model.
+def wire_bytes_split(mode: str, wire, remote_wire=None, *, n_shards: int,
+                     row_width: int, n_local: int, b_pad: int
+                     ) -> dict[str, int]:
+    """Per-shard spike-exchange bytes per step, split by tier, from
+    decomposition dims alone (no StackedNetwork) - the dry-run traffic
+    model with per-tier wires.
 
-    ``global``: every shard decodes all S local payloads;
-    ``area``:   M intra-row local payloads + S boundary payloads
+    ``intra``: bytes that stay within a mesh row (intra-host under the
+    host-aligned mesh) - the M intra-row local payloads of "area" mode;
+    ``inter``: bytes that cross rows (inter-host) - the S boundary
+    payloads of "area" mode, or everything in "global" mode
     (the M*n_local + S*B split of DESIGN.md §7, in wire-payload bytes).
     """
-    w = wire_mod.get_wire(wire)
+    lw = wire_mod.get_wire(wire)
+    rw = lw if remote_wire is None else wire_mod.get_wire(remote_wire)
     if mode == "global":
-        return n_shards * w.bytes_per_step(n_local)
+        return dict(intra=0, inter=n_shards * rw.bytes_per_step(n_local))
     if mode == "area":
-        return (row_width * w.bytes_per_step(n_local)
-                + n_shards * w.bytes_per_step(b_pad))
+        return dict(intra=row_width * lw.bytes_per_step(n_local),
+                    inter=n_shards * rw.bytes_per_step(b_pad))
     raise ValueError(f"unknown comm mode {mode!r}")
 
 
+def wire_bytes_for_dims(mode: str, wire, remote_wire=None, *,
+                        n_shards: int, row_width: int,
+                        n_local: int, b_pad: int) -> int:
+    """Total per-shard spike-exchange bytes per step (both tiers)."""
+    split = wire_bytes_split(mode, wire, remote_wire, n_shards=n_shards,
+                             row_width=row_width, n_local=n_local,
+                             b_pad=b_pad)
+    return split["intra"] + split["inter"]
+
+
 def wire_bytes_per_step(net: StackedNetwork, mode: str = "area",
-                        wire="packed") -> int:
-    """Per-shard spike-exchange bytes per step for a wire codec."""
-    return wire_bytes_for_dims(mode, wire, n_shards=net.n_shards,
+                        wire="packed", remote_wire=None) -> int:
+    """Per-shard spike-exchange bytes per step for a wire codec pair."""
+    return wire_bytes_for_dims(mode, wire, remote_wire,
+                               n_shards=net.n_shards,
                                row_width=net.row_width,
                                n_local=net.n_local, b_pad=net.b_pad)
 
@@ -527,18 +600,13 @@ def make_raw_distributed_step(mesh: Mesh, groups: Sequence[snn.LIFParams],
                        blocked_meta)
 
 
-def make_distributed_step(net: StackedNetwork, mesh: Mesh,
-                          groups: Sequence[snn.LIFParams],
-                          cfg: DistributedConfig):
-    """Build the jit-able sharded step: DistState -> (DistState, spike bits).
-
-    All graph/metadata arrays are closed over as device-axis-sharded
-    constants.  The returned function is shard_map'ed over the mesh and can
-    be scanned or called per-step.
-    """
+def check_net_backend(net: StackedNetwork,
+                      cfg: DistributedConfig) -> backends_mod.SweepBackend:
+    """Resolve ``cfg``'s backend and validate the net supports it (blocked
+    consts present for blocked-resident backends; baked-shapes warning for
+    shape-tuning backends on untuned nets)."""
     backend = backends_mod.get_backend(cfg.engine.sweep)
-    needs_blocked = backend.needs_blocked
-    if needs_blocked and net.blocked_meta is None:
+    if backend.needs_blocked and net.blocked_meta is None:
         raise ValueError(
             f"sweep={cfg.engine.sweep!r} needs a StackedNetwork built with "
             "blocked layouts (prepare_stacked with_blocked=True)")
@@ -553,10 +621,15 @@ def make_distributed_step(net: StackedNetwork, mesh: Mesh,
             f"sweep={cfg.engine.sweep!r}: the distributed step uses the "
             f"StackedNetwork's baked block shapes {net.blocked_meta}; pass "
             "block_shapes to prepare_stacked/build_shards to autotune "
-            "them", stacklevel=2)
-    smapped = _build_step(mesh, groups, cfg, net.max_delay, net.n_local,
-                          net.n_mirror,
-                          net.blocked_meta if needs_blocked else None)
+            "them", stacklevel=3)
+    return backend
+
+
+def stacked_consts(net: StackedNetwork, *, needs_blocked: bool) -> dict:
+    """The (S, ...) host-side const arrays the sharded step consumes -
+    graph edge arrays plus the exchange metadata.  Device placement is the
+    caller's job (``jnp.asarray`` single-process; global sharded arrays in
+    :mod:`repro.core.multihost`)."""
     consts = {k: v for k, v in net.graph.items()
               if needs_blocked or not k.startswith("blk_")}
     consts.update(
@@ -566,6 +639,26 @@ def make_distributed_step(net: StackedNetwork, mesh: Mesh,
         mirror_remote_gather=net.mirror_remote_gather,
         mirror_src_flat=net.mirror_src_flat,
     )
+    return consts
+
+
+def make_distributed_step(net: StackedNetwork, mesh: Mesh,
+                          groups: Sequence[snn.LIFParams],
+                          cfg: DistributedConfig):
+    """Build the jit-able sharded step: DistState -> (DistState, spike bits).
+
+    All graph/metadata arrays are closed over as device-axis-sharded
+    constants.  The returned function is shard_map'ed over the mesh and can
+    be scanned or called per-step.  (Single-process entry point; the
+    multi-process twin is :func:`repro.core.multihost.make_multihost_step`,
+    which shards the same consts across hosts.)
+    """
+    backend = check_net_backend(net, cfg)
+    needs_blocked = backend.needs_blocked
+    smapped = _build_step(mesh, groups, cfg, net.max_delay, net.n_local,
+                          net.n_mirror,
+                          net.blocked_meta if needs_blocked else None)
+    consts = stacked_consts(net, needs_blocked=needs_blocked)
     consts_j = {k: jnp.asarray(v) for k, v in consts.items()}
 
     def step(state: DistState):
@@ -581,6 +674,7 @@ def _build_step(mesh: Mesh, groups: Sequence[snn.LIFParams],
     D = max_delay
     backend = backends_mod.get_backend(cfg.engine.sweep)
     wire = cfg.wire
+    remote_wire = cfg.remote_wire
 
     def step_local(g, state: DistState):
         """Body on ONE shard: every array already squeezed to per-shard.
@@ -615,8 +709,15 @@ def _build_step(mesh: Mesh, groups: Sequence[snn.LIFParams],
         w_native, native_tag, convert = backends_mod.resolve_runtime_weights(
             backend, layout, state.weights, state.weights_layout)
 
-        # ---- (1) exchange of last step's spikes (collective starts here) --
-        mirror_prev, overflow = _exchange(state.prev_bits, g, cfg, wire)
+        # ---- (1) two-tier exchange of last step's spikes ------------------
+        # collectives are ISSUED here - the cross-row/-host boundary tier
+        # first - and their results consumed only below, so under
+        # cfg.overlap the delay>=2 sweep (old ring slots only) never waits
+        # on the wire (tests/test_multihost.py pins the independence)
+        payloads, overflow = _exchange_issue(state.prev_bits, g, cfg, wire,
+                                             remote_wire)
+        mirror_prev = _exchange_finish(payloads, g, cfg, wire, remote_wire,
+                                       n_local, dtype)
 
         # ---- (2) synaptic sweep ------------------------------------------
         if cfg.overlap:

@@ -3,7 +3,8 @@
 This is the reference ("one process / one device") engine.  The distributed
 engine in :mod:`repro.core.distributed` wraps exactly this step inside
 ``shard_map`` and replaces the trivial local spike write with the two-level
-spike exchange.
+spike exchange; :mod:`repro.core.multihost` carries that same step across
+processes (DESIGN.md §11).
 
 Data layout (the TPU adaptation of paper Fig. 12)
 -------------------------------------------------

@@ -1,0 +1,243 @@
+"""Multi-host backend: the two-level decomposition across processes.
+
+This is the layer that makes problem size scale with process count
+(ROADMAP "multi-host backend"; the schedule is Du et al. 2022's
+low-latency brain-simulation exchange, the scaling reference is
+Pastorelli et al. 2015).  It threads BOTH existing registries - every
+``SweepBackend`` (flat / bucketed / pallas / pallas:auto) and every
+``SpikeWire`` (including per-tier selection) - through a multi-process
+device mesh with zero changes to the per-shard hot path: the shard_map'ed
+step of :mod:`repro.core.distributed` is reused verbatim; only array
+*placement* is multi-host-aware here.
+
+Host-aware mapping (DESIGN.md §11)
+----------------------------------
+The (rows, row_width) mesh of the two-level decomposition is built
+row-aligned to hosts: :func:`make_host_mesh` lays ``jax.devices()`` out
+process-major and validates that every mesh row (an Area-Processes group)
+lives on ONE process.  Consequences:
+
+* the intra-row spike-bitmap ``all_gather`` (the dense tier) never
+  crosses a host - it moves bytes inside one process's devices;
+* only the boundary payloads (``n(boundary) << n_local`` under area
+  mapping) ride the inter-host fabric - and they can take their own wire
+  (``DistributedConfig.spike_wire_remote``, e.g. "sparse" IDs inter-host
+  under a "packed" intra-host bitmap);
+* the boundary collective is issued before the delay>=2 sweep
+  (``_exchange_issue`` ordering) and consumed only by the delay-1 path,
+  so the slow inter-host hop overlaps the independent intra-host compute -
+  the paper's §III.C communication thread, as dataflow.
+
+Array plumbing: in a multi-process program every jit input must be a
+GLOBAL array whose addressable shards live on the calling process.
+:func:`shard_stacked` builds those from the (S, ...) host-side arrays via
+``jax.make_array_from_process_local_data`` (each process contributes its
+own rows); :func:`replicate_to_host` is the inverse for results.  CI runs
+this with local CPU processes (``repro.launch.multihost`` spawns them and
+forces per-process host devices); on a real cluster the same code runs
+under the platform's process launcher with TPU/GPU device sets.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Sequence
+
+import numpy as np
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.core import distributed as dist
+from repro.core import snn
+
+__all__ = ["initialize", "HostTopology", "make_host_mesh", "host_topology",
+           "local_shard_slice", "shard_stacked", "replicate_to_host",
+           "make_multihost_step", "init_multihost_state"]
+
+
+def initialize(*, coordinator_address: str | None = None,
+               num_processes: int = 1, process_id: int = 0) -> bool:
+    """Join (or skip) the multi-process jax runtime.
+
+    ``num_processes <= 1`` is a no-op (the single-process paths need no
+    distributed runtime) so callers can be launcher-agnostic.  On CPU the
+    cross-process collectives need the gloo implementation; the config
+    knob only exists on some jax versions, so it is set best-effort (newer
+    versions default to gloo).  Call BEFORE any operation that touches
+    devices; returns True iff the distributed runtime was initialized.
+    """
+    if num_processes <= 1:
+        return False
+    try:
+        jax.config.update("jax_cpu_collectives_implementation", "gloo")
+    except AttributeError:  # knob removed: gloo is the default there
+        pass
+    jax.distributed.initialize(coordinator_address=coordinator_address,
+                               num_processes=num_processes,
+                               process_id=process_id)
+    return True
+
+
+@dataclasses.dataclass(frozen=True)
+class HostTopology:
+    """How the (rows, row_width) decomposition mesh maps onto processes."""
+
+    num_processes: int
+    process_id: int
+    n_rows: int
+    row_width: int
+    row_process: tuple[int, ...]   # owning process per mesh row
+
+    @property
+    def rows_per_host(self) -> int:
+        return self.n_rows // max(self.num_processes, 1)
+
+    @property
+    def n_shards(self) -> int:
+        return self.n_rows * self.row_width
+
+
+def make_host_mesh(n_rows: int, row_width: int,
+                   axis_names: tuple[str, ...] = ("data", "model")) -> Mesh:
+    """Host-aligned (n_rows, row_width) mesh over ``jax.devices()``.
+
+    Devices are laid out process-major (the order ``jax.devices()``
+    guarantees), so consecutive ``row_width`` blocks form the mesh rows;
+    the function validates that every row's devices share one process -
+    the invariant that keeps the intra-row bitmap gather intra-host.  In a
+    multi-process program the mesh must cover every device (a process with
+    no addressable mesh shards cannot participate in the jit).
+    """
+    devs = np.asarray(jax.devices(), dtype=object)
+    need = n_rows * row_width
+    if need > devs.size:
+        raise ValueError(
+            f"mesh ({n_rows}x{row_width}) needs {need} devices, have "
+            f"{devs.size}")
+    if jax.process_count() > 1 and need != devs.size:
+        raise ValueError(
+            f"multi-process mesh must cover all {devs.size} devices, "
+            f"requested {n_rows}x{row_width}={need}")
+    grid = devs[:need].reshape(n_rows, row_width)
+    for r in range(n_rows):
+        procs = {d.process_index for d in grid[r]}
+        if len(procs) != 1:
+            raise ValueError(
+                f"mesh row {r} spans processes {sorted(procs)}; pick a "
+                "row_width that divides the per-host device count so "
+                "Area-Processes rows align to hosts (intra-row gathers "
+                "must stay intra-host)")
+    return Mesh(grid, axis_names)
+
+
+def host_topology(mesh: Mesh) -> HostTopology:
+    """Topology record for a host-aligned mesh (validates alignment)."""
+    grid = np.asarray(mesh.devices, dtype=object)
+    if grid.ndim > 2:   # (outer..., inner): rows = all outer axes flattened
+        grid = grid.reshape(-1, grid.shape[-1])
+    n_rows, row_width = grid.shape
+    row_process = []
+    for r in range(n_rows):
+        procs = {d.process_index for d in grid[r]}
+        if len(procs) != 1:
+            raise ValueError(f"mesh row {r} spans processes {sorted(procs)}")
+        row_process.append(procs.pop())
+    return HostTopology(num_processes=jax.process_count(),
+                        process_id=jax.process_index(),
+                        n_rows=n_rows, row_width=row_width,
+                        row_process=tuple(row_process))
+
+
+def local_shard_slice(mesh: Mesh) -> slice:
+    """Contiguous slice of the stacked shard axis this process owns.
+
+    The stacked (S, ...) arrays are sharded over the flattened mesh, so
+    shard s lives on flat device s; with the process-major layout of
+    :func:`make_host_mesh` each process owns one contiguous block.
+    """
+    flat = np.asarray(mesh.devices, dtype=object).reshape(-1)
+    pid = jax.process_index()
+    mine = [i for i, d in enumerate(flat) if d.process_index == pid]
+    if not mine:
+        return slice(0, 0)
+    lo, hi = mine[0], mine[-1] + 1
+    if mine != list(range(lo, hi)):
+        raise ValueError(
+            "this process's mesh devices are not contiguous along the "
+            "shard axis; build the mesh with make_host_mesh")
+    return slice(lo, hi)
+
+
+def shard_stacked(tree: Any, mesh: Mesh) -> Any:
+    """(S, ...) host-side arrays -> GLOBAL arrays sharded on axis 0.
+
+    Every process passes the full stacked value (cheap: build-time numpy)
+    and contributes only its own rows; the result is a global jax.Array
+    usable as a jit input from every process.  Works unchanged in a
+    single-process program (where it is a plain sharded device_put).
+    """
+    sh = NamedSharding(mesh, P(mesh.axis_names))
+    sl = local_shard_slice(mesh)
+
+    def put(a):
+        a = np.asarray(a)
+        return jax.make_array_from_process_local_data(
+            sh, np.ascontiguousarray(a[sl]), a.shape)
+
+    return jax.tree.map(put, tree)
+
+
+def replicate_to_host(x, mesh: Mesh) -> np.ndarray:
+    """Fetch a (possibly non-addressable) global array as full numpy on
+    EVERY process - one replicating collective, then a local read."""
+    rep = jax.jit(lambda a: a, out_shardings=NamedSharding(mesh, P()))(x)
+    return np.asarray(rep.addressable_data(0))
+
+
+def make_multihost_step(net: dist.StackedNetwork, mesh: Mesh,
+                        groups: Sequence[snn.LIFParams],
+                        cfg: dist.DistributedConfig):
+    """Multi-process twin of :func:`repro.core.distributed.make_distributed_step`.
+
+    The shard_map'ed step program is IDENTICAL (same `_build_step`, same
+    backend registry dispatch, same two-tier exchange); the difference is
+    purely placement - the stacked consts become global arrays with each
+    process contributing its own rows.  Returns ``(step, consts)`` where
+    ``step(state, consts) -> (state, bits)``: unlike the single-process
+    entry point the consts are an explicit OPERAND, because jit forbids
+    closing over arrays that span non-addressable devices - pass them
+    through every jit/scan boundary.  ``state`` comes from
+    :func:`init_multihost_state` (or any state of global arrays).
+    """
+    host_topology(mesh)   # validate row/host alignment up front
+    backend = dist.check_net_backend(net, cfg)
+    smapped = dist._build_step(
+        mesh, groups, cfg, net.max_delay, net.n_local, net.n_mirror,
+        net.blocked_meta if backend.needs_blocked else None)
+    consts = shard_stacked(
+        dist.stacked_consts(net, needs_blocked=backend.needs_blocked), mesh)
+    return smapped, consts
+
+
+def init_multihost_state(net: dist.StackedNetwork,
+                         groups: Sequence[snn.LIFParams], mesh: Mesh,
+                         seed: int = 0, dtype=jnp.float32,
+                         weight_dtype=None,
+                         sweep: str | None = None) -> dist.DistState:
+    """Globally sharded :class:`DistState` for a multi-process mesh.
+
+    Every process computes the identical full stacked state (deterministic
+    from ``seed``; the per-shard PRNG keys are derived from shard index,
+    not process index) and ships only its own rows - so a 2-process x
+    4-device run and a 1-process x 8-device run start from bit-identical
+    state, which is what the trajectory-equivalence contract rests on.
+    """
+    full = dist.init_stacked_state(net, list(groups), seed=seed, dtype=dtype,
+                                   weight_dtype=weight_dtype, sweep=sweep)
+    sharded = shard_stacked(
+        {f.name: getattr(full, f.name)
+         for f in dataclasses.fields(full) if f.name != "weights_layout"},
+        mesh)
+    return dist.DistState(weights_layout=full.weights_layout, **sharded)

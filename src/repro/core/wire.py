@@ -195,6 +195,12 @@ class SparseWire(SpikeWire):
 
 _REGISTRY: dict[str, SpikeWire] = {}
 
+# parameterized variants ("sparse:<rate>") resolve through this RATE-keyed
+# cache, never the public registry: available_wires() stays stable however
+# many specs are resolved, and numerically-equal spellings ("sparse:0.05"
+# vs "sparse:5e-2") share one instance instead of creating duplicates
+_SPARSE_CACHE: dict[float, SpikeWire] = {}
+
 
 def register_wire(name: str, wire: SpikeWire,
                   *, overwrite: bool = False) -> SpikeWire:
@@ -207,8 +213,9 @@ def register_wire(name: str, wire: SpikeWire,
 
 def get_wire(spec) -> SpikeWire:
     """Resolve a codec: an instance passes through; a name hits the
-    registry; ``"sparse:<max_rate>"`` constructs (and caches) a sparse
-    wire provisioned for that per-step firing fraction."""
+    registry; ``"sparse:<max_rate>"`` constructs (and caches, keyed by the
+    parsed rate) a sparse wire provisioned for that per-step firing
+    fraction without touching the public registry."""
     if isinstance(spec, SpikeWire):
         return spec
     if spec in _REGISTRY:
@@ -225,7 +232,11 @@ def get_wire(spec) -> SpikeWire:
             raise ValueError(
                 f"bad spike wire spec {spec!r}: max_rate is a per-step "
                 "firing fraction and must be in [0, 1]")
-        return register_wire(spec, SparseWire(max_rate=rate, name=spec))
+        wire = _SPARSE_CACHE.get(rate)
+        if wire is None:
+            wire = _SPARSE_CACHE[rate] = SparseWire(
+                max_rate=rate, name=f"sparse:{rate:g}")
+        return wire
     raise ValueError(f"unknown spike wire {spec!r}; available: "
                      f"{sorted(_REGISTRY)}")
 

@@ -28,7 +28,7 @@ from jax.sharding import NamedSharding, PartitionSpec as P
 from repro.core import snn
 from repro.core.distributed import (DistributedConfig, DistState,
                                     make_raw_distributed_step,
-                                    wire_bytes_for_dims)
+                                    wire_bytes_for_dims, wire_bytes_split)
 from repro.core.wire import sparse_packed_crossover_fraction
 from repro.core.engine import EngineConfig
 from repro.launch.mesh import make_production_mesh
@@ -87,7 +87,8 @@ def state_and_consts_sds(dims, mesh, axes, *, compact: bool = False):
 
 
 def run_cell(scale: float, multi_pod: bool, wire: str, *, stdp: bool = True,
-             compact: bool = False, overlap: bool = True):
+             compact: bool = False, overlap: bool = True,
+             wire_remote: str | None = None):
     mesh = make_production_mesh(multi_pod=multi_pod)
     axes = mesh.axis_names
     S = mesh.devices.size
@@ -98,7 +99,7 @@ def run_cell(scale: float, multi_pod: bool, wire: str, *, stdp: bool = True,
     cfg = DistributedConfig(
         engine=EngineConfig(dt=0.1, stdp=HPC_STDP if stdp else None),
         comm_mode="area", overlap=overlap, axis_names=axes,
-        spike_wire=wire)
+        spike_wire=wire, spike_wire_remote=wire_remote)
     groups = [snn.LIFParams(), snn.LIFParams(t_ref=1.0)]
     step = make_raw_distributed_step(mesh, groups, cfg,
                                      max_delay=dims["max_delay"],
@@ -113,19 +114,24 @@ def run_cell(scale: float, multi_pod: bool, wire: str, *, stdp: bool = True,
     ma = compiled.memory_analysis()
     # analytic per-shard wire traffic from the codec itself (no graph, no
     # HLO needed - the same SpikeWire.bytes_per_step the engine accounts
-    # with), vs the packed bitmap on identical dims
-    model_bytes = wire_bytes_for_dims(
-        cfg.comm_mode, wire, n_shards=S, row_width=mesh.shape["model"],
-        n_local=dims["n_local"], b_pad=dims["b_pad"])
+    # with), vs the packed bitmap on identical dims, split by tier
+    # (intra-row/-host vs the cross-row boundary hop)
+    split = wire_bytes_split(
+        cfg.comm_mode, wire, wire_remote, n_shards=S,
+        row_width=mesh.shape["model"], n_local=dims["n_local"],
+        b_pad=dims["b_pad"])
+    model_bytes = split["intra"] + split["inter"]
     packed_bytes = wire_bytes_for_dims(
         cfg.comm_mode, "packed", n_shards=S, row_width=mesh.shape["model"],
         n_local=dims["n_local"], b_pad=dims["b_pad"])
     rec = dict(
         scale=scale,
         mesh="2x16x16" if multi_pod else "16x16", wire=wire,
+        wire_remote=wire_remote or wire,
         compact=compact, overlap=overlap,
         n_neurons=n_neurons, n_edges_global=n_edges, **dims,
         wire_model_bytes=model_bytes,
+        wire_bytes_intra=split["intra"], wire_bytes_inter=split["inter"],
         wire_vs_packed=round(model_bytes / packed_bytes, 3),
         crossover_frac=round(
             sparse_packed_crossover_fraction(dims["n_local"]), 5),
@@ -150,28 +156,35 @@ def main():
     ap.add_argument("--out", default="experiments/dryrun_snn.json")
     args = ap.parse_args()
     results = []
-    # (wire, compact, overlap): paper-faithful baseline -> each §Perf
-    # iteration -> the final optimized config (overlap OFF once the wire
-    # is packed; EXPERIMENTS.md §Perf C3) -> the sparse ID wire (CORTEX's
-    # Spikes Broadcast; beats packed below the crossover firing rate)
-    variants = (("f32", False, True), ("packed", False, True),
-                ("packed", True, True), ("packed", True, False),
-                ("sparse", True, True))
+    # (wire, wire_remote, compact, overlap): paper-faithful baseline ->
+    # each §Perf iteration -> the final optimized config (overlap OFF once
+    # the wire is packed; EXPERIMENTS.md §Perf C3) -> the sparse ID wire
+    # (CORTEX's Spikes Broadcast; beats packed below the crossover firing
+    # rate) -> the per-tier multi-host split (dense bitmap intra-host,
+    # sparse IDs on the inter-host boundary hop; DESIGN.md §11)
+    variants = (("f32", None, False, True), ("packed", None, False, True),
+                ("packed", None, True, True), ("packed", None, True, False),
+                ("sparse", None, True, True),
+                ("packed", "sparse", True, True))
     for multi_pod in (False, True):
         for scale in (1.0, 4.0):
-            for wire, compact, overlap in variants:
+            for wire, wire_remote, compact, overlap in variants:
                 rec = run_cell(scale, multi_pod, wire, compact=compact,
-                               overlap=overlap)
+                               overlap=overlap, wire_remote=wire_remote)
                 results.append(rec)
+                wtag = (wire if wire_remote is None
+                        else f"{wire}+{wire_remote}")
                 print(f"[{'2x16x16' if multi_pod else '16x16'}] scale={scale} "
-                      f"wire={wire:6s} compact={int(compact)} "
+                      f"wire={wtag:13s} compact={int(compact)} "
                       f"overlap={int(overlap)} "
                       f"peak={rec['peak_gib']:.2f}GiB "
                       f"c={rec['compute_s']*1e6:8.1f}us "
                       f"m={rec['memory_s']*1e6:8.1f}us "
                       f"n={rec['collective_s']*1e6:8.1f}us "
                       f"wire_model={rec['wire_model_bytes']}B "
-                      f"({rec['wire_vs_packed']:.2f}x packed) "
+                      f"(intra={rec['wire_bytes_intra']}/"
+                      f"inter={rec['wire_bytes_inter']}, "
+                      f"{rec['wire_vs_packed']:.2f}x packed) "
                       f"dom={rec['dominant']}", flush=True)
     # packed<->sparse crossover for the marmoset-scale (scale=1) cells: the
     # per-step firing fraction (and Hz at the paper's dt) above which the

@@ -18,8 +18,8 @@ from __future__ import annotations
 
 import jax
 
-__all__ = ["make_production_mesh", "make_test_mesh", "POD_SHAPE",
-           "SINGLE_POD_SHAPE"]
+__all__ = ["make_production_mesh", "make_test_mesh", "make_snn_host_mesh",
+           "POD_SHAPE", "SINGLE_POD_SHAPE"]
 
 SINGLE_POD_SHAPE = (16, 16)              # 256 chips (one v5e pod)
 POD_SHAPE = (2, 16, 16)                  # 2 pods = 512 chips
@@ -35,3 +35,12 @@ def make_test_mesh(shape=(2, 2), axes=("data", "model")):
     """Small host-device mesh for CPU integration tests (requires
     XLA_FLAGS=--xla_force_host_platform_device_count>=prod(shape))."""
     return jax.make_mesh(shape, axes)
+
+
+def make_snn_host_mesh(n_rows: int, row_width: int):
+    """Host-ALIGNED (rows, model) mesh for the multi-host SNN engine:
+    Area-Processes rows land on single hosts, so the intra-row spike
+    bitmap gather never crosses the inter-host fabric (DESIGN.md §11).
+    Works single- and multi-process; validates the alignment."""
+    from repro.core.multihost import make_host_mesh
+    return make_host_mesh(n_rows, row_width)

@@ -1,0 +1,242 @@
+"""Local multi-process launcher + worker for the multi-host SNN backend.
+
+One file, two roles:
+
+* **Launcher** (no ``--process-id``): spawns N copies of itself as local
+  CPU processes - each child gets
+  ``XLA_FLAGS=--xla_force_host_platform_device_count=<devices>`` and a
+  shared gloo coordinator - then waits and surfaces the result JSON
+  written by process 0.  This is the CI-facing proof that the multi-host
+  backend works without a cluster: 2 processes x N host devices on one
+  box exercise the exact same code path a Fugaku-style deployment would
+  (only the launcher differs).
+* **Worker** (``--process-id`` set): joins the mesh via
+  :func:`repro.core.multihost.initialize`, builds the SAME spec/
+  decomposition/net as every peer (deterministic from the seed), runs the
+  distributed step for ``--steps``, and reports sha256 hashes of the full
+  spike and voltage trajectories plus overflow telemetry and the
+  intra/inter-host wire-byte split - so a 2-process run can be diffed
+  bit-for-bit against a 1-process run.  ``--bench`` adds a timed
+  per-step loop (the ``bench_snn --processes`` axis shells out to this).
+
+Examples::
+
+    PYTHONPATH=src python -m repro.launch.multihost \
+        --processes 2 --devices-per-process 4 --steps 40 --out /tmp/mh.json
+    PYTHONPATH=src python -m repro.launch.multihost \
+        --processes 2 --devices-per-process 2 --wire packed \
+        --wire-remote sparse --bench --out /tmp/mh_bench.json
+"""
+
+from __future__ import annotations
+
+import argparse
+import hashlib
+import json
+import os
+import socket
+import subprocess
+import sys
+import time
+
+__all__ = ["run_launcher", "main"]
+
+
+def _free_port() -> int:
+    with socket.socket() as s:
+        s.bind(("localhost", 0))
+        return s.getsockname()[1]
+
+
+def build_parser() -> argparse.ArgumentParser:
+    ap = argparse.ArgumentParser(
+        description="multi-host SNN backend: local multi-process launcher")
+    ap.add_argument("--processes", type=int, default=2)
+    ap.add_argument("--devices-per-process", type=int, default=4,
+                    help="forced host CPU devices per process")
+    ap.add_argument("--row-width", type=int, default=2,
+                    help="multisection cells per Area-Processes row; must "
+                         "divide devices-per-process (host alignment)")
+    ap.add_argument("--steps", type=int, default=40)
+    ap.add_argument("--scale", type=float, default=0.02,
+                    help="hpc_benchmark scale")
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--drive-boost", type=float, default=3.0,
+                    help="multiplier on the external Poisson rates (keeps "
+                         "tiny CI-scale nets actually firing)")
+    ap.add_argument("--sweep", default="flat",
+                    help="execution backend (flat|bucketed|pallas|pallas:auto)")
+    ap.add_argument("--wire", default="packed",
+                    help="intra-host spike wire codec")
+    ap.add_argument("--wire-remote", default=None,
+                    help="inter-host (boundary) wire codec; default = --wire")
+    ap.add_argument("--comm-mode", default="area", choices=("area", "global"))
+    ap.add_argument("--no-stdp", action="store_true")
+    ap.add_argument("--no-overlap", action="store_true")
+    ap.add_argument("--bench", action="store_true",
+                    help="also time a per-step loop after the trajectory run")
+    ap.add_argument("--out", default="experiments/multihost.json")
+    ap.add_argument("--timeout", type=float, default=900.0)
+    # worker-only (set by the launcher when spawning children)
+    ap.add_argument("--process-id", type=int, default=None,
+                    help=argparse.SUPPRESS)
+    ap.add_argument("--coordinator", default=None, help=argparse.SUPPRESS)
+    return ap
+
+
+# --------------------------------------------------------------------------
+# launcher role
+# --------------------------------------------------------------------------
+
+def run_launcher(args: argparse.Namespace) -> dict:
+    """Spawn the worker processes, wait, return process 0's result dict."""
+    if args.devices_per_process % args.row_width:
+        raise SystemExit(
+            f"--row-width {args.row_width} must divide "
+            f"--devices-per-process {args.devices_per_process} so mesh rows "
+            "align to hosts")
+    coordinator = f"localhost:{_free_port()}"
+    src = os.path.join(os.path.dirname(__file__), "..", "..")
+    env = dict(
+        os.environ,
+        XLA_FLAGS="--xla_force_host_platform_device_count="
+                  f"{args.devices_per_process}",
+        PYTHONPATH=os.pathsep.join(
+            p for p in (os.path.abspath(src),
+                        os.environ.get("PYTHONPATH")) if p),
+    )
+    os.makedirs(os.path.dirname(args.out) or ".", exist_ok=True)
+    base = [sys.executable, "-m", "repro.launch.multihost",
+            "--coordinator", coordinator]
+    for k, v in vars(args).items():
+        if k in ("process_id", "coordinator") or v is None or v is False:
+            continue
+        flag = "--" + k.replace("_", "-")
+        base += [flag] if v is True else [flag, str(v)]
+    procs = [subprocess.Popen(base + ["--process-id", str(i)], env=env)
+             for i in range(args.processes)]
+    # poll ALL workers: one crashing (e.g. a lost coordinator race) must
+    # fail the launch immediately, not after its peers hit the gloo/
+    # --timeout ceiling waiting for it
+    deadline = time.time() + args.timeout
+    pending = dict(enumerate(procs))
+    failed: list[tuple[int, object]] = []
+    while pending and not failed and time.time() < deadline:
+        for i, p in list(pending.items()):
+            rc = p.poll()
+            if rc is not None:
+                del pending[i]
+                if rc != 0:
+                    failed.append((i, rc))
+        if pending and not failed:
+            time.sleep(0.2)
+    for i, p in pending.items():
+        p.kill()
+        p.wait()
+        failed.append((i, "killed"))
+    if failed:
+        raise SystemExit(f"worker processes failed: {failed}")
+    with open(args.out) as f:
+        return json.load(f)
+
+
+# --------------------------------------------------------------------------
+# worker role
+# --------------------------------------------------------------------------
+
+def run_worker(args: argparse.Namespace) -> dict | None:
+    # imports deferred so the LAUNCHER process never touches jax (the
+    # children must see XLA_FLAGS before their first jax import)
+    import jax
+    import numpy as np
+
+    from repro.core import backends as backends_mod
+    from repro.core import engine, models, multihost
+    from repro.core import distributed as dist
+
+    multihost.initialize(coordinator_address=args.coordinator,
+                         num_processes=args.processes,
+                         process_id=args.process_id)
+    n_rows = jax.device_count() // args.row_width
+    spec, stdp = models.hpc_benchmark(scale=args.scale, stdp=True)
+    if args.drive_boost != 1.0:
+        import dataclasses
+        pops = [dataclasses.replace(p, ext_rate_hz=p.ext_rate_hz
+                                    * args.drive_boost)
+                for p in spec.populations]
+        spec = dataclasses.replace(spec, populations=pops)
+    backend = backends_mod.get_backend(args.sweep)
+    dec = dist.mesh_decompose(spec, n_rows, args.row_width)
+    net = dist.prepare_stacked(spec, dec, n_rows, args.row_width,
+                               with_blocked=backend.needs_blocked)
+    mesh = multihost.make_host_mesh(n_rows, args.row_width)
+    cfg = dist.DistributedConfig(
+        engine=engine.EngineConfig(dt=0.1,
+                                   stdp=None if args.no_stdp else stdp,
+                                   sweep=args.sweep),
+        comm_mode=args.comm_mode, overlap=not args.no_overlap,
+        spike_wire=args.wire, spike_wire_remote=args.wire_remote)
+    step, consts = multihost.make_multihost_step(net, mesh,
+                                                 list(spec.groups), cfg)
+    state = multihost.init_multihost_state(net, list(spec.groups), mesh,
+                                           seed=args.seed, sweep=args.sweep)
+
+    t0 = time.time()
+    run = jax.jit(lambda s, c: jax.lax.scan(lambda s, _: step(s, c), s,
+                                            None, length=args.steps))
+    final, bits = run(state, consts)
+    bits_np = multihost.replicate_to_host(bits, mesh).astype(np.uint8)
+    vm_np = multihost.replicate_to_host(final.v_m, mesh)
+    overflow = int(multihost.replicate_to_host(final.wire_overflow,
+                                               mesh).sum())
+    elapsed = time.time() - t0
+    sha = lambda a: hashlib.sha256(
+        np.ascontiguousarray(a).tobytes()).hexdigest()
+    split = dist.wire_bytes_split(
+        args.comm_mode, args.wire, args.wire_remote, n_shards=net.n_shards,
+        row_width=net.row_width, n_local=net.n_local, b_pad=net.b_pad)
+    rec = dict(
+        processes=args.processes, devices=jax.device_count(),
+        n_rows=n_rows, row_width=args.row_width, steps=args.steps,
+        scale=args.scale, seed=args.seed, sweep=args.sweep,
+        wire=args.wire, wire_remote=args.wire_remote or args.wire,
+        comm_mode=args.comm_mode, overlap=not args.no_overlap,
+        stdp=not args.no_stdp,
+        bits_sha256=sha(bits_np), vm_sha256=sha(vm_np),
+        spiked=int(bits_np.sum()), overflow=overflow,
+        wire_bytes_intra=split["intra"], wire_bytes_inter=split["inter"],
+        elapsed_s=round(elapsed, 2),
+    )
+    if args.bench:
+        jstep = jax.jit(step)
+        s, _ = jstep(state, consts)
+        jax.block_until_ready(s.v_m)
+        reps = max(args.steps, 5)
+        t0 = time.perf_counter()
+        for _ in range(reps):
+            s, _ = jstep(s, consts)
+        jax.block_until_ready(s.v_m)
+        rec["us_per_step"] = round(
+            (time.perf_counter() - t0) / reps * 1e6, 2)
+    if jax.process_index() == 0:
+        os.makedirs(os.path.dirname(args.out) or ".", exist_ok=True)
+        with open(args.out, "w") as f:
+            json.dump(rec, f, indent=1)
+        print(json.dumps(rec))
+        return rec
+    return None
+
+
+def main(argv=None):
+    args = build_parser().parse_args(argv)
+    if args.process_id is not None:
+        run_worker(args)
+        return
+    rec = run_launcher(args)
+    print(f"[multihost] {args.processes} process(es) ok: "
+          f"spiked={rec['spiked']} overflow={rec['overflow']} "
+          f"bits={rec['bits_sha256'][:12]}... -> {args.out}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,123 @@
+"""Transitive dataflow analysis over jaxprs: what depends on a collective?
+
+The overlap contract of the distributed step (paper §III.C / Du et al.
+2022; DESIGN.md §11) is a DEPENDENCE claim, not an op-order claim: the
+delay>=2 synaptic sweep must not consume - directly or transitively - the
+result of the spike-exchange collectives, so the scheduler is free to run
+it while the wire is in flight; only the delay-1 path may wait.  This
+module pins that structurally: walk a jaxpr (recursing through pjit /
+shard_map / scan sub-jaxprs), taint every output of the source primitives
+(``all_gather`` by default), propagate taint through dataflow, and report
+each sink-kind equation (``gather`` by default) with its operand sizes and
+taint - so a test can assert "the ring-sized arrivals gather is clean, the
+fresh-bits path is tainted" without depending on HLO scheduling text.
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+__all__ = ["taint_records"]
+
+
+def _is_literal(v) -> bool:
+    return hasattr(v, "val")
+
+
+def _sub_jaxprs(params: dict):
+    """Jaxpr-valued equation params (pjit/shard_map 'jaxpr', scan 'jaxpr',
+    while 'cond_jaxpr'/'body_jaxpr', cond 'branches' tuples...)."""
+    found = []
+    for v in params.values():
+        vs = v if isinstance(v, (tuple, list)) else (v,)
+        for x in vs:
+            inner = getattr(x, "jaxpr", x)   # ClosedJaxpr -> Jaxpr
+            if hasattr(inner, "eqns") and hasattr(inner, "invars"):
+                found.append(inner)
+    return found
+
+
+def _contains_source(jaxpr, sources) -> bool:
+    for eqn in jaxpr.eqns:
+        if eqn.primitive.name in sources:
+            return True
+        if any(_contains_source(s, sources)
+               for s in _sub_jaxprs(eqn.params)):
+            return True
+    return False
+
+
+def taint_records(closed_jaxpr, *, sources=("all_gather",),
+                  kinds=("gather",)) -> list[dict]:
+    """Walk ``closed_jaxpr`` (a ``jax.make_jaxpr`` result); return one
+    record per ``kinds`` equation anywhere in the program:
+
+        {"primitive": str, "operand_elems": tuple[int, ...],
+         "tainted": bool}
+
+    where ``tainted`` means the equation transitively consumes an output
+    of a ``sources`` primitive.  Sub-jaxprs whose invars align 1:1 with
+    the call equation (pjit, shard_map, scan, closed_call) are walked with
+    precise per-operand taint - for ``scan`` the carry feedback is run to
+    a fixed point, so taint reaching an output only via iteration n's
+    carry is still found.  Anything else (cond branches, while) falls back
+    to conservative handling: all outputs are tainted if any input is OR
+    if any branch contains a source primitive.
+    """
+    records: list[dict] = []
+
+    def walk(jaxpr, tainted: set, record: bool = True) -> set:
+        tainted = set(tainted)
+        for eqn in jaxpr.eqns:
+            name = eqn.primitive.name
+            in_taint = any(not _is_literal(v) and v in tainted
+                           for v in eqn.invars)
+            if record and name in kinds:
+                records.append(dict(
+                    primitive=name,
+                    operand_elems=tuple(
+                        int(np.prod(v.aval.shape, dtype=np.int64))
+                        for v in eqn.invars if not _is_literal(v)),
+                    tainted=in_taint))
+            subs = _sub_jaxprs(eqn.params)
+            if (len(subs) == 1
+                    and len(subs[0].invars) == len(eqn.invars)
+                    and len(subs[0].outvars) == len(eqn.outvars)):
+                inner = subs[0]
+                seed = {iv for iv, ov in zip(inner.invars, eqn.invars)
+                        if not _is_literal(ov) and ov in tainted}
+                if (name == "scan"
+                        and isinstance(eqn.params.get("num_consts"), int)
+                        and isinstance(eqn.params.get("num_carry"), int)):
+                    # carry feedback: outvars[:num_carry] feed
+                    # invars[num_consts:num_consts+num_carry] on the next
+                    # iteration - iterate (silently) to a fixed point
+                    nc = eqn.params["num_consts"]
+                    ncar = eqn.params["num_carry"]
+                    while True:
+                        inner_taint = walk(inner, seed, record=False)
+                        fed_back = {
+                            inner.invars[nc + i] for i in range(ncar)
+                            if not _is_literal(inner.outvars[i])
+                            and inner.outvars[i] in inner_taint}
+                        if fed_back <= seed:
+                            break
+                        seed |= fed_back
+                inner_taint = walk(inner, seed, record=record)
+                for in_ov, out_ov in zip(inner.outvars, eqn.outvars):
+                    if not _is_literal(in_ov) and in_ov in inner_taint:
+                        tainted.add(out_ov)
+                if name in sources:
+                    tainted.update(eqn.outvars)
+                continue
+            for sub in subs:   # conservative: seed everything if tainted
+                walk(sub, set(sub.invars) if in_taint else set(),
+                     record=record)
+            if (name in sources or in_taint
+                    or any(_contains_source(s, sources) for s in subs)):
+                tainted.update(eqn.outvars)
+        return tainted
+
+    inner = getattr(closed_jaxpr, "jaxpr", closed_jaxpr)
+    walk(inner, set())
+    return records

@@ -9,8 +9,11 @@ property tests degrade to skips via ``tests/_hypothesis_compat``.
 import os
 import sys
 
-# never inherit a dry-run flag into the test world
-os.environ.pop("XLA_FLAGS", None)
+# never inherit a dry-run flag into the test world - unless the CI leg
+# explicitly wants a forced multi-device host world (e.g. the 8-device
+# distributed/multihost leg sets REPRO_KEEP_XLA_FLAGS=1)
+if not os.environ.get("REPRO_KEEP_XLA_FLAGS"):
+    os.environ.pop("XLA_FLAGS", None)
 sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
 
 try:

@@ -123,10 +123,10 @@ WIRE_CODE = textwrap.dedent("""
     register_wire("tiny", SparseWire(max_rate=0.0, min_capacity=1,
                                      name="tiny"))
 
-    def run(mode, wire):
+    def run(mode, wire, rwire=None):
         cfg = dist.DistributedConfig(
             engine=engine.EngineConfig(dt=0.1, stdp=stdp),
-            comm_mode=mode, spike_wire=wire)
+            comm_mode=mode, spike_wire=wire, spike_wire_remote=rwire)
         step, _ = dist.make_distributed_step(net, mesh, list(spec.groups),
                                              cfg)
         state = dist.init_stacked_state(net, list(spec.groups))
@@ -145,6 +145,11 @@ WIRE_CODE = textwrap.dedent("""
             bits, ov = run(mode, wire)
             results[f"{mode}-{wire}"] = bool((bits == ref).all())
             results[f"{mode}-{wire}-overflow"] = ov
+        # per-tier wires: dense bitmap on the intra-row tier, sparse IDs
+        # on the cross-row boundary tier (the multi-host default split)
+        bits, ov = run(mode, "packed", "sparse")
+        results[f"{mode}-packed+sparse"] = bool((bits == ref).all())
+        results[f"{mode}-packed+sparse-overflow"] = ov
     # starved capacity: trajectories may legitimately diverge (lossy), but
     # the saturation MUST surface in telemetry
     _, tiny_ov = run("area", "tiny")
@@ -168,6 +173,9 @@ def test_cross_wire_trajectories_and_overflow_telemetry():
             assert res[f"{mode}-{wire}"], \
                 f"wire {wire} diverged from packed under {mode}"
             assert res[f"{mode}-{wire}-overflow"] == 0
+        assert res[f"{mode}-packed+sparse"], \
+            f"per-tier packed+sparse diverged from packed under {mode}"
+        assert res[f"{mode}-packed+sparse-overflow"] == 0
     assert res["tiny-overflow"] > 0, \
         "starved sparse wire saturated without telemetry"
 
@@ -290,3 +298,138 @@ def test_sparse_wire_traffic_beats_packed_at_marmoset_dims():
     area = [wire_bytes_for_dims("area", w, **dims)
             for w in ("f32", "u8", "packed", "sparse")]
     assert area == sorted(area, reverse=True)
+
+
+OVERFLOW_CODE = textwrap.dedent("""
+    import dataclasses, functools, json, tempfile
+    import numpy as np
+    import jax, jax.numpy as jnp
+    from jax.sharding import PartitionSpec as P
+    from repro.checkpoint.manager import CheckpointManager
+    from repro.core import engine, models
+    from repro.core import distributed as dist
+    from repro.core.wire import SparseWire, register_wire
+    from repro.utils.jax_compat import shard_map
+
+    spec, stdp = models.hpc_benchmark(scale=0.02, stdp=True)
+    pops = [dataclasses.replace(p, ext_rate_hz=p.ext_rate_hz * 3.0)
+            for p in spec.populations]
+    spec = dataclasses.replace(spec, populations=pops)
+    mesh = jax.make_mesh((4, 2), ("data", "model"))
+    dec = dist.mesh_decompose(spec, 4, 2)
+    net = dist.prepare_stacked(spec, dec, 4, 2, with_blocked=False)
+    register_wire("tiny", SparseWire(max_rate=0.0, min_capacity=1,
+                                     name="tiny"))
+    results = {}
+
+    # ---- part A: exact per-tier counting through _exchange -------------
+    consts = dict(
+        boundary_slots=jnp.asarray(net.boundary_slots),
+        mirror_is_intra=jnp.asarray(net.mirror_is_intra),
+        mirror_row_gather=jnp.asarray(net.mirror_row_gather),
+        mirror_remote_gather=jnp.asarray(net.mirror_remote_gather),
+        mirror_src_flat=jnp.asarray(net.mirror_src_flat),
+        mirror_src_idx=jnp.asarray(net.graph["mirror_src_idx"]),
+    )
+    bs = np.asarray(net.boundary_slots)
+    real_b = (bs < net.n_local).sum(axis=1)        # live boundary slots
+    sp = P(("data", "model"))
+
+    def overflow_of(bits_np, mode):
+        cfg = dist.DistributedConfig(engine=engine.EngineConfig(dt=0.1),
+                                     comm_mode=mode, spike_wire="tiny")
+        def local(b, g):
+            _, ov = dist._exchange(b[0], {k: v[0] for k, v in g.items()},
+                                   cfg, cfg.wire, cfg.remote_wire)
+            return ov[None]
+        ex = jax.jit(shard_map(local, mesh=mesh, in_specs=(sp, sp),
+                               out_specs=sp))
+        return np.asarray(ex(jnp.asarray(bits_np), consts)).tolist()
+
+    ones = np.ones((net.n_shards, net.n_local), np.float32)
+    single = np.zeros_like(ones); single[:, 0] = 1.0
+    results["ones-area"] = overflow_of(ones, "area")
+    results["ones-global"] = overflow_of(ones, "global")
+    results["single-area"] = overflow_of(single, "area")
+    # every local bitmap saturates (capacity 1 < n_local); the boundary
+    # tier saturates exactly where >1 live boundary neuron fired
+    results["expect-area"] = (1 + (real_b > 1)).astype(int).tolist()
+    results["real_b"] = real_b.astype(int).tolist()
+
+    # ---- part B: accumulation across a checkpoint/restore boundary -----
+    def make_run(mode):
+        cfg = dist.DistributedConfig(
+            engine=engine.EngineConfig(dt=0.1, stdp=stdp),
+            comm_mode=mode, spike_wire="tiny")
+        step, _ = dist.make_distributed_step(net, mesh, list(spec.groups),
+                                             cfg)
+        @functools.partial(jax.jit, static_argnums=1)
+        def scan(s, n):
+            return jax.lax.scan(lambda s, _: step(s), s, None, length=n)
+        return scan
+
+    for mode in ("area", "global"):
+        scan = make_run(mode)
+        s0 = dist.init_stacked_state(net, list(spec.groups))
+        mid, _ = scan(s0, 100)
+        mgr = CheckpointManager(tempfile.mkdtemp(), keep=1)
+        mgr.save(100, mid)
+        restored, _ = mgr.restore(dist.init_stacked_state(
+            net, list(spec.groups)))
+        fin_r, bits_r = scan(restored, 80)
+        fin_u, bits_u = scan(mid, 80)
+        results[f"{mode}-mid-overflow"] = int(
+            np.asarray(mid.wire_overflow).sum())
+        results[f"{mode}-restored-overflow-equal"] = bool(
+            (np.asarray(fin_r.wire_overflow)
+             == np.asarray(fin_u.wire_overflow)).all())
+        results[f"{mode}-restored-bits-equal"] = bool(
+            (np.asarray(bits_r) == np.asarray(bits_u)).all())
+        results[f"{mode}-final-overflow"] = int(
+            np.asarray(fin_u.wire_overflow).sum())
+    print(json.dumps(results))
+""")
+
+
+@pytest.mark.slow
+def test_wire_overflow_tier_accounting_and_checkpoint():
+    """DistState.wire_overflow telemetry contract: in "area" mode each of
+    the two tiers (intra-row local payload, cross-row boundary payload) is
+    counted EXACTLY once per step, "global" mode counts its single gather
+    once, a sub-capacity step counts nothing - and the counter is ordinary
+    restorable state: a run resumed from a checkpoint accumulates to the
+    same totals (and trajectory) as the uninterrupted run."""
+    out = run_sub(OVERFLOW_CODE)
+    res = json.loads(out.strip().splitlines()[-1])
+    assert res["ones-area"] == res["expect-area"], res
+    assert res["ones-global"] == [1] * len(res["ones-global"])
+    assert res["single-area"] == [0] * len(res["single-area"]), \
+        "sub-capacity payloads must not raise phantom overflow"
+    assert max(res["real_b"]) > 1, "vacuous fixture: no boundary tier fires"
+    for mode in ("area", "global"):
+        assert res[f"{mode}-mid-overflow"] > 0, \
+            f"starved wire never saturated under {mode} - vacuous"
+        assert res[f"{mode}-final-overflow"] >= res[f"{mode}-mid-overflow"]
+        assert res[f"{mode}-restored-overflow-equal"], \
+            f"overflow lost across checkpoint/restore under {mode}"
+        assert res[f"{mode}-restored-bits-equal"]
+
+
+def test_wire_bytes_split_tiers():
+    """Intra/inter tier accounting: the split sums to the total, "global"
+    mode is all-inter, and swapping only the REMOTE wire moves only the
+    inter-host term (the per-tier wire contract)."""
+    dims = dict(n_shards=8, row_width=2, n_local=4096, b_pad=640)
+    from repro.core.distributed import wire_bytes_split
+    for mode in ("area", "global"):
+        s = wire_bytes_split(mode, "packed", **dims)
+        assert s["intra"] + s["inter"] == wire_bytes_for_dims(
+            mode, "packed", **dims)
+    assert wire_bytes_split("global", "packed", **dims)["intra"] == 0
+    a = wire_bytes_split("area", "packed", **dims)
+    b = wire_bytes_split("area", "packed", "sparse", **dims)
+    assert b["intra"] == a["intra"] and b["inter"] != a["inter"]
+    assert b["inter"] == 8 * get_wire("sparse").bytes_per_step(640)
+    # global mode's single gather rides the remote-tier wire
+    g = wire_bytes_split("global", "f32", "packed", **dims)
+    assert g["inter"] == 8 * get_wire("packed").bytes_per_step(4096)

@@ -1,0 +1,65 @@
+"""jaxpr dataflow taint analysis (repro.utils.jaxpr_deps) - the engine
+behind the overlap-schedule contract test.  Sources are parameterized, so
+these units use cheap stand-ins (``sin``) instead of a mesh collective."""
+
+import jax
+import jax.numpy as jnp
+
+from repro.utils.jaxpr_deps import taint_records
+
+
+def _ring_gathers(recs, n):
+    return [r for r in recs if n in r["operand_elems"]]
+
+
+def test_direct_taint_and_clean_path():
+    def f(x, y):
+        a = jnp.sin(x)                      # source
+        g1 = jnp.take(a, jnp.arange(2))     # depends on source
+        g2 = jnp.take(y, jnp.arange(2))     # independent
+        return g1 + g2
+
+    recs = taint_records(jax.make_jaxpr(f)(jnp.ones(8), jnp.ones(16)),
+                         sources=("sin",))
+    assert len(recs) == 2
+    by_size = {r["operand_elems"][0]: r["tainted"] for r in recs}
+    assert by_size[8] is True and by_size[16] is False
+
+
+def test_scan_carry_feedback_reaches_fixed_point():
+    """Taint that enters the carry on iteration n and only reaches the
+    OTHER carry slot via the feedback (a, b) -> (b, sin(a)) must still
+    taint both scan outputs - the single-pass analysis missed this."""
+    def f(x):
+        def body(c, _):
+            a, b = c
+            return (b, jnp.sin(a)), None
+        (a, b), _ = jax.lax.scan(body, (x, x), None, length=3)
+        return (jnp.take(a, jnp.arange(2)),   # tainted only via feedback
+                jnp.take(b, jnp.arange(2)))
+
+    recs = taint_records(jax.make_jaxpr(f)(jnp.ones(4)), sources=("sin",))
+    outer = [r for r in recs if r["operand_elems"][0] == 4]
+    assert len(outer) == 2
+    assert all(r["tainted"] for r in outer), recs
+
+
+def test_source_inside_cond_branch_taints_downstream():
+    """A source primitive living only inside a lax.cond branch (the
+    conservative sub-jaxpr path) must taint the cond's outputs."""
+    def f(x):
+        y = jax.lax.cond(x[0] > 0, jnp.sin, lambda v: v * 2.0, x)
+        return jnp.take(y, jnp.arange(2))
+
+    recs = taint_records(jax.make_jaxpr(f)(jnp.ones(4)), sources=("sin",))
+    assert recs and all(r["tainted"] for r in recs
+                        if r["operand_elems"][0] == 4), recs
+
+
+def test_taint_through_nested_jit():
+    def f(x):
+        g = jax.jit(lambda v: jnp.sin(v) + 1.0)
+        return jnp.take(g(x), jnp.arange(2))
+
+    recs = taint_records(jax.make_jaxpr(f)(jnp.ones(4)), sources=("sin",))
+    assert any(r["tainted"] for r in recs), recs

@@ -172,3 +172,18 @@ def test_sparse_decode_under_jit():
     f = jax.jit(lambda b: w.decode(w.encode(b), n, jnp.float32))
     bits = jnp.zeros((n,), jnp.float32).at[jnp.asarray([3, 77])].set(1.0)
     np.testing.assert_array_equal(np.asarray(f(bits)), np.asarray(bits))
+
+
+def test_parameterized_specs_do_not_mutate_registry():
+    """Resolving "sparse:<rate>" specs must not grow the public registry
+    (it once registered every resolved string permanently), and
+    numerically-equal spellings must share one cached instance."""
+    before = available_wires()
+    a = get_wire("sparse:0.123")
+    b = get_wire("sparse:5e-2")
+    c = get_wire("sparse:0.05")
+    assert available_wires() == before
+    assert b is c, "numerically-equal specs must hit one cache entry"
+    assert a is not b and a.max_rate == 0.123
+    # repeated resolution of the same spelling is stable too
+    assert get_wire("sparse:0.123") is a

@@ -1,8 +1,11 @@
-"""Per-arch smoke-scale step benchmarks + serving throughput.
+"""Per-arch smoke-scale step benchmarks + serving throughput + the SNN
+scenario zoo.
 
 Wall times at smoke scale verify every family's step functions execute and
 give a relative cost fingerprint; TPU-scale cost is covered by §Roofline
-(static analysis), not by these CPU timings.
+(static analysis), not by these CPU timings.  The scenario rows do the
+same for the CORTEX engine's scenario zoo (repro.core.models) x neuron
+models (DESIGN.md §12): every registered workload steps end-to-end.
 """
 
 import time
@@ -64,6 +67,47 @@ def bench_serving(out):
         f"prefill_s={stats.prefill_s:.3f};tokens={stats.tokens_out}")
 
 
+def bench_snn_scenarios(out):
+    """Scenario-zoo step timings: one engine step fingerprint per
+    registered scenario and per neuron model's demo network."""
+    import numpy as np
+
+    from repro.core import builder, engine, models
+    from repro.core import neuron_models as neuron_models_mod
+
+    cells = [(f"scenario/{name}",) + models.get_scenario(name)
+             for name in models.available_scenarios()]
+    cells += [(f"model/{m}",) + models.model_demo(m, scale=0.01)
+              for m in ("lif", "izhikevich", "adex", "poisson")]
+    for tag, spec, stdp in cells:
+        nmodel = neuron_models_mod.get_model(spec.neuron_model)
+        # multi-area specs need >= 1 device per area under area mapping;
+        # this is a 1-shard fingerprint, so fall back to random there
+        method = "random" if len(spec.areas) > 1 else "area"
+        g = builder.build_shards(
+            spec, builder.decompose(spec, 1, method=method))[0] \
+            .device_arrays()
+        table = nmodel.make_param_table(list(spec.groups), dt=0.1)
+        cfg = engine.EngineConfig(dt=0.1, stdp=stdp,
+                                  neuron_model=spec.neuron_model)
+        st = engine.init_state(g, list(spec.groups), jax.random.key(0),
+                               neuron_model=spec.neuron_model)
+        step = engine.make_step_fn(g, table, cfg)
+        st, _ = step(st)
+        n = 10
+        spiked = 0
+        t0 = time.perf_counter()
+        for _ in range(n):
+            st, bits = step(st)
+            spiked += int(np.asarray(bits).sum())
+        jax.block_until_ready(st.neurons.v_m)
+        us = (time.perf_counter() - t0) / n * 1e6
+        out(f"snn_{tag}", us,
+            f"n={spec.n_neurons};edges={g.n_edges};"
+            f"model={spec.neuron_model};spiked={spiked}")
+
+
 def main(out):
     bench_train_steps(out)
     bench_serving(out)
+    bench_snn_scenarios(out)

@@ -45,6 +45,7 @@ sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
 
 from repro.core import backends as backends_mod
 from repro.core import builder, engine, models, snn, stdp as stdp_mod
+from repro.core import neuron_models as neuron_models_mod
 from repro.core.backends import available_backends
 from repro.core.distributed import (DistributedConfig, init_stacked_state,
                                     make_distributed_step, mesh_decompose,
@@ -64,20 +65,40 @@ def _bytes_of_shard(g) -> int:
     return tot
 
 
-def bench_step_scaling(out, backends=DEFAULT_BACKENDS, *, quick=False):
+def _scenario_net(scale, *, model="lif", scenario=None):
+    """(spec, stdp, tag) for the step-scaling axes: the hpc verification
+    net by default, a named scenario-zoo entry, or the cross-model demo
+    network for a NeuronModel (ISSUE: the --model / --scenario axes)."""
+    if scenario:
+        spec, stdp = models.get_scenario(scenario, scale=scale)
+        return spec, stdp, scenario
+    if model != "lif":
+        spec, stdp = models.model_demo(model, scale=scale,
+                                       stdp=(model != "poisson"))
+        return spec, stdp, f"demo-{model}"
+    spec, stdp = models.hpc_benchmark(scale=scale, stdp=True)
+    return spec, stdp, "hpc_benchmark"
+
+
+def bench_step_scaling(out, backends=DEFAULT_BACKENDS, *, quick=False,
+                       model="lif", scenario=None):
     scales = (0.02,) if quick else (0.02, 0.05, 0.1)
     reps = 20 if quick else 100
     for scale in scales:
-        spec, stdp = models.hpc_benchmark(scale=scale, stdp=True)
+        spec, stdp, tag = _scenario_net(scale, model=model,
+                                        scenario=scenario)
+        nmodel = neuron_models_mod.get_model(spec.neuron_model)
         dec = builder.decompose(spec, 1)
         g = builder.build_shards(spec, dec)[0].device_arrays()
-        table = snn.make_param_table(list(spec.groups), dt=0.1)
+        table = nmodel.make_param_table(list(spec.groups), dt=0.1)
         for sweep in backends:
-            cfg = engine.EngineConfig(dt=0.1, stdp=stdp, sweep=sweep)
+            cfg = engine.EngineConfig(dt=0.1, stdp=stdp, sweep=sweep,
+                                      neuron_model=spec.neuron_model)
             # native-layout weights: the measured loop is the resident hot
             # path, not the flat-state compatibility conversion
             st = engine.init_state(g, list(spec.groups), jax.random.key(0),
-                                   sweep=sweep)
+                                   sweep=sweep,
+                                   neuron_model=spec.neuron_model)
             step = engine.make_step_fn(g, table, cfg)
             st, _ = step(st)  # compile+warm
             t0 = time.perf_counter()
@@ -86,8 +107,9 @@ def bench_step_scaling(out, backends=DEFAULT_BACKENDS, *, quick=False):
             jax.block_until_ready(st.v_m if hasattr(st, "v_m")
                                   else st.neurons.v_m)
             us = (time.perf_counter() - t0) / reps * 1e6
-            out(f"snn_step/{sweep}/scale{scale}", us,
-                dict(edges=g.n_edges))
+            out(f"snn_step/{sweep}/{tag}/scale{scale}", us,
+                dict(edges=g.n_edges, model=spec.neuron_model,
+                     scenario=tag))
 
 
 def _time(fn, args, reps):
@@ -100,26 +122,35 @@ def _time(fn, args, reps):
     return (time.perf_counter() - t0) / reps * 1e6
 
 
-def bench_profile(out, backends=DEFAULT_BACKENDS, *, quick=False):
+def bench_profile(out, backends=DEFAULT_BACKENDS, *, quick=False,
+                  model="lif", scenario=None):
     """Per-phase hot-path breakdown: sweep / neuron_update / stdp per
     execution backend on one shard (weights in the backend's NATIVE layout,
     as the engine carries them - the loop pays no ``edge_perm``
     conversion), plus the spike-exchange phase through the real shard_map
     collective path.  The ``sweep_plus_stdp`` record is the ISSUE's
-    acceptance metric for the fused blocked hot path."""
+    acceptance metric for the fused blocked hot path.  ``model`` /
+    ``scenario`` swap the network and the neuron_update dynamics (the
+    NeuronModel registry axis); every record carries the model name."""
     scale = 0.02 if quick else 0.1
     reps = 5 if quick else 30
-    spec, stdp_params = models.hpc_benchmark(scale=scale, stdp=True)
+    spec, stdp_params, tag = _scenario_net(scale, model=model,
+                                           scenario=scenario)
+    if stdp_params is None:
+        stdp_params = models.HPC_STDP   # profile the plasticity phase too
+    nmodel = neuron_models_mod.get_model(spec.neuron_model)
     g = builder.build_shards(spec, builder.decompose(spec, 1))[0] \
         .device_arrays()
-    table = jnp.asarray(snn.make_param_table(list(spec.groups), dt=0.1))
+    table = jnp.asarray(nmodel.make_param_table(list(spec.groups), dt=0.1))
     rng = np.random.default_rng(0)
     ring = jnp.asarray((rng.uniform(size=(spec.max_delay, g.n_mirror))
                         < 0.02).astype(np.float32))
     spk = jnp.asarray((rng.uniform(size=g.n_local) < 0.05)
                       .astype(np.float32))
-    neurons = snn.init_state(g.n_local, np.asarray(g.group_id),
-                             list(spec.groups))
+    neurons = nmodel.init_state(g.n_local, np.asarray(g.group_id),
+                                list(spec.groups))
+    mkey = jax.random.key(0) if nmodel.stochastic else None
+    t0j = jnp.asarray(0, jnp.int32)
     traces = stdp_mod.init_traces(g.n_mirror, g.n_local, jnp.float32)
     iex = jnp.asarray(rng.uniform(0, 50, g.n_local).astype(np.float32))
     iin = jnp.asarray(rng.uniform(-50, 0, g.n_local).astype(np.float32))
@@ -127,7 +158,8 @@ def bench_profile(out, backends=DEFAULT_BACKENDS, *, quick=False):
         backend = backends_mod.get_backend(name)
         layout = backend.prepare(g)
         w = backend.to_native_weights(layout, g.weight_init)
-        meta = dict(edges=g.n_edges, scale=scale, phase=None)
+        meta = dict(edges=g.n_edges, scale=scale, phase=None,
+                    model=spec.neuron_model)
 
         sweep = jax.jit(lambda w, ring, t: backend.sweep(layout, w, ring, t))
         t5 = jnp.asarray(5, jnp.int32)
@@ -136,7 +168,7 @@ def bench_profile(out, backends=DEFAULT_BACKENDS, *, quick=False):
             dict(meta, phase="sweep"))
 
         nup = jax.jit(lambda n, iex, iin: backend.neuron_update(
-            layout, n, table, iex, iin))
+            layout, n, table, iex, iin, model=nmodel, key=mkey, t=t0j))
         out(f"snn_profile/{name}/neuron_update",
             _time(nup, (neurons, iex, iin), reps),
             dict(meta, phase="neuron_update"))
@@ -199,7 +231,8 @@ def _bench_profile_exchange(out, reps):
 
 def bench_wire_exchange(out, wires=DEFAULT_WIRES,
                         comm_modes=DEFAULT_COMM_MODES, *,
-                        remote_wire=None, quick=False):
+                        remote_wire=None, quick=False, model="lif",
+                        scenario=None, backend=None):
     """Distributed step time per (spike-wire codec x comm mode).
 
     Uses whatever devices this process has (1 is fine: the encode/decode
@@ -208,24 +241,36 @@ def bench_wire_exchange(out, wires=DEFAULT_WIRES,
     shard_map step.  ``remote_wire`` puts a different codec on the
     cross-row boundary tier (the inter-host hop under a host-aligned
     mesh); the JSON records split the wire bytes intra/inter either way.
+    ``scenario``/``model`` swap the network (default: the multi-area
+    marmoset case) - e.g. ``--scenario brunel --backend pallas
+    --spike-wire sparse`` runs the zoo end-to-end through the sharded
+    step; ``backend`` selects the execution backend (default flat).
     """
     n_dev = jax.device_count()
     width = 2 if n_dev % 2 == 0 else 1
     rows = n_dev // width
     mesh = jax.make_mesh((rows, width), ("data", "model"))
-    spec = models.marmoset(scale=0.004, n_areas=4)
+    if scenario or model != "lif":
+        spec, _, tag = _scenario_net(0.02, model=model, scenario=scenario)
+    else:
+        spec, tag = models.marmoset(scale=0.004, n_areas=4), "marmoset"
+    sweep = backend or "flat"
+    needs_blocked = backends_mod.get_backend(sweep).needs_blocked
     dec = mesh_decompose(spec, rows, width)
-    net = prepare_stacked(spec, dec, rows, width, with_blocked=False)
+    net = prepare_stacked(spec, dec, rows, width,
+                          with_blocked=needs_blocked)
     reps = 10 if quick else 50
     for mode in comm_modes:
         for wire in wires:
             cfg = DistributedConfig(
-                engine=engine.EngineConfig(dt=models.DT_MS),
+                engine=engine.EngineConfig(dt=models.DT_MS, sweep=sweep,
+                                           neuron_model=spec.neuron_model),
                 comm_mode=mode, spike_wire=wire,
                 spike_wire_remote=remote_wire)
             step, _ = make_distributed_step(net, mesh, list(spec.groups),
                                             cfg)
-            state = init_stacked_state(net, list(spec.groups))
+            state = init_stacked_state(net, list(spec.groups), sweep=sweep,
+                                       neuron_model=spec.neuron_model)
             jstep = jax.jit(step)
             state, _ = jstep(state)  # compile+warm
             t0 = time.perf_counter()
@@ -238,12 +283,13 @@ def bench_wire_exchange(out, wires=DEFAULT_WIRES,
                 mode, wire, remote_wire, n_shards=net.n_shards,
                 row_width=net.row_width, n_local=net.n_local,
                 b_pad=net.b_pad)
-            tag = wire if remote_wire is None else f"{wire}+{remote_wire}"
-            out(f"snn_wire/{mode}/{tag}", us,
+            wtag = wire if remote_wire is None else f"{wire}+{remote_wire}"
+            out(f"snn_wire/{mode}/{wtag}", us,
                 dict(wire_bytes_step=split["intra"] + split["inter"],
                      wire_bytes_intra=split["intra"],
                      wire_bytes_inter=split["inter"],
-                     mesh=f"{rows}x{width}", overflow=overflow))
+                     mesh=f"{rows}x{width}", overflow=overflow,
+                     model=spec.neuron_model, scenario=tag, sweep=sweep))
 
 
 def bench_multiprocess(out, *, processes: int, devices_per_process: int,
@@ -305,12 +351,13 @@ def bench_mapping_comparison(out, *, quick=False):
 def main(out, backend: str | None = None, *, wires=DEFAULT_WIRES,
          comm_modes=DEFAULT_COMM_MODES, remote_wire=None,
          processes: int | None = None, devices_per_process: int = 2,
-         quick: bool = False, profile: bool = False):
+         quick: bool = False, profile: bool = False, model: str = "lif",
+         scenario: str | None = None):
     if profile:
         # per-phase breakdown mode (sweep / neuron_update / stdp /
         # exchange) - the hot-path drill-down, instead of the scaling axes
         bench_profile(out, (backend,) if backend else DEFAULT_BACKENDS,
-                      quick=quick)
+                      quick=quick, model=model, scenario=scenario)
         return
     if processes:
         # multi-process axis only: real cross-process collectives through
@@ -322,9 +369,10 @@ def main(out, backend: str | None = None, *, wires=DEFAULT_WIRES,
                            remote_wire=remote_wire, quick=quick)
         return
     bench_step_scaling(out, (backend,) if backend else DEFAULT_BACKENDS,
-                       quick=quick)
+                       quick=quick, model=model, scenario=scenario)
     bench_wire_exchange(out, wires, comm_modes, remote_wire=remote_wire,
-                        quick=quick)
+                        quick=quick, model=model, scenario=scenario,
+                        backend=backend)
     bench_mapping_comparison(out, quick=quick)
 
 
@@ -338,6 +386,14 @@ if __name__ == "__main__":
                     help="restrict the step benchmark to one execution "
                          "backend (default: flat, bucketed and pallas; "
                          "'pallas:auto' runs with autotuned block shapes)")
+    ap.add_argument("--model", default="lif",
+                    help="NeuronModel registry axis (lif|izhikevich|adex|"
+                         "poisson): run the cross-model demo network with "
+                         "these dynamics; records carry the model name")
+    ap.add_argument("--scenario", default=None,
+                    help="scenario-zoo network for the step/wire benches "
+                         "(hpc_benchmark|brunel|microcircuit|marmoset); "
+                         "overrides --model's demo net")
     ap.add_argument("--spike-wire", default=None,
                     help="restrict the wire benchmark to one codec "
                          "(f32|u8|packed|sparse|sparse:<rate>; default: "
@@ -366,7 +422,12 @@ if __name__ == "__main__":
                     help="write records (incl. wire bytes/step) as JSON; "
                          "'' disables")
     args = ap.parse_args()
-    if args.spike_wire:  # fail fast, before the step-scaling phase runs
+    # fail fast, before the step-scaling phase runs
+    neuron_models_mod.get_model(args.model)
+    if args.scenario and args.scenario not in models.available_scenarios():
+        ap.error(f"unknown --scenario {args.scenario!r}; available: "
+                 f"{models.available_scenarios()}")
+    if args.spike_wire:
         from repro.core.wire import get_wire
         get_wire(args.spike_wire)
     if args.spike_wire_remote:
@@ -390,7 +451,8 @@ if __name__ == "__main__":
          remote_wire=args.spike_wire_remote,
          processes=args.processes,
          devices_per_process=args.devices_per_process,
-         quick=args.quick, profile=args.profile)
+         quick=args.quick, profile=args.profile,
+         model=args.model, scenario=args.scenario)
     if args.json:
         os.makedirs(os.path.dirname(args.json) or ".", exist_ok=True)
         with open(args.json, "w") as f:

@@ -5,7 +5,8 @@ per-dt hot path race-free *structurally*: each partition writes only its own
 post rows.  That property is substrate-independent, so the three stages -
 
     sweep          edges -> per-neuron (input_ex, input_in) + per-edge arrivals
-    neuron_update  fused LIF propagate / threshold / reset / refractory
+    neuron_update  fused propagate / threshold / reset / refractory
+                   (model-dispatched through repro.core.neuron_models, §12)
     stdp_update    pl-STDP weight update on owned edges
 
 - are expressed here once as a :class:`SweepBackend` interface with
@@ -60,10 +61,10 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.core import neuron_models as neuron_models_mod
 from repro.core import snn
 from repro.core import stdp as stdp_mod
 from repro.core.layout import BlockedGraph, blocked_layout
-from repro.kernels.lif_step import lif_step_kernel
 from repro.kernels.stdp_update import stdp_update_kernel
 from repro.kernels.synaptic_gather import synaptic_gather
 
@@ -372,10 +373,19 @@ class SweepBackend:
     # -- neuron dynamics --------------------------------------------------
     def neuron_update(self, layout: EdgeLayout, neurons, table, input_ex,
                       input_in, *,
-                      synapse_model: str = snn.SynapseModel.CURRENT_EXP):
-        """Fused LIF propagate/threshold/reset/refractory for one dt."""
-        return snn.lif_step(neurons, table, input_ex, input_in,
-                            synapse_model=synapse_model)
+                      synapse_model: str = snn.SynapseModel.CURRENT_EXP,
+                      model=None, key=None, t=None):
+        """Fused propagate/threshold/reset/refractory for one dt,
+        dispatched through the NeuronModel registry (DESIGN.md §12).
+
+        ``model`` is a registry name or NeuronModel instance (None =
+        "lif", the historical default - bit-identical to the pre-registry
+        path); ``key``/``t`` feed stochastic models (poisson emitters)
+        and are ignored by deterministic dynamics.
+        """
+        m = neuron_models_mod.get_model("lif" if model is None else model)
+        return m.step(neurons, table, input_ex, input_in,
+                      synapse_model=synapse_model, key=key, t=t)
 
     # -- plasticity -------------------------------------------------------
     def stdp_update(self, layout: EdgeLayout, weights, arrived, post_spike,
@@ -579,27 +589,18 @@ class PallasBackend(SweepBackend):
         return ex, inh, arrived, ring
 
     def neuron_update(self, layout, neurons, table, input_ex, input_in, *,
-                      synapse_model: str = snn.SynapseModel.CURRENT_EXP):
-        if synapse_model not in (snn.SynapseModel.CURRENT_EXP,
-                                 snn.SynapseModel.COND_EXP):
-            raise ValueError(f"unknown synapse model {synapse_model!r}")
-        cond = synapse_model == snn.SynapseModel.COND_EXP
-        n = neurons.v_m.shape[0]
-        nb = self.lif_nb
-        pad = (-n) % nb
-        p = lambda a: jnp.pad(a, (0, pad)) if pad else a
-        f32 = lambda a: p(a).astype(jnp.float32)
-        v, se, si, rc, sp = lif_step_kernel(
-            f32(neurons.v_m), f32(neurons.syn_ex), f32(neurons.syn_in),
-            p(neurons.ref_count), p(neurons.group_id),
-            f32(input_ex), f32(input_in), table.astype(jnp.float32),
-            cond=cond, nb=nb, interpret=self._interp())
-        dtype = neurons.v_m.dtype
-        cut = lambda a: a[:n] if pad else a
-        return snn.NeuronState(
-            v_m=cut(v).astype(dtype), syn_ex=cut(se).astype(dtype),
-            syn_in=cut(si).astype(dtype), ref_count=cut(rc),
-            spike=cut(sp), group_id=neurons.group_id)
+                      synapse_model: str = snn.SynapseModel.CURRENT_EXP,
+                      model=None, key=None, t=None):
+        # kernel path when the model ships a Pallas twin (lif/izhikevich/
+        # adex); models without one (poisson) run their jnp step - it is
+        # a single elementwise draw, the same on every backend
+        m = neuron_models_mod.get_model("lif" if model is None else model)
+        if m.kernel_step is None:
+            return m.step(neurons, table, input_ex, input_in,
+                          synapse_model=synapse_model, key=key, t=t)
+        return m.kernel_step(neurons, table, input_ex, input_in,
+                             synapse_model=synapse_model, nb=self.lif_nb,
+                             interpret=self._interp(), key=key, t=t)
 
     def stdp_update(self, layout, weights, arrived, post_spike, traces,
                     params: stdp_mod.STDPParams):

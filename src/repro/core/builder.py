@@ -70,11 +70,18 @@ class Projection:
 @dataclasses.dataclass(frozen=True)
 class NetworkSpec:
     areas: Sequence[AreaSpec]
+    # per-group neuron parameters - the ``neuron_model``'s parameter class
+    # (snn.LIFParams for "lif", IzhikevichParams for "izhikevich", ...);
+    # a "<base>+poisson" composite mixes base params with PoissonParams
     groups: Sequence[LIFParams]
     populations: Sequence[Population]
     projections: Sequence[Projection]
     max_delay: int
     seed: int = 0
+    # which NeuronModel registry entry (DESIGN.md §12) interprets
+    # ``groups``; threaded into EngineConfig.neuron_model by the drivers.
+    # The builder itself never reads it - decomposition is model-agnostic.
+    neuron_model: str = "lif"
 
     def pop_offsets(self) -> np.ndarray:
         """Global-ID offset of each population (populations must be ordered

@@ -59,6 +59,7 @@ import numpy as np
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
 from repro.core import backends as backends_mod
+from repro.core import neuron_models as neuron_models_mod
 from repro.core import snn, stdp as stdp_mod
 from repro.core import wire as wire_mod
 from repro.core.builder import NetworkSpec, build_shards
@@ -356,6 +357,13 @@ class DistributedConfig:
         return self.axis_names[-1]
 
     @property
+    def neuron_model(self) -> str:
+        """The NeuronModel name this step runs (DESIGN.md §12); set it on
+        the nested EngineConfig - the distributed step adds nothing
+        model-specific, exactly like the backend choice."""
+        return self.engine.neuron_model
+
+    @property
     def wire(self) -> wire_mod.SpikeWire:
         return wire_mod.get_wire(self.spike_wire)
 
@@ -381,34 +389,46 @@ class DistState:
     t: jax.Array             # (S,) step counter (identical values)
     key: jax.Array           # (S, 2) per-shard PRNG key data
     wire_overflow: jax.Array  # (S,) cumulative saturated lossy-wire payloads
+    #: model-specific per-neuron state (S, n_local) arrays beyond the
+    #: common four - Izhikevich's {"u"}, AdEx's {"w_ad"}; {} for lif and
+    #: poisson.  The key set is fixed per NeuronModel (DESIGN.md §12), so
+    #: the carry treedef varies by MODEL, never by step.
+    aux: dict = dataclasses.field(default_factory=dict)
     #: static marker: layout of ``weights`` - "flat" or a shape-qualified
     #: blocked tag "blocked:{pb}x{eb}" (backends.layout_tag); pytree
     #: metadata so blocked-resident state is never misread as flat nor
     #: stepped under different (PB, EB) block shapes
     weights_layout: str = "flat"
+    #: static marker: which NeuronModel this state was built for -
+    #: struct-checked against cfg.engine.neuron_model at trace time
+    neuron_model: str = "lif"
 
 
 jax.tree_util.register_dataclass(
     DistState,
     data_fields=["v_m", "syn_ex", "syn_in", "ref_count", "ring", "weights",
                  "k_pre", "k_post", "prev_bits", "t", "key",
-                 "wire_overflow"],
-    meta_fields=["weights_layout"])
+                 "wire_overflow", "aux"],
+    meta_fields=["weights_layout", "neuron_model"])
 
 
-def init_stacked_state(net: StackedNetwork, groups: Sequence[snn.LIFParams],
-                       seed: int = 0, dtype=jnp.float32,
-                       weight_dtype=None, sweep: str | None = None
-                       ) -> DistState:
+def init_stacked_state(net: StackedNetwork, groups, seed: int = 0,
+                       dtype=jnp.float32, weight_dtype=None,
+                       sweep: str | None = None,
+                       neuron_model: str = "lif") -> DistState:
     """``weight_dtype`` may be narrower than the neuron dtype (bf16) for
     non-plastic evaluation runs - weights are the largest per-edge stream
     (§Perf C4).  ``sweep`` (a backend name) stores the weights in that
     backend's native layout up front (blocked ELL slot order for pallas) so
     the distributed step never pays a per-step ``edge_perm`` conversion;
-    without it the state is flat and the step converts at trace time."""
+    without it the state is flat and the step converts at trace time.
+    ``neuron_model`` picks the dynamics (DESIGN.md §12): ``groups`` must
+    be that model's parameter class; model-specific state lands in
+    ``DistState.aux``."""
     S = net.n_shards
-    e_l = np.asarray([g.e_l for g in groups], dtype=np.float64)
+    model = neuron_models_mod.get_model(neuron_model)
     gid = np.asarray(net.graph["group_id"])
+    nvars = model.init_vars(gid, list(groups))
     keys = jax.random.split(jax.random.key(seed), S)
     weights = np.asarray(net.graph["weight_init"])
     weights_layout = "flat"
@@ -423,10 +443,10 @@ def init_stacked_state(net: StackedNetwork, groups: Sequence[snn.LIFParams],
         nb, eb, pb = net.blocked_meta
         weights_layout = f"blocked:{pb}x{eb}"
     return DistState(
-        v_m=jnp.asarray(e_l[gid], dtype),
-        syn_ex=jnp.zeros((S, net.n_local), dtype),
-        syn_in=jnp.zeros((S, net.n_local), dtype),
-        ref_count=jnp.zeros((S, net.n_local), jnp.int32),
+        v_m=jnp.asarray(nvars["v_m"], dtype),
+        syn_ex=jnp.asarray(nvars["syn_ex"], dtype),
+        syn_in=jnp.asarray(nvars["syn_in"], dtype),
+        ref_count=jnp.asarray(nvars["ref_count"], jnp.int32),
         ring=jnp.zeros((S, net.max_delay, net.n_mirror), dtype),
         weights=jnp.asarray(weights, weight_dtype or dtype),
         k_pre=jnp.zeros((S, net.n_mirror), dtype),
@@ -435,7 +455,9 @@ def init_stacked_state(net: StackedNetwork, groups: Sequence[snn.LIFParams],
         t=jnp.zeros((S,), jnp.int32),
         key=jax.random.key_data(keys),
         wire_overflow=jnp.zeros((S,), jnp.int32),
+        aux={k: jnp.asarray(nvars[k], dtype) for k in model.extra_fields},
         weights_layout=weights_layout,
+        neuron_model=model.name,
     )
 
 
@@ -667,10 +689,11 @@ def make_distributed_step(net: StackedNetwork, mesh: Mesh,
     return step, consts_j
 
 
-def _build_step(mesh: Mesh, groups: Sequence[snn.LIFParams],
-                cfg: DistributedConfig, max_delay: int, n_local: int,
-                n_mirror: int, blocked_meta=None):
-    table_np = np.asarray(snn.make_param_table(list(groups), cfg.engine.dt))
+def _build_step(mesh: Mesh, groups, cfg: DistributedConfig, max_delay: int,
+                n_local: int, n_mirror: int, blocked_meta=None):
+    model = neuron_models_mod.get_model(cfg.engine.neuron_model)
+    table_np = np.asarray(model.make_param_table(list(groups),
+                                                 cfg.engine.dt))
     D = max_delay
     backend = backends_mod.get_backend(cfg.engine.sweep)
     wire = cfg.wire
@@ -737,6 +760,11 @@ def _build_step(mesh: Mesh, groups: Sequence[snn.LIFParams],
         # ---- (3) external drive + neuron dynamics ------------------------
         key = jax.random.wrap_key_data(state.key)
         key, sub = jax.random.split(key)
+        mkey = None
+        if model.stochastic:
+            # split ONLY for stochastic models (poisson emitters) -
+            # deterministic dynamics keep the pre-registry key stream
+            sub, mkey = jax.random.split(sub)
         if cfg.engine.external_drive:
             lam = g["ext_rate"] * (cfg.engine.dt * 1e-3)
             input_ex = input_ex + (g["ext_weight"]
@@ -745,11 +773,19 @@ def _build_step(mesh: Mesh, groups: Sequence[snn.LIFParams],
         neurons = snn.NeuronState(
             v_m=state.v_m, syn_ex=state.syn_ex, syn_in=state.syn_in,
             ref_count=state.ref_count,
-            spike=jnp.zeros((n_local,), jnp.bool_), group_id=g["group_id"])
+            spike=jnp.zeros((n_local,), jnp.bool_), group_id=g["group_id"],
+            extra=dict(state.aux))
+        if state.neuron_model != model.name:
+            raise ValueError(
+                f"DistState was initialized for neuron_model="
+                f"{state.neuron_model!r} but cfg selects {model.name!r}; "
+                "re-init with init_stacked_state(neuron_model=...)")
+        model.check_state(neurons)
         table = jnp.asarray(table_np, dtype)
         neurons = backend.neuron_update(
             layout, neurons, table, input_ex, input_in,
-            synapse_model=cfg.engine.synapse_model)
+            synapse_model=cfg.engine.synapse_model,
+            model=model, key=mkey, t=t)
         bits = neurons.spike
 
         # ---- (4) plasticity ----------------------------------------------
@@ -780,7 +816,9 @@ def _build_step(mesh: Mesh, groups: Sequence[snn.LIFParams],
             prev_bits=bits.astype(dtype), t=t + 1,
             key=jax.random.key_data(key),
             wire_overflow=state.wire_overflow + overflow,
-            weights_layout=state.weights_layout)
+            aux=neurons.extra,
+            weights_layout=state.weights_layout,
+            neuron_model=state.neuron_model)
         return new_state, bits
 
     # ---- shard_map wrapper ----------------------------------------------

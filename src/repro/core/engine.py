@@ -26,6 +26,12 @@ Spikes fired at step ``s`` are written to ``ring[s % D]`` (D = max_delay,
 one bitmap over the mirror table).  At step ``t``, a delay-``d`` edge reads
 ``ring[(t - d) % D]`` - spikes fired at ``t-d`` arriving exactly at ``t``.
 
+Per-neuron dynamics dispatch through the NeuronModel registry of
+:mod:`repro.core.neuron_models` (DESIGN.md §12): ``EngineConfig.
+neuron_model`` selects lif / izhikevich / adex / poisson (or a
+``<base>+poisson`` composite); ``EngineState`` carries a model tag and the
+model's ``extra`` state vars, struct-checked at trace time.
+
 The hot path (sweep, neuron update, STDP edge update) dispatches through the
 execution-backend registry of :mod:`repro.core.backends` (DESIGN.md §9):
 ``EngineConfig.sweep`` selects ``"flat"`` (fused gather + segment_sum, the
@@ -60,6 +66,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core import backends as backends_mod
+from repro.core import neuron_models as neuron_models_mod
 from repro.core import snn
 from repro.core import stdp as stdp_mod
 
@@ -126,6 +133,12 @@ class EngineConfig:
     sweep: str = "flat"                    # backend name: "flat" | "bucketed" | "pallas"
     external_drive: bool = True            # per-neuron Poisson (graph.ext_*)
     record_spikes: bool = True
+    # neuron dynamics, resolved through the NeuronModel registry
+    # (repro.core.neuron_models, DESIGN.md §12): "lif" | "izhikevich" |
+    # "adex" | "poisson" | "<base>+poisson".  The graph's param table and
+    # the state must be built for the same model (init_state(neuron_model=)
+    # and <model>.make_param_table); mismatches raise at trace time.
+    neuron_model: str = "lif"
 
 
 @dataclasses.dataclass
@@ -142,23 +155,30 @@ class EngineState:
     #: as flat NOR stepped under different (PB, EB) block shapes (equal
     #: slot totals with different shapes would scramble every edge)
     weights_layout: str = "flat"
+    #: static marker: which NeuronModel ``neurons`` was built for
+    #: (DESIGN.md §12) - struct-checked against cfg.neuron_model at trace
+    #: time so a state can never be stepped under the wrong dynamics
+    neuron_model: str = "lif"
 
 
 jax.tree_util.register_dataclass(
     EngineState,
     data_fields=["neurons", "ring", "weights", "traces", "t", "key"],
-    meta_fields=["weights_layout"])
+    meta_fields=["weights_layout", "neuron_model"])
 
 
-def init_state(graph: ShardGraph, groups: list[snn.LIFParams],
-               key: jax.Array, *, dtype=jnp.float32,
-               sweep: str | None = None) -> EngineState:
+def init_state(graph: ShardGraph, groups, key: jax.Array, *,
+               dtype=jnp.float32, sweep: str | None = None,
+               neuron_model: str = "lif") -> EngineState:
     """Fresh engine state.  ``sweep`` (a backend name) stores the weights in
     that backend's native layout up front - hand-rolled ``make_step_fn``
     loops then never pay the per-step layout conversion; without it the
-    state is flat and ``engine_step``/``run`` convert at the boundary."""
-    neurons = snn.init_state(graph.n_local, np.asarray(graph.group_id),
-                             groups, dtype=dtype)
+    state is flat and ``engine_step``/``run`` convert at the boundary.
+    ``neuron_model`` picks the dynamics (DESIGN.md §12): ``groups`` must be
+    that model's parameter class and the state carries the model tag."""
+    model = neuron_models_mod.get_model(neuron_model)
+    neurons = model.init_state(graph.n_local, np.asarray(graph.group_id),
+                               groups, dtype=dtype)
     weights = jnp.asarray(graph.weight_init, dtype=dtype)
     weights_layout = "flat"
     if sweep is not None:
@@ -176,6 +196,7 @@ def init_state(graph: ShardGraph, groups: list[snn.LIFParams],
         t=jnp.zeros((), jnp.int32),
         key=key,
         weights_layout=weights_layout,
+        neuron_model=model.name,
     )
 
 
@@ -226,18 +247,27 @@ def _poisson_drive(key, graph: ShardGraph, dt: float, dtype):
 def engine_step(state: EngineState, graph: ShardGraph, table: jax.Array,
                 cfg: EngineConfig, *,
                 backend: "backends_mod.SweepBackend | None" = None,
-                layout: "backends_mod.EdgeLayout | None" = None):
+                layout: "backends_mod.EdgeLayout | None" = None,
+                model: "neuron_models_mod.NeuronModel | None" = None):
     """One dt: sweep -> neuron update -> STDP -> ring write. Returns
     (new_state, spike_bits).
 
-    ``backend``/``layout`` may be pre-resolved by callers that step in a
-    loop (``run``); otherwise they are derived from ``cfg.sweep``.
+    ``backend``/``layout``/``model`` may be pre-resolved by callers that
+    step in a loop (``run``); otherwise they derive from ``cfg``.
     """
     dtype = state.weights.dtype
     if backend is None:
         backend = backends_mod.get_backend(cfg.sweep)
     if layout is None:
         layout = backend.prepare(graph)
+    if model is None:
+        model = neuron_models_mod.get_model(cfg.neuron_model)
+    if state.neuron_model != model.name:
+        raise ValueError(
+            f"state was initialized for neuron_model="
+            f"{state.neuron_model!r} but cfg selects {model.name!r}; "
+            "re-init with init_state(neuron_model=...)")
+    model.check_state(state.neurons)
 
     # weights in the backend's native layout; converting here is the
     # COMPATIBILITY path (state built without ``sweep=``) - it costs one
@@ -254,12 +284,18 @@ def engine_step(state: EngineState, graph: ShardGraph, table: jax.Array,
 
     # (2) external stochastic drive
     key, sub = jax.random.split(state.key)
+    mkey = None
+    if model.stochastic:
+        # split ONLY for stochastic models - deterministic dynamics keep
+        # the pre-registry key stream (the LIF bit-exactness pin)
+        sub, mkey = jax.random.split(sub)
     if cfg.external_drive and graph.ext_rate is not None:
         input_ex = input_ex + _poisson_drive(sub, graph, cfg.dt, dtype)
 
-    # (3) neuron dynamics
+    # (3) neuron dynamics (model-dispatched, DESIGN.md §12)
     neurons = backend.neuron_update(layout, state.neurons, table, input_ex,
-                                    input_in, synapse_model=cfg.synapse_model)
+                                    input_in, synapse_model=cfg.synapse_model,
+                                    model=model, key=mkey, t=state.t)
     spike_bits = neurons.spike
 
     # (4) plasticity: weights first (traces exclude this step's spikes:
@@ -295,7 +331,8 @@ def engine_step(state: EngineState, graph: ShardGraph, table: jax.Array,
 
     new_state = EngineState(neurons=neurons, ring=ring, weights=weights,
                             traces=traces, t=state.t + 1, key=key,
-                            weights_layout=state.weights_layout)
+                            weights_layout=state.weights_layout,
+                            neuron_model=state.neuron_model)
     return new_state, spike_bits
 
 
@@ -303,11 +340,12 @@ def make_step_fn(graph: ShardGraph, table: jax.Array, cfg: EngineConfig):
     """Jit-compiled single-step closure (graph/table/cfg baked in)."""
     backend = backends_mod.get_backend(cfg.sweep)
     layout = backend.prepare(graph)
+    model = neuron_models_mod.get_model(cfg.neuron_model)
 
     @jax.jit
     def step(state: EngineState):
         return engine_step(state, graph, table, cfg, backend=backend,
-                           layout=layout)
+                           layout=layout, model=model)
     return step
 
 
@@ -322,6 +360,7 @@ def run(state: EngineState, graph: ShardGraph, table: jax.Array,
     """
     backend = backends_mod.get_backend(cfg.sweep)
     layout = backend.prepare(graph)
+    model = neuron_models_mod.get_model(cfg.neuron_model)
     native_tag = backends_mod.layout_tag(layout, backend.weights_layout)
     if state.weights_layout != native_tag:
         state = dataclasses.replace(
@@ -332,7 +371,7 @@ def run(state: EngineState, graph: ShardGraph, table: jax.Array,
 
     def body(s, _):
         s, bits = engine_step(s, graph, table, cfg, backend=backend,
-                              layout=layout)
+                              layout=layout, model=model)
         return s, (bits if cfg.record_spikes else None)
 
     final, spikes = jax.lax.scan(body, state, None, length=n_steps)

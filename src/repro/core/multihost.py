@@ -41,6 +41,8 @@ under the platform's process launcher with TPU/GPU device sets.
 from __future__ import annotations
 
 import dataclasses
+import os
+import re
 from typing import Any, Sequence
 
 import numpy as np
@@ -52,22 +54,95 @@ from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 from repro.core import distributed as dist
 from repro.core import snn
 
-__all__ = ["initialize", "HostTopology", "make_host_mesh", "host_topology",
-           "local_shard_slice", "shard_stacked", "replicate_to_host",
-           "make_multihost_step", "init_multihost_state"]
+__all__ = ["initialize", "detect_cluster_env", "HostTopology",
+           "make_host_mesh", "host_topology", "local_shard_slice",
+           "shard_stacked", "replicate_to_host", "make_multihost_step",
+           "init_multihost_state"]
+
+#: default coordinator port when only a nodelist is known (SLURM);
+#: override with REPRO_COORD_PORT
+DEFAULT_COORD_PORT = 12321
+
+
+def _first_slurm_host(nodelist: str) -> str:
+    """First hostname of a SLURM nodelist expression.
+
+    Handles the common compact forms: ``node[003-008,010],other[1-2]`` ->
+    ``node003``, plain comma lists (``login1,nid[001-002]`` -> ``login1``),
+    and bare hostnames.  The prefix match excludes commas so a plain first
+    element never swallows a later bracketed group.  (Full ``scontrol
+    show hostnames`` semantics are not needed - only rank 0's host serves
+    as the coordinator.)
+    """
+    m = re.match(r"^([^\[,]+)\[([^\]\-,]+)", nodelist.strip())
+    if m:
+        return m.group(1) + m.group(2)
+    return nodelist.split(",")[0].strip()
+
+
+def detect_cluster_env(environ=None) -> dict | None:
+    """Cluster launch parameters from the environment, or None.
+
+    Two conventions are recognized (ROADMAP multi-host follow-on), so
+    real-cluster launches need no CLI plumbing:
+
+    * **k8s-style explicit vars** (checked first - they are opt-in):
+      ``REPRO_COORD_ADDR`` (host:port), ``REPRO_NUM_PROC``,
+      ``REPRO_PROC_ID``;
+    * **SLURM**: ``SLURM_PROCID`` / ``SLURM_NTASKS`` /
+      ``SLURM_STEP_NODELIST`` (falling back to ``SLURM_JOB_NODELIST``);
+      the coordinator is the nodelist's first host on
+      ``REPRO_COORD_PORT`` (default 12321).
+
+    Returns ``dict(coordinator_address=..., num_processes=...,
+    process_id=...)`` ready to splat into :func:`initialize`.
+    """
+    env = os.environ if environ is None else environ
+    if env.get("REPRO_COORD_ADDR"):
+        return dict(coordinator_address=env["REPRO_COORD_ADDR"],
+                    num_processes=int(env.get("REPRO_NUM_PROC", "1")),
+                    process_id=int(env.get("REPRO_PROC_ID", "0")))
+    if env.get("SLURM_PROCID") is not None and env.get("SLURM_NTASKS"):
+        nodelist = (env.get("SLURM_STEP_NODELIST")
+                    or env.get("SLURM_JOB_NODELIST"))
+        if not nodelist:
+            return None
+        port = env.get("REPRO_COORD_PORT", str(DEFAULT_COORD_PORT))
+        return dict(
+            coordinator_address=f"{_first_slurm_host(nodelist)}:{port}",
+            num_processes=int(env["SLURM_NTASKS"]),
+            process_id=int(env["SLURM_PROCID"]))
+    return None
 
 
 def initialize(*, coordinator_address: str | None = None,
-               num_processes: int = 1, process_id: int = 0) -> bool:
+               num_processes: int | None = None,
+               process_id: int | None = None) -> bool:
     """Join (or skip) the multi-process jax runtime.
 
-    ``num_processes <= 1`` is a no-op (the single-process paths need no
-    distributed runtime) so callers can be launcher-agnostic.  On CPU the
-    cross-process collectives need the gloo implementation; the config
-    knob only exists on some jax versions, so it is set best-effort (newer
-    versions default to gloo).  Call BEFORE any operation that touches
-    devices; returns True iff the distributed runtime was initialized.
+    With no explicit arguments the launch parameters are taken from the
+    environment (:func:`detect_cluster_env`: SLURM or k8s-style vars), so
+    ``srun python -m repro.launch.multihost`` and a k8s pod template both
+    work with zero CLI plumbing; outside any cluster the no-args call is
+    a no-op.  ``num_processes <= 1`` is a no-op (the single-process paths
+    need no distributed runtime) so callers can be launcher-agnostic.  On
+    CPU the cross-process collectives need the gloo implementation; the
+    config knob only exists on some jax versions, so it is set best-effort
+    (newer versions default to gloo).  Call BEFORE any operation that
+    touches devices; returns True iff the distributed runtime was
+    initialized.
     """
+    if num_processes is None and process_id is None:
+        detected = detect_cluster_env()
+        if detected is None:
+            return False
+        if coordinator_address is not None:
+            detected["coordinator_address"] = coordinator_address
+        coordinator_address = detected["coordinator_address"]
+        num_processes = detected["num_processes"]
+        process_id = detected["process_id"]
+    num_processes = 1 if num_processes is None else num_processes
+    process_id = 0 if process_id is None else process_id
     if num_processes <= 1:
         return False
     try:
@@ -221,11 +296,10 @@ def make_multihost_step(net: dist.StackedNetwork, mesh: Mesh,
     return smapped, consts
 
 
-def init_multihost_state(net: dist.StackedNetwork,
-                         groups: Sequence[snn.LIFParams], mesh: Mesh,
+def init_multihost_state(net: dist.StackedNetwork, groups, mesh: Mesh,
                          seed: int = 0, dtype=jnp.float32,
-                         weight_dtype=None,
-                         sweep: str | None = None) -> dist.DistState:
+                         weight_dtype=None, sweep: str | None = None,
+                         neuron_model: str = "lif") -> dist.DistState:
     """Globally sharded :class:`DistState` for a multi-process mesh.
 
     Every process computes the identical full stacked state (deterministic
@@ -233,11 +307,16 @@ def init_multihost_state(net: dist.StackedNetwork,
     not process index) and ships only its own rows - so a 2-process x
     4-device run and a 1-process x 8-device run start from bit-identical
     state, which is what the trajectory-equivalence contract rests on.
+    ``neuron_model`` selects the dynamics (DESIGN.md §12); the model's
+    ``aux`` arrays shard like every other (S, ...) leaf.
     """
     full = dist.init_stacked_state(net, list(groups), seed=seed, dtype=dtype,
-                                   weight_dtype=weight_dtype, sweep=sweep)
+                                   weight_dtype=weight_dtype, sweep=sweep,
+                                   neuron_model=neuron_model)
+    meta = {"weights_layout", "neuron_model"}   # static markers, not leaves
     sharded = shard_stacked(
         {f.name: getattr(full, f.name)
-         for f in dataclasses.fields(full) if f.name != "weights_layout"},
+         for f in dataclasses.fields(full) if f.name not in meta},
         mesh)
-    return dist.DistState(weights_layout=full.weights_layout, **sharded)
+    return dist.DistState(weights_layout=full.weights_layout,
+                          neuron_model=full.neuron_model, **sharded)

@@ -68,7 +68,16 @@ class SynapseModel:
 @jax.tree_util.register_dataclass
 @dataclasses.dataclass
 class NeuronState:
-    """Flat per-neuron state; every leaf is shape (n,)."""
+    """Flat per-neuron state; every leaf is shape (n,).
+
+    The first four fields are COMMON to every registered neuron model
+    (DESIGN.md §12): ``v_m``, the two synaptic accumulators, and the
+    refractory counter.  Model-specific state variables (Izhikevich's
+    recovery ``u``, AdEx's adaptation current ``w_ad``) live in ``extra``
+    - a dict pytree whose key set is fixed per model
+    (:meth:`repro.core.neuron_models.NeuronModel.extra_fields`), so the
+    state width varies by model while the carry treedef stays stable.
+    """
 
     v_m: jax.Array          # membrane potential [mV]
     syn_ex: jax.Array       # exc. synaptic current [pA] or conductance [nS]
@@ -76,6 +85,8 @@ class NeuronState:
     ref_count: jax.Array    # remaining refractory steps (int32)
     spike: jax.Array        # bool: spiked at the *last* step
     group_id: jax.Array     # int32 index into the parameter table
+    # model-specific per-neuron state; {} for LIF/poisson
+    extra: dict = dataclasses.field(default_factory=dict)
 
 
 # Parameter-table row layout (columns of the (G, NCOL) table). Keeping this a
@@ -213,4 +224,5 @@ def lif_step(
         ref_count=ref_count,
         spike=spike,
         group_id=state.group_id,
+        extra=state.extra,
     )

@@ -1,0 +1,125 @@
+"""Pallas TPU kernel: fused AdEx (adaptive exponential IF) neuron update.
+
+Brette & Gerstner 2005 / NEST ``aeif_psc_exp`` semantics:
+
+    C dv/dt = -g_L (v - E_L) + g_L * Delta_T * exp((v - V_T)/Delta_T)
+              + I_syn + I_e - w
+    tau_w dw/dt = a (v - E_L) - w
+    spike: v >= v_peak  ->  v <- v_reset,  w <- w + b,  refractory t_ref
+
+Euler on (v, w) - the exponential term has no exact propagator - over the
+engine's exactly-decaying exponential synapses.  The adaptation current
+``w`` rides ``NeuronState.extra["w_ad"]`` (DESIGN.md §12).
+
+**fp32 clamping policy** (DESIGN.md §12): the exponential's argument is
+clamped to ``EXP_CLAMP`` before ``exp`` - between a threshold crossing and
+its reset the membrane can overshoot arbitrarily far in one Euler step,
+and an unclamped ``exp((v - V_T)/Delta_T)`` overflows fp32 (inf -> nan on
+the next subtraction) long before fp64 would notice.  exp(EXP_CLAMP) keeps
+the upstroke steep (the spike is detected the same step) while every
+intermediate stays finite in fp32.
+
+Same grid/blocking as :mod:`repro.kernels.lif_step`; the table layout is
+owned here so the kernel and the registry's jnp oracle share one gather
+with no import cycle.  Validated bit-exactly against the oracle in
+interpret mode.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+__all__ = ["adex_step_kernel", "COL", "NCOL", "_COLS", "EXP_CLAMP"]
+
+#: fp32 safety clamp on (v - V_T)/Delta_T before exp (DESIGN.md §12)
+EXP_CLAMP = 10.0
+
+_COLS = (
+    "p_ee",       # exp(-dt / tau_syn_ex)
+    "p_ii",       # exp(-dt / tau_syn_in)
+    "dt_cm",      # dt / c_m
+    "g_l",
+    "e_l",
+    "v_t",        # exponential threshold [mV]
+    "delta_t",    # slope factor [mV]
+    "v_peak",     # spike cutoff [mV]
+    "v_reset",
+    "dt_tw",      # dt / tau_w
+    "a",          # subthreshold adaptation [nS]
+    "b",          # spike-triggered adaptation increment [pA]
+    "ref_steps",
+    "i_e",
+)
+COL = {name: i for i, name in enumerate(_COLS)}
+NCOL = len(_COLS)
+
+
+def adex_math(v, w, syn_ex, syn_in, rc, iex, iin, get):
+    """One Euler dt of the AdEx dynamics; shared op-for-op by the jnp
+    oracle and the kernel body (bit-exact interpret contract)."""
+    se_new = syn_ex * get("p_ee") + iex
+    si_new = syn_in * get("p_ii") + iin
+    g_l, e_l, delta_t = get("g_l"), get("e_l"), get("delta_t")
+    # fp32 policy: clamp the exponent argument, never the voltage
+    exp_arg = jnp.minimum((v - get("v_t")) / delta_t, EXP_CLAMP)
+    i_exp = g_l * delta_t * jnp.exp(exp_arg)
+    dv = (-g_l * (v - e_l) + i_exp + syn_ex + syn_in + get("i_e") - w)
+    v_prop = v + get("dt_cm") * dv
+    w_prop = w + get("dt_tw") * (get("a") * (v - e_l) - w)
+    refractory = rc > 0
+    v_reset = get("v_reset")
+    v_new = jnp.where(refractory, v_reset, v_prop)
+    spike = jnp.logical_and(jnp.logical_not(refractory),
+                            v_new >= get("v_peak"))
+    v_new = jnp.where(spike, v_reset, v_new)
+    w_new = jnp.where(spike, w_prop + get("b"), w_prop)
+    rc_new = jnp.where(spike, get("ref_steps").astype(jnp.int32),
+                       jnp.maximum(rc - 1, 0).astype(jnp.int32))
+    return v_new, w_new, se_new, si_new, rc_new, spike
+
+
+def _kernel(v_ref, w_ref, se_ref, si_ref, rc_ref, gid_ref, iex_ref, iin_ref,
+            table_ref, v_out, w_out, se_out, si_out, rc_out, spike_out):
+    gid = gid_ref[...][0]
+    tbl = table_ref[...]
+    get = lambda name: jnp.take(tbl[:, COL[name]], gid, axis=0)
+    out = adex_math(v_ref[...][0], w_ref[...][0], se_ref[...][0],
+                    si_ref[...][0], rc_ref[...][0],
+                    iex_ref[...][0], iin_ref[...][0], get)
+    for ref, val in zip((v_out, w_out, se_out, si_out, rc_out, spike_out),
+                        out):
+        ref[...] = val[None]
+
+
+@functools.partial(jax.jit, static_argnames=("nb", "interpret"))
+def adex_step_kernel(v, w_ad, syn_ex, syn_in, ref_count, group_id,
+                     input_ex, input_in, table, *, nb: int = 512,
+                     interpret: bool = True):
+    """All neuron arrays (N,) with N % nb == 0; table (G, NCOL) f32."""
+    n = v.shape[0]
+    assert n % nb == 0, (n, nb)
+    grid = (n // nb,)
+    vec = lambda a: a.reshape(n // nb, nb)
+    blk = pl.BlockSpec((1, nb), lambda i: (i, 0))
+    g = table.shape[0]
+    outs = pl.pallas_call(
+        _kernel,
+        grid=grid,
+        in_specs=[blk] * 8 + [pl.BlockSpec((g, NCOL), lambda i: (0, 0))],
+        out_specs=[blk] * 6,
+        out_shape=[
+            jax.ShapeDtypeStruct((n // nb, nb), jnp.float32),
+            jax.ShapeDtypeStruct((n // nb, nb), jnp.float32),
+            jax.ShapeDtypeStruct((n // nb, nb), jnp.float32),
+            jax.ShapeDtypeStruct((n // nb, nb), jnp.float32),
+            jax.ShapeDtypeStruct((n // nb, nb), jnp.int32),
+            jax.ShapeDtypeStruct((n // nb, nb), jnp.bool_),
+        ],
+        interpret=interpret,
+    )(vec(v), vec(w_ad), vec(syn_ex), vec(syn_in), vec(ref_count),
+      vec(group_id), vec(input_ex), vec(input_in), table)
+    return tuple(o.reshape(n) for o in outs)

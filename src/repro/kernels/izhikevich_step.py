@@ -1,0 +1,118 @@
+"""Pallas TPU kernel: fused Izhikevich (2003) neuron update.
+
+Two-variable quadratic dynamics
+
+    dv/dt = 0.04 v^2 + 5 v + 140 - u + I
+    du/dt = a (b v - u)
+    spike: v >= v_peak  ->  v <- c,  u <- u + d
+
+integrated with forward Euler (the model's own convention) on top of the
+engine's exactly-decaying exponential synapses: ``I = i_scale * (syn_ex +
+syn_in) + i_e`` with the *previous* step's synaptic state (NEST arrival
+convention, same as the LIF path).  ``u`` rides the model-generic
+``NeuronState.extra["u"]`` slot (DESIGN.md §12).
+
+Pure elementwise over neurons (VPU work), same grid/blocking as
+:mod:`repro.kernels.lif_step`: 1-D over ``NB``-wide neuron blocks, the tiny
+per-group parameter table resident in VMEM for every cell.  The parameter
+table layout (COL / NCOL below) is owned HERE so the registry's jnp oracle
+(:class:`repro.core.neuron_models.IzhikevichModel`) and the kernel share
+one gather without an import cycle.
+
+Validated bit-exactly against the jnp oracle in interpret mode (identical
+op order, DESIGN.md §12 contract).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+__all__ = ["izhikevich_step_kernel", "COL", "NCOL", "_COLS"]
+
+# Parameter-table row layout (columns of the (G, NCOL) table); dt-derived
+# entries are precomputed by IzhikevichModel.make_param_table.
+_COLS = (
+    "p_ee",       # exp(-dt / tau_syn_ex)
+    "p_ii",       # exp(-dt / tau_syn_in)
+    "dt",         # Euler step [ms]
+    "a",
+    "b",
+    "c",          # reset potential [mV]
+    "d",          # recovery increment on spike
+    "v_peak",     # spike cutoff [mV]
+    "ref_steps",  # t_ref / dt, rounded (0 = no refractoriness)
+    "i_e",        # constant drive (model units)
+    "i_scale",    # synaptic-input scale (pA -> model units)
+)
+COL = {name: i for i, name in enumerate(_COLS)}
+NCOL = len(_COLS)
+
+
+def izhikevich_math(v, u, syn_ex, syn_in, rc, iex, iin, get):
+    """One Euler dt of the quadratic dynamics; shared op-for-op by the jnp
+    oracle and the kernel body so interpret-mode trajectories are
+    bit-exact (the fp32 contract of DESIGN.md §12)."""
+    dt = get("dt")
+    se_new = syn_ex * get("p_ee") + iex
+    si_new = syn_in * get("p_ii") + iin
+    # previous-step synaptic state drives v (arrivals act from t+dt on)
+    i_in = get("i_scale") * (syn_ex + syn_in) + get("i_e")
+    v_prop = v + dt * (0.04 * v * v + 5.0 * v + 140.0 - u + i_in)
+    u_prop = u + dt * get("a") * (get("b") * v - u)
+    refractory = rc > 0
+    c = get("c")
+    v_new = jnp.where(refractory, c, v_prop)
+    spike = jnp.logical_and(jnp.logical_not(refractory),
+                            v_new >= get("v_peak"))
+    v_new = jnp.where(spike, c, v_new)
+    u_new = jnp.where(spike, u_prop + get("d"), u_prop)
+    rc_new = jnp.where(spike, get("ref_steps").astype(jnp.int32),
+                       jnp.maximum(rc - 1, 0).astype(jnp.int32))
+    return v_new, u_new, se_new, si_new, rc_new, spike
+
+
+def _kernel(v_ref, u_ref, se_ref, si_ref, rc_ref, gid_ref, iex_ref, iin_ref,
+            table_ref, v_out, u_out, se_out, si_out, rc_out, spike_out):
+    gid = gid_ref[...][0]
+    tbl = table_ref[...]
+    get = lambda name: jnp.take(tbl[:, COL[name]], gid, axis=0)
+    out = izhikevich_math(v_ref[...][0], u_ref[...][0], se_ref[...][0],
+                          si_ref[...][0], rc_ref[...][0],
+                          iex_ref[...][0], iin_ref[...][0], get)
+    for ref, val in zip((v_out, u_out, se_out, si_out, rc_out, spike_out),
+                        out):
+        ref[...] = val[None]
+
+
+@functools.partial(jax.jit, static_argnames=("nb", "interpret"))
+def izhikevich_step_kernel(v, u, syn_ex, syn_in, ref_count, group_id,
+                           input_ex, input_in, table, *, nb: int = 512,
+                           interpret: bool = True):
+    """All neuron arrays (N,) with N % nb == 0; table (G, NCOL) f32."""
+    n = v.shape[0]
+    assert n % nb == 0, (n, nb)
+    grid = (n // nb,)
+    vec = lambda a: a.reshape(n // nb, nb)
+    blk = pl.BlockSpec((1, nb), lambda i: (i, 0))
+    g = table.shape[0]
+    outs = pl.pallas_call(
+        _kernel,
+        grid=grid,
+        in_specs=[blk] * 8 + [pl.BlockSpec((g, NCOL), lambda i: (0, 0))],
+        out_specs=[blk] * 6,
+        out_shape=[
+            jax.ShapeDtypeStruct((n // nb, nb), jnp.float32),
+            jax.ShapeDtypeStruct((n // nb, nb), jnp.float32),
+            jax.ShapeDtypeStruct((n // nb, nb), jnp.float32),
+            jax.ShapeDtypeStruct((n // nb, nb), jnp.float32),
+            jax.ShapeDtypeStruct((n // nb, nb), jnp.int32),
+            jax.ShapeDtypeStruct((n // nb, nb), jnp.bool_),
+        ],
+        interpret=interpret,
+    )(vec(v), vec(u), vec(syn_ex), vec(syn_in), vec(ref_count),
+      vec(group_id), vec(input_ex), vec(input_in), table)
+    return tuple(o.reshape(n) for o in outs)

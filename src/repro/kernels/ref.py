@@ -13,7 +13,8 @@ import jax.numpy as jnp
 from repro.core import snn
 from repro.core.stdp import STDPParams, TraceState, stdp_edge_update
 
-__all__ = ["synaptic_gather_ref", "lif_step_ref", "stdp_update_ref"]
+__all__ = ["synaptic_gather_ref", "lif_step_ref", "izhikevich_step_ref",
+           "adex_step_ref", "stdp_update_ref"]
 
 
 def synaptic_gather_ref(pre_idx, post_rel, weight, delay, channel, ring, t,
@@ -49,6 +50,34 @@ def lif_step_ref(v, syn_ex, syn_in, ref_count, group_id, input_ex, input_in,
     out = snn.lif_step(state, table, input_ex, input_in,
                        synapse_model=model)
     return out.v_m, out.syn_ex, out.syn_in, out.ref_count, out.spike
+
+
+def izhikevich_step_ref(v, u, syn_ex, syn_in, ref_count, group_id,
+                        input_ex, input_in, table):
+    """Adapter over the registry's Izhikevich jnp step (the system's own
+    path) - the flat oracle of ``izhikevich_step_kernel``."""
+    from repro.core.neuron_models import get_model
+    state = snn.NeuronState(
+        v_m=v, syn_ex=syn_ex, syn_in=syn_in, ref_count=ref_count,
+        spike=jnp.zeros(v.shape, jnp.bool_), group_id=group_id,
+        extra={"u": u})
+    out = get_model("izhikevich").step(state, table, input_ex, input_in)
+    return (out.v_m, out.extra["u"], out.syn_ex, out.syn_in,
+            out.ref_count, out.spike)
+
+
+def adex_step_ref(v, w_ad, syn_ex, syn_in, ref_count, group_id,
+                  input_ex, input_in, table):
+    """Adapter over the registry's AdEx jnp step - the flat oracle of
+    ``adex_step_kernel`` (incl. the fp32 exp clamp)."""
+    from repro.core.neuron_models import get_model
+    state = snn.NeuronState(
+        v_m=v, syn_ex=syn_ex, syn_in=syn_in, ref_count=ref_count,
+        spike=jnp.zeros(v.shape, jnp.bool_), group_id=group_id,
+        extra={"w_ad": w_ad})
+    out = get_model("adex").step(state, table, input_ex, input_in)
+    return (out.v_m, out.extra["w_ad"], out.syn_ex, out.syn_in,
+            out.ref_count, out.spike)
 
 
 def stdp_update_ref(weights, pre_idx, post_idx, plastic, arrived, post_spike,

@@ -151,9 +151,60 @@ def run_cell(scale: float, multi_pod: bool, wire: str, *, stdp: bool = True,
     return rec
 
 
+def measure_firing_rates(*, scale: float = 0.02, steps: int = 400,
+                         n_rows: int = 4, row_width: int = 2,
+                         seed: int = 0) -> dict:
+    """MEASURED per-row firing rates from a small materialized probe run.
+
+    The dry-run cells never materialize a graph, so their sparse-wire
+    capacity is a guess; this probe runs the hpc_benchmark verification
+    network at a small scale through the single-shard engine, partitions
+    the neurons with the SAME mesh decomposition the production cells
+    assume, and reports the per-row per-step firing fractions - the
+    quantity the sparse ``(count, ids)`` wire must be provisioned for.
+    The recommended ``sparse:<rate>`` is the worst row's PEAK fraction
+    with 2x headroom (first step of the ROADMAP adaptive-capacity
+    follow-on: measure, then provision).
+    """
+    import jax as _jax
+
+    from repro.core import builder, models
+    from repro.core.distributed import mesh_decompose
+    from repro.core.engine import EngineConfig as _EngineConfig
+    from repro.core import engine as _engine
+
+    spec, _ = models.hpc_benchmark(scale=scale, stdp=False)
+    g = builder.build_shards(spec, builder.decompose(spec, 1))[0] \
+        .device_arrays()
+    table = snn.make_param_table(list(spec.groups), dt=0.1)
+    cfg = _EngineConfig(dt=0.1)
+    st = _engine.init_state(g, list(spec.groups), _jax.random.key(seed))
+    _, spikes = _jax.jit(lambda s: _engine.run(s, g, table, cfg, steps))(st)
+    s = np.asarray(spikes)[:, :spec.n_neurons]
+    dec = mesh_decompose(spec, n_rows, row_width)
+    row_of = np.asarray(dec.owner) // row_width
+    rows = []
+    for r in range(n_rows):
+        sel = s[:, row_of == r]
+        frac = sel.mean(axis=1) if sel.shape[1] else np.zeros(s.shape[0])
+        rows.append(dict(
+            row=r, n=int(sel.shape[1]),
+            rate_hz=round(float(sel.mean() / (0.1e-3)), 2),
+            frac_mean=round(float(frac.mean()), 6),
+            frac_peak=round(float(frac.max()), 6)))
+    peak = max(r["frac_peak"] for r in rows)
+    recommended = round(min(max(2.0 * peak, 1e-4), 1.0), 5)
+    return dict(probe_scale=scale, probe_steps=steps, n_rows=n_rows,
+                rows=rows, frac_peak=peak,
+                recommended_sparse=f"sparse:{recommended}")
+
+
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--out", default="experiments/dryrun_snn.json")
+    ap.add_argument("--probe-scale", type=float, default=0.02,
+                    help="hpc_benchmark scale of the measured firing probe")
+    ap.add_argument("--probe-steps", type=int, default=400)
     args = ap.parse_args()
     results = []
     # (wire, wire_remote, compact, overlap): paper-faithful baseline ->
@@ -198,6 +249,23 @@ def main():
                   f"/step = {frac / (dt_ms * 1e-3):.0f} Hz at dt={dt_ms}ms "
                   f"(sparse capacity must stay below this to win)",
                   flush=True)
+    # MEASURED firing next to the analytic crossover: a small materialized
+    # probe run gives the per-row firing fractions the sparse wire must
+    # actually carry, and the recommended "sparse:<rate>" capacity (peak
+    # with 2x headroom) - so starved-wire overflow is predictable BEFORE a
+    # production run instead of discovered in wire_overflow telemetry.
+    probe = measure_firing_rates(scale=args.probe_scale,
+                                 steps=args.probe_steps)
+    for r in probe["rows"]:
+        print(f"[probe] row {r['row']}: n={r['n']} rate={r['rate_hz']}Hz "
+              f"frac mean={r['frac_mean']:.5f}/step "
+              f"peak={r['frac_peak']:.5f}/step", flush=True)
+    from repro.core.wire import get_wire
+    print(f"[probe] measured peak firing fraction {probe['frac_peak']:.5f}"
+          f"/step -> recommended wire '{probe['recommended_sparse']}' "
+          f"(2x headroom; default 'sparse' provisions "
+          f"{get_wire('sparse').max_rate:g})", flush=True)
+    results.append(dict(name="firing_probe", **probe))
     os.makedirs(os.path.dirname(args.out) or ".", exist_ok=True)
     with open(args.out, "w") as f:
         json.dump(results, f, indent=1)

@@ -19,6 +19,19 @@ One file, two roles:
   bit-for-bit against a 1-process run.  ``--bench`` adds a timed
   per-step loop (the ``bench_snn --processes`` axis shells out to this).
 
+The workload is any scenario-zoo network (``--scenario brunel`` /
+``microcircuit`` / ``marmoset``; default the hpc verification case) or
+the cross-model demo net for any NeuronModel (``--model izhikevich``,
+DESIGN.md §12) - the record carries the scenario/model so per-model
+multi-process trajectories can be pinned.
+
+On a REAL cluster no CLI plumbing is needed: when ``--process-id`` is
+absent and SLURM (``SLURM_PROCID``/``SLURM_NTASKS``/
+``SLURM_STEP_NODELIST``) or k8s-style (``REPRO_COORD_ADDR``/
+``REPRO_NUM_PROC``/``REPRO_PROC_ID``) env vars are present with >1
+ranks, every rank runs THIS same command line and picks up its identity
+from the environment (:func:`repro.core.multihost.detect_cluster_env`).
+
 Examples::
 
     PYTHONPATH=src python -m repro.launch.multihost \
@@ -26,6 +39,9 @@ Examples::
     PYTHONPATH=src python -m repro.launch.multihost \
         --processes 2 --devices-per-process 2 --wire packed \
         --wire-remote sparse --bench --out /tmp/mh_bench.json
+    PYTHONPATH=src python -m repro.launch.multihost \
+        --processes 2 --devices-per-process 2 --scenario brunel
+    srun -n 16 python -m repro.launch.multihost --scenario microcircuit
 """
 
 from __future__ import annotations
@@ -59,11 +75,22 @@ def build_parser() -> argparse.ArgumentParser:
                          "divide devices-per-process (host alignment)")
     ap.add_argument("--steps", type=int, default=40)
     ap.add_argument("--scale", type=float, default=0.02,
-                    help="hpc_benchmark scale")
+                    help="scenario scale")
+    ap.add_argument("--scenario", default="hpc_benchmark",
+                    help="scenario-zoo network (hpc_benchmark|brunel|"
+                         "microcircuit|marmoset; repro.core.models)")
+    ap.add_argument("--model", default=None,
+                    help="run the cross-model demo network for this "
+                         "NeuronModel (lif|izhikevich|adex|poisson) "
+                         "instead of --scenario")
     ap.add_argument("--seed", type=int, default=0)
-    ap.add_argument("--drive-boost", type=float, default=3.0,
-                    help="multiplier on the external Poisson rates (keeps "
-                         "tiny CI-scale nets actually firing)")
+    ap.add_argument("--drive-boost", type=float, default=None,
+                    help="multiplier on the external Poisson rates; "
+                         "default 3.0 for the hpc_benchmark smoke (keeps "
+                         "tiny CI-scale nets actually firing) and 1.0 for "
+                         "every other scenario/model - a zoo network's "
+                         "(g, eta)-style operating point must not be "
+                         "silently rescaled")
     ap.add_argument("--sweep", default="flat",
                     help="execution backend (flat|bucketed|pallas|pallas:auto)")
     ap.add_argument("--wire", default="packed",
@@ -158,11 +185,19 @@ def run_worker(args: argparse.Namespace) -> dict | None:
                          num_processes=args.processes,
                          process_id=args.process_id)
     n_rows = jax.device_count() // args.row_width
-    spec, stdp = models.hpc_benchmark(scale=args.scale, stdp=True)
-    if args.drive_boost != 1.0:
+    if args.model:
+        spec, stdp = models.model_demo(args.model, scale=args.scale,
+                                       stdp=True)
+    else:
+        spec, stdp = models.get_scenario(args.scenario, scale=args.scale)
+    drive_boost = args.drive_boost
+    if drive_boost is None:
+        drive_boost = (3.0 if not args.model
+                       and args.scenario == "hpc_benchmark" else 1.0)
+    if drive_boost != 1.0:
         import dataclasses
         pops = [dataclasses.replace(p, ext_rate_hz=p.ext_rate_hz
-                                    * args.drive_boost)
+                                    * drive_boost)
                 for p in spec.populations]
         spec = dataclasses.replace(spec, populations=pops)
     backend = backends_mod.get_backend(args.sweep)
@@ -173,13 +208,15 @@ def run_worker(args: argparse.Namespace) -> dict | None:
     cfg = dist.DistributedConfig(
         engine=engine.EngineConfig(dt=0.1,
                                    stdp=None if args.no_stdp else stdp,
-                                   sweep=args.sweep),
+                                   sweep=args.sweep,
+                                   neuron_model=spec.neuron_model),
         comm_mode=args.comm_mode, overlap=not args.no_overlap,
         spike_wire=args.wire, spike_wire_remote=args.wire_remote)
     step, consts = multihost.make_multihost_step(net, mesh,
                                                  list(spec.groups), cfg)
     state = multihost.init_multihost_state(net, list(spec.groups), mesh,
-                                           seed=args.seed, sweep=args.sweep)
+                                           seed=args.seed, sweep=args.sweep,
+                                           neuron_model=spec.neuron_model)
 
     t0 = time.time()
     run = jax.jit(lambda s, c: jax.lax.scan(lambda s, _: step(s, c), s,
@@ -199,6 +236,8 @@ def run_worker(args: argparse.Namespace) -> dict | None:
         processes=args.processes, devices=jax.device_count(),
         n_rows=n_rows, row_width=args.row_width, steps=args.steps,
         scale=args.scale, seed=args.seed, sweep=args.sweep,
+        scenario=None if args.model else args.scenario,
+        model=spec.neuron_model, drive_boost=drive_boost,
         wire=args.wire, wire_remote=args.wire_remote or args.wire,
         comm_mode=args.comm_mode, overlap=not args.no_overlap,
         stdp=not args.no_stdp,
@@ -227,8 +266,30 @@ def run_worker(args: argparse.Namespace) -> dict | None:
     return None
 
 
+def _cluster_env():
+    """Jax-free peek for cluster launch env vars; the full parse lives in
+    repro.core.multihost (whose import pulls in jax - fine, because a hit
+    means THIS process is a worker, not the jax-free local launcher)."""
+    if not (os.environ.get("REPRO_COORD_ADDR")
+            or os.environ.get("SLURM_PROCID")):
+        return None
+    from repro.core.multihost import detect_cluster_env
+    return detect_cluster_env()
+
+
 def main(argv=None):
     args = build_parser().parse_args(argv)
+    if args.process_id is None:
+        # real-cluster launches (SLURM / k8s-style env vars) need no CLI
+        # plumbing: every rank runs the same command line and picks up its
+        # identity from the environment (ROADMAP multi-host follow-on)
+        env = _cluster_env()
+        # single-task allocations (e.g. a batch step with SLURM_PROCID=0)
+        # still want the LOCAL launcher role, so only >1 ranks divert
+        if env is not None and env["num_processes"] > 1:
+            args.process_id = env["process_id"]
+            args.processes = env["num_processes"]
+            args.coordinator = args.coordinator or env["coordinator_address"]
     if args.process_id is not None:
         run_worker(args)
         return

@@ -34,6 +34,81 @@ def _fake_mesh(proc_grid):
     return types.SimpleNamespace(devices=grid)
 
 
+# --------------------------------------------------------------------------
+# cluster-launcher env detection (SLURM / k8s-style; ROADMAP follow-on)
+# --------------------------------------------------------------------------
+
+def test_detect_cluster_env_k8s_style():
+    from repro.core.multihost import detect_cluster_env
+    env = {"REPRO_COORD_ADDR": "head-0.svc:1234", "REPRO_NUM_PROC": "16",
+           "REPRO_PROC_ID": "7"}
+    got = detect_cluster_env(env)
+    assert got == dict(coordinator_address="head-0.svc:1234",
+                       num_processes=16, process_id=7)
+
+
+def test_detect_cluster_env_slurm():
+    from repro.core.multihost import detect_cluster_env
+    env = {"SLURM_PROCID": "3", "SLURM_NTASKS": "8",
+           "SLURM_STEP_NODELIST": "fugaku[0007-0010]"}
+    got = detect_cluster_env(env)
+    assert got["num_processes"] == 8 and got["process_id"] == 3
+    assert got["coordinator_address"] == "fugaku0007:12321"
+    # port override + plain hostname + comma list
+    env["REPRO_COORD_PORT"] = "999"
+    assert detect_cluster_env(env)["coordinator_address"] == "fugaku0007:999"
+    env["SLURM_STEP_NODELIST"] = "nid001, nid002"
+    assert detect_cluster_env(env)["coordinator_address"].startswith(
+        "nid001:")
+    # mixed prefixes: a plain first element must not swallow a later
+    # bracketed group
+    env["SLURM_STEP_NODELIST"] = "login1,nid[001-002]"
+    assert detect_cluster_env(env)["coordinator_address"].startswith(
+        "login1:")
+    env["SLURM_STEP_NODELIST"] = "nid[001-002,005],login1"
+    assert detect_cluster_env(env)["coordinator_address"].startswith(
+        "nid001:")
+    # k8s-style vars take precedence over SLURM (explicit opt-in)
+    env["REPRO_COORD_ADDR"] = "coord:1"
+    assert detect_cluster_env(env)["coordinator_address"] == "coord:1"
+
+
+def test_detect_cluster_env_absent_and_initialize_noop(monkeypatch):
+    from repro.core import multihost
+    for var in ("REPRO_COORD_ADDR", "SLURM_PROCID", "SLURM_NTASKS",
+                "SLURM_STEP_NODELIST", "SLURM_JOB_NODELIST"):
+        monkeypatch.delenv(var, raising=False)
+    assert multihost.detect_cluster_env() is None
+    # no args + no cluster env = no-op (the launcher-agnostic contract)
+    assert multihost.initialize() is False
+    # explicit single-process stays a no-op too
+    assert multihost.initialize(num_processes=1, process_id=0) is False
+
+
+def test_initialize_picks_up_env(monkeypatch):
+    """initialize() with no args adopts the detected env - pinned by
+    swapping the module's jax reference for a recorder (never actually
+    joining a runtime nor touching the real collectives config)."""
+    from repro.core import multihost
+    monkeypatch.setenv("SLURM_PROCID", "1")
+    monkeypatch.setenv("SLURM_NTASKS", "4")
+    monkeypatch.setenv("SLURM_STEP_NODELIST", "node[11-14]")
+    seen = {}
+
+    def fake_init(coordinator_address=None, num_processes=None,
+                  process_id=None):
+        seen.update(coordinator_address=coordinator_address,
+                    num_processes=num_processes, process_id=process_id)
+
+    fake_jax = types.SimpleNamespace(
+        config=types.SimpleNamespace(update=lambda *a, **k: None),
+        distributed=types.SimpleNamespace(initialize=fake_init))
+    monkeypatch.setattr(multihost, "jax", fake_jax)
+    assert multihost.initialize() is True
+    assert seen == dict(coordinator_address="node11:12321",
+                        num_processes=4, process_id=1)
+
+
 def test_host_topology_aligned_rows():
     from repro.core.multihost import host_topology
     topo = host_topology(_fake_mesh([[0, 0], [0, 0], [1, 1], [1, 1]]))

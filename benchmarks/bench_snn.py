@@ -229,6 +229,127 @@ def _bench_profile_exchange(out, reps):
                  wire_bytes_step=wire_bytes_per_step(net, mode, "packed")))
 
 
+def _area_localized_layout(nb, pb, eb, *, max_delay=8, pres_per_block=32,
+                           seed=0):
+    """Synthetic area-localized blocked layout: block b's edges draw ONLY
+    from its own mirror slice (the Area-Processes Mapping premise - a post
+    block's indegree sub-graph is its own area's projection).  This is the
+    geometry where activity gating has leverage: a quiet area leaves its
+    blocks with zero arrivals.  Random dense connectivity (the hpc net)
+    de-gates at any realistic rate - every block sees every spike."""
+    from repro.core.layout import BlockedGraph
+    rng = np.random.default_rng(seed)
+    n_local = nb * pb - pb // 2              # ragged tail block, like prod
+    n_mirror = nb * pres_per_block
+    pre = np.zeros((nb, eb), np.int32)
+    post_rel = np.zeros((nb, eb), np.int32)
+    delay = np.zeros((nb, eb), np.int32)
+    channel = np.zeros((nb, eb), np.int32)
+    plastic = np.zeros((nb, eb), bool)
+    weight = np.zeros((nb, eb), np.float32)
+    for b in range(nb):
+        ne = eb - 16
+        pre[b, :ne] = rng.integers(b * pres_per_block,
+                                   (b + 1) * pres_per_block, ne)
+        hi = pb if (b + 1) * pb <= n_local else n_local - b * pb
+        post_rel[b, :ne] = rng.integers(0, hi, ne)
+        delay[b, :ne] = rng.integers(1, max_delay + 1, ne)
+        channel[b, :ne] = rng.integers(0, 2, ne)
+        plastic[b, :ne] = rng.uniform(size=ne) < 0.7
+        weight[b, :ne] = rng.uniform(1.0, 50.0, ne)  # inside [w_min, w_max]
+    bg = BlockedGraph(nb=nb, eb=eb, pb=pb, n_local=n_local,
+                      pre_idx=jnp.asarray(pre),
+                      post_rel=jnp.asarray(post_rel),
+                      delay=jnp.asarray(delay), channel=jnp.asarray(channel),
+                      plastic=jnp.asarray(plastic),
+                      edge_perm=jnp.asarray(
+                          np.arange(nb * eb, dtype=np.int32).reshape(nb, eb)),
+                      weight=None)
+    flat = lambda a: jnp.asarray(a.reshape(-1))
+    layout = backends_mod.EdgeLayout(
+        n_local=n_local, n_mirror=n_mirror, max_delay=max_delay,
+        pre_idx=flat(pre), post_idx=flat(post_rel), delay=flat(delay),
+        channel=flat(channel), plastic=flat(plastic), blocked=bg)
+    return layout, jnp.asarray(weight.reshape(-1))
+
+
+def bench_gate_activity(out, *, quick=False):
+    """The pallas:sparse acceptance axis: dense vs activity-gated
+    sweep+stdp across active-area fractions on the area-localized layout.
+
+    ``active_fraction`` is the fraction of post blocks whose pre-area is
+    firing this step (within an active area neurons fire at a biological
+    few-percent-per-step rate; quiet areas are exactly silent).  The gate
+    is provisioned per regime the way ``dryrun_snn`` recommends: capacity
+    sized to ~1.5x the expected active blocks, floor 2.  At fraction 1.0
+    capacity clamps to nb and the backend degenerates to the plain dense
+    reduce - the graceful-degradation end of the curve; the prepass cost
+    it still pays is the gate's overhead ceiling."""
+    if quick:
+        nb, pb, eb, reps = 12, 128, 512, 5
+        fracs = (1.0, 0.0625)
+    else:
+        nb, pb, eb, reps = 64, 256, 2048, 10
+        fracs = (1.0, 0.25, 0.0625, 0.03125)
+    layout, w = _area_localized_layout(nb, pb, eb)
+    bg = layout.blocked
+    dense = backends_mod.get_backend("pallas")
+    params = models.HPC_STDP
+    rng = np.random.default_rng(3)
+    D, M = layout.max_delay, layout.n_mirror
+    traces = stdp_mod.init_traces(M, layout.n_local, jnp.float32)
+    t5 = jnp.asarray(5, jnp.int32)
+    ppb = M // nb
+    for frac in fracs:
+        # activity localized to ceil(frac*nb) areas; ~3%/step inside them
+        n_act = max(int(np.ceil(frac * nb)), 1)
+        act_blocks = rng.choice(nb, size=n_act, replace=False)
+        pre_mask = np.zeros(M, np.float32)
+        for b in act_blocks:
+            pre_mask[b * ppb:(b + 1) * ppb] = 1.0
+        ring = jnp.asarray((rng.uniform(size=(D, M)) < 0.03)
+                           .astype(np.float32) * pre_mask)
+        post_mask = np.zeros(layout.n_local, np.float32)
+        for b in act_blocks:
+            post_mask[b * pb:min((b + 1) * pb, layout.n_local)] = 1.0
+        spk = jnp.asarray((rng.uniform(size=layout.n_local) < 0.05)
+                          .astype(np.float32) * post_mask)
+        # provision the gate for the regime: capacity ~ 1.5x expected
+        # active blocks (solve the gate_capacity policy backwards)
+        cap_target = min(max(int(np.ceil(1.5 * frac * nb)), 2), nb)
+        k = (bg.nb * bg.eb) / nb
+        rate = float(1.0 - (1.0 - min(cap_target / nb, 1.0 - 1e-9))
+                     ** (1.0 / k))
+        sp = backends_mod.SparsePallasBackend(gate_rate=max(rate, 1e-9),
+                                              min_capacity=2)
+        cap = sp.gate_capacity(layout)
+        for name, be in (("dense", dense), ("sparse", sp)):
+            meta = dict(nb=nb, eb=eb, pb=pb, active_fraction=frac,
+                        capacity=(cap if name == "sparse" else nb),
+                        phase=None)
+            if name == "sparse":
+                sweep = jax.jit(lambda w, r, t, b=be: b.sweep_with_stats(
+                    layout, w, r, t))
+                *_, ovf = sweep(w, ring, t5)
+                meta["overflow"] = int(ovf)
+                _, n_active, _ = be.gate_stats(layout, ring, t5)
+                meta["n_active"] = int(n_active)
+            else:
+                sweep = jax.jit(lambda w, r, t, b=be: b.sweep(
+                    layout, w, r, t))
+            sweep_us = _time(sweep, (w, ring, t5), reps)
+            out(f"snn_gate/{name}/act{frac:g}/sweep", sweep_us,
+                dict(meta, phase="sweep"))
+            arrived = sweep(w, ring, t5)[2]
+            supd = jax.jit(lambda w, a, s, b=be: b.stdp_update(
+                layout, w, a, s, traces, params))
+            stdp_us = _time(supd, (w, arrived, spk), reps)
+            out(f"snn_gate/{name}/act{frac:g}/stdp", stdp_us,
+                dict(meta, phase="stdp"))
+            out(f"snn_gate/{name}/act{frac:g}/sweep_plus_stdp",
+                sweep_us + stdp_us, dict(meta, phase="sweep_plus_stdp"))
+
+
 def bench_wire_exchange(out, wires=DEFAULT_WIRES,
                         comm_modes=DEFAULT_COMM_MODES, *,
                         remote_wire=None, quick=False, model="lif",
@@ -273,10 +394,15 @@ def bench_wire_exchange(out, wires=DEFAULT_WIRES,
                                        neuron_model=spec.neuron_model)
             jstep = jax.jit(step)
             state, _ = jstep(state)  # compile+warm
+            jax.block_until_ready(state.v_m)
             t0 = time.perf_counter()
             for _ in range(reps):
+                # block EVERY rep: keeps one step's collectives in flight
+                # at a time - async pile-up of N steps x M collectives can
+                # deadlock the forced-host-device CPU rendezvous (sync cost
+                # is noise against a ~100ms sharded step)
                 state, _ = jstep(state)
-            jax.block_until_ready(state.v_m)
+                jax.block_until_ready(state.v_m)
             us = (time.perf_counter() - t0) / reps * 1e6
             overflow = int(np.asarray(state.wire_overflow).sum())
             split = wire_bytes_split(
@@ -355,9 +481,11 @@ def main(out, backend: str | None = None, *, wires=DEFAULT_WIRES,
          scenario: str | None = None):
     if profile:
         # per-phase breakdown mode (sweep / neuron_update / stdp /
-        # exchange) - the hot-path drill-down, instead of the scaling axes
+        # exchange) - the hot-path drill-down, instead of the scaling axes,
+        # plus the dense-vs-gated activity sweep (the pallas:sparse axis)
         bench_profile(out, (backend,) if backend else DEFAULT_BACKENDS,
                       quick=quick, model=model, scenario=scenario)
+        bench_gate_activity(out, quick=quick)
         return
     if processes:
         # multi-process axis only: real cross-process collectives through
@@ -381,11 +509,10 @@ if __name__ == "__main__":
         description="SNN engine scaling benchmark with backend, spike-wire "
                     "and comm-mode axes")
     ap.add_argument("--backend", default=None,
-                    choices=sorted(set(available_backends())
-                                   | {"pallas:auto"}),
                     help="restrict the step benchmark to one execution "
-                         "backend (default: flat, bucketed and pallas; "
-                         "'pallas:auto' runs with autotuned block shapes)")
+                         "backend (any registered name or variant: flat|"
+                         "bucketed|pallas|pallas:auto|pallas:sparse|"
+                         "pallas:sparse:<rate>; default: all registered)")
     ap.add_argument("--model", default="lif",
                     help="NeuronModel registry axis (lif|izhikevich|adex|"
                          "poisson): run the cross-model demo network with "
@@ -424,6 +551,8 @@ if __name__ == "__main__":
     args = ap.parse_args()
     # fail fast, before the step-scaling phase runs
     neuron_models_mod.get_model(args.model)
+    if args.backend:
+        backends_mod.get_backend(args.backend)
     if args.scenario and args.scenario not in models.available_scenarios():
         ap.error(f"unknown --scenario {args.scenario!r}; available: "
                  f"{models.available_scenarios()}")

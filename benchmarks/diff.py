@@ -1,0 +1,144 @@
+"""Perf-trajectory guard: diff a fresh BENCH run against the committed
+baseline (``benchmarks/run.py --json`` output).
+
+Three independent checks, ordered machine-independent first:
+
+1. **Structure** - the fresh run must produce exactly the committed
+   record set (a silently dropped backend/wire/phase leg fails CI even
+   if everything that still runs got faster).
+2. **Exact invariants** - byte counts, capacities, geometry and overflow
+   fields are machine-independent and must match the baseline exactly.
+3. **Gate win** - from the FRESH run alone: at the sparsest activity
+   regime the gated ``sweep_plus_stdp`` must beat dense pallas by the
+   required factor (the pallas:sparse acceptance bar, immune to runner
+   speed).
+4. **Timing drift** - fresh/baseline timing ratios, normalized by the
+   run's median ratio (cancels absolute machine speed), must stay inside
+   a wide band; catches one phase regressing relative to the rest.
+
+    python benchmarks/diff.py /tmp/BENCH_fresh.json \
+        --baseline BENCH_quick.json
+"""
+
+import argparse
+import json
+import sys
+
+# machine-independent fields that must match the baseline bit-for-bit
+EXACT_FIELDS = ("wire_bytes_step", "wire_bytes_intra", "wire_bytes_inter",
+                "comm_bytes_step", "remote_mirrors", "capacity", "nb",
+                "eb", "pb", "edges", "active_fraction", "overflow",
+                "n_active")
+
+
+def _records(path):
+    with open(path) as f:
+        payload = json.load(f)
+    recs = payload["records"] if isinstance(payload, dict) else payload
+    return {r["name"]: r for r in recs}
+
+
+def _median(xs):
+    xs = sorted(xs)
+    n = len(xs)
+    return xs[n // 2] if n % 2 else 0.5 * (xs[n // 2 - 1] + xs[n // 2])
+
+
+def check_structure(fresh, base, errors):
+    missing = sorted(set(base) - set(fresh))
+    extra = sorted(set(fresh) - set(base))
+    if missing:
+        errors.append(f"records missing from fresh run: {missing}")
+    if extra:
+        errors.append(f"records not in baseline (re-commit it): {extra}")
+
+
+def check_exact(fresh, base, errors):
+    for name in sorted(set(fresh) & set(base)):
+        for field in EXACT_FIELDS:
+            if field in base[name] and field in fresh[name]:
+                b, f = base[name][field], fresh[name][field]
+                if b != f:
+                    errors.append(
+                        f"{name}: {field} changed {b} -> {f} (exact "
+                        f"invariant; re-commit the baseline if intended)")
+
+
+def check_gate_win(fresh, errors, *, factor):
+    gate = [r for r in fresh.values()
+            if r["name"].startswith("snn_gate/")
+            and r.get("phase") == "sweep_plus_stdp"]
+    if not gate:
+        errors.append("no snn_gate sweep_plus_stdp records in fresh run")
+        return
+    sparsest = min(r["active_fraction"] for r in gate)
+    pair = {r["name"].split("/")[1]: r["us_per_call"]
+            for r in gate if r["active_fraction"] == sparsest}
+    if not {"dense", "sparse"} <= set(pair):
+        errors.append(f"gate records incomplete at act={sparsest}: {pair}")
+        return
+    bar = factor * pair["dense"]
+    if pair["sparse"] > bar:
+        errors.append(
+            f"gate win lost at act={sparsest}: sparse sweep_plus_stdp "
+            f"{pair['sparse']:.1f}us > {factor} x dense "
+            f"{pair['dense']:.1f}us")
+    else:
+        print(f"gate win at act={sparsest}: sparse "
+              f"{pair['sparse']:.1f}us vs dense {pair['dense']:.1f}us "
+              f"({pair['dense'] / max(pair['sparse'], 1e-9):.2f}x)")
+
+
+def check_drift(fresh, base, errors, *, band):
+    shared = sorted(set(fresh) & set(base))
+    ratios = {}
+    for name in shared:
+        b, f = base[name]["us_per_call"], fresh[name]["us_per_call"]
+        if b > 0 and f > 0:
+            ratios[name] = f / b
+    if not ratios:
+        return
+    med = _median(list(ratios.values()))
+    print(f"median fresh/baseline timing ratio: {med:.2f} "
+          f"({len(ratios)} records)")
+    for name, r in ratios.items():
+        rel = r / med
+        if rel > band or rel < 1.0 / band:
+            errors.append(
+                f"{name}: timing drifted {rel:.2f}x relative to the "
+                f"run median (band {band}x): fresh "
+                f"{fresh[name]['us_per_call']}us vs baseline "
+                f"{base[name]['us_per_call']}us")
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("fresh", help="freshly generated BENCH json")
+    ap.add_argument("--baseline", default="BENCH_quick.json",
+                    help="committed baseline to diff against")
+    ap.add_argument("--drift", type=float, default=4.0,
+                    help="allowed median-normalized timing ratio band")
+    ap.add_argument("--gate-factor", type=float, default=0.9,
+                    help="sparse must beat dense sweep_plus_stdp by this "
+                         "factor at the sparsest activity regime")
+    args = ap.parse_args(argv)
+
+    fresh, base = _records(args.fresh), _records(args.baseline)
+    errors = []
+    check_structure(fresh, base, errors)
+    check_exact(fresh, base, errors)
+    check_gate_win(fresh, errors, factor=args.gate_factor)
+    check_drift(fresh, base, errors, band=args.drift)
+
+    if errors:
+        print(f"\nFAIL: {len(errors)} perf-trajectory violation(s)")
+        for e in errors:
+            print(f"  - {e}")
+        return 1
+    print(f"\nOK: {len(set(fresh) & set(base))} records match the "
+          f"committed trajectory")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -4,6 +4,14 @@ Prints ``name,us_per_call,derived`` CSV lines (plus the roofline table if
 experiments/roofline.json exists).
 
     PYTHONPATH=src python -m benchmarks.run [--only snn|kernels|models]
+
+``--json`` switches to the committed perf-trajectory mode: it runs the
+curated baseline suite (per-phase profile + dense-vs-gated activity sweep
++ step scaling + wire exchange, backend x wire x model incl.
+pallas:sparse) and writes ``BENCH_<scale>.json`` - the file CI diffs
+fresh runs against (``benchmarks/diff.py``).  ``--scale full`` is the
+committed-numbers configuration (largest feasible single-shard geometry
+on this CPU interpret proxy); ``--scale quick`` is the CI-sized one.
 """
 
 import argparse
@@ -16,11 +24,72 @@ def _out(name: str, us: float, derived="") -> None:
     print(f"{name},{us:.2f},{derived}", flush=True)
 
 
+def _bench_json(path: str, scale: str) -> None:
+    import json
+    import os
+    import platform
+
+    import jax
+
+    from benchmarks import bench_snn
+
+    quick = scale == "quick"
+    records = []
+
+    def out(name, us, derived=None):
+        rec = dict(name=name, us_per_call=round(us, 2), **(derived or {}))
+        if name.startswith("snn_step/") or name.startswith("snn_gate/"):
+            rec["steps_per_sec"] = round(1e6 / us, 2) if us > 0 else None
+        records.append(rec)
+        _out(name, us, derived or {})
+
+    print("name,us_per_call,derived")
+    # per-phase hot path (every backend incl. pallas:sparse) + the
+    # dense-vs-gated activity axis (the pallas:sparse acceptance metric)
+    bench_snn.bench_profile(out, quick=quick)
+    bench_snn.bench_gate_activity(out, quick=quick)
+    # steps/sec scaling, backend axis
+    bench_snn.bench_step_scaling(out, quick=quick)
+    # one cross-model leg (backend x model)
+    bench_snn.bench_step_scaling(out, ("pallas", "pallas:sparse"),
+                                 quick=True, model="izhikevich")
+    # wire codecs with the intra/inter byte split (backend x wire)
+    bench_snn.bench_wire_exchange(out, comm_modes=("area",), quick=quick)
+    bench_snn.bench_mapping_comparison(out, quick=quick)
+
+    payload = {
+        "meta": {
+            "scale": scale,
+            "jax": jax.__version__,
+            "backend_platform": jax.default_backend(),
+            "python": platform.python_version(),
+            "machine": platform.machine(),
+        },
+        "records": records,
+    }
+    os.makedirs(os.path.dirname(path) or ".", exist_ok=True)
+    with open(path, "w") as f:
+        json.dump(payload, f, indent=1)
+        f.write("\n")
+    print(f"-> {path}")
+
+
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--only", default=None,
                     choices=[None, "snn", "kernels", "models", "roofline"])
+    ap.add_argument("--json", default=None, nargs="?", const="",
+                    metavar="PATH",
+                    help="perf-trajectory mode: run the curated baseline "
+                         "suite and write BENCH_<scale>.json (or PATH)")
+    ap.add_argument("--scale", default="quick", choices=["quick", "full"],
+                    help="baseline suite size for --json (quick: CI-sized; "
+                         "full: committed-numbers geometry)")
     args = ap.parse_args()
+
+    if args.json is not None:
+        _bench_json(args.json or f"BENCH_{args.scale}.json", args.scale)
+        return
 
     print("name,us_per_call,derived")
     if args.only in (None, "snn"):

@@ -39,13 +39,22 @@ from repro.core.layout import (DEFAULT_EB_MULTIPLE, DEFAULT_PB, blocked_eb)
 
 __all__ = ["BlockShapes", "sweep_vmem_bytes", "autotune_block_shapes",
            "resolve_block_shapes", "autotune_report", "DEFAULT_PB_CANDIDATES",
-           "DEFAULT_VMEM_BUDGET"]
+           "DEFAULT_VMEM_BUDGET", "DEFAULT_GATE_RATE",
+           "DEFAULT_GATE_MIN_CAPACITY", "gate_capacity",
+           "gated_sweep_vmem_bytes", "recommend_gate_rate"]
 
 #: lane-aligned post-block candidates (the one-hot matmul wants PB >= 128)
 DEFAULT_PB_CANDIDATES = (128, 256, 512, 1024)
 #: per-core VMEM the sweep grid cell may claim (~16 MiB on current TPUs,
 #: minus headroom for the compiler's own buffers)
 DEFAULT_VMEM_BUDGET = 14 * 2 ** 20
+#: default per-step firing fraction the activity gate ("pallas:sparse")
+#: provisions its worklist for - ~20 Hz at dt=0.1 ms, well above the few-Hz
+#: biological regime, the same kind of headroomed default as the sparse
+#: wire's ``max_rate`` (repro.core.wire.SparseWire)
+DEFAULT_GATE_RATE = 0.002
+#: worklist floor, mirroring SparseWire.min_capacity
+DEFAULT_GATE_MIN_CAPACITY = 8
 
 
 @dataclasses.dataclass(frozen=True)
@@ -73,6 +82,56 @@ def sweep_vmem_bytes(pb: int, eb: int, *, max_delay: int, n_mirror: int,
     onehot = eb * pb * 4
     outputs = 2 * pb * 4
     return ring + fresh + edges + arrivals + onehot + outputs
+
+
+def gated_sweep_vmem_bytes(pb: int, eb: int, *, capacity: int) -> int:
+    """VMEM per grid cell of the activity-gated reduce kernel
+    (``blocked_reduce_sweep``) plus the worklist residency.
+
+    The gated pass consumes the pre-pass's arrivals, so neither the ring
+    nor the fresh bitmap is kernel-resident - its footprint is strictly
+    smaller than the fused dense kernel's: 4 edge arrays (post_rel, w,
+    arrived, channel), the one-hot tile, the two output rows, and the
+    fixed-capacity worklist (int32) that drives the compaction.
+    """
+    edges = 4 * eb * 4
+    onehot = eb * pb * 4
+    outputs = 2 * pb * 4
+    worklist = capacity * 4
+    return edges + onehot + outputs + worklist
+
+
+def gate_capacity(nb: int, n_edges: int, rate: float, *,
+                  min_capacity: int = DEFAULT_GATE_MIN_CAPACITY) -> int:
+    """Worklist capacity (in post blocks) for a per-step firing fraction.
+
+    The same headroom policy as the ``sparse:<rate>`` wire
+    (``SparseWire.capacity``), lifted from neurons to post blocks: an edge
+    sees an arrival with probability ``rate`` (its pre fired at exactly the
+    right step), so a block with ``k ~= n_edges / nb`` real edges is active
+    with probability ``1 - (1 - rate)^k``.  Capacity is the expected
+    active-block count at that rate, floored at ``min_capacity`` and capped
+    at ``nb`` (a full-capacity gate degenerates to the dense pass and can
+    never saturate).  Like the wire, no hidden headroom is applied here -
+    :func:`recommend_gate_rate` adds the 2x when provisioning from
+    measurement.
+    """
+    if not 0.0 < rate <= 1.0:
+        raise ValueError(f"gate rate must be in (0, 1], got {rate!r}")
+    k = max(float(n_edges) / max(nb, 1), 1.0)
+    p_active = 1.0 - (1.0 - rate) ** k
+    cap = max(int(np.ceil(nb * p_active)), min_capacity)
+    return min(cap, nb)
+
+
+def recommend_gate_rate(frac_peak: float, *, headroom: float = 2.0) -> float:
+    """Measured per-step firing fraction -> provisioned gate rate.
+
+    The same 2x-peak headroom policy ``dryrun_snn.measure_firing_rates``
+    applies to the ``sparse:<rate>`` wire recommendation; feed the result
+    to ``"pallas:sparse:<rate>"``.
+    """
+    return round(min(max(headroom * frac_peak, 1e-4), 1.0), 5)
 
 
 def _candidates(graphs, pb_candidates, eb_multiple, vmem_budget):

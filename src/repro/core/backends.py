@@ -61,18 +61,20 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.core import autotune as autotune_mod
 from repro.core import neuron_models as neuron_models_mod
 from repro.core import snn
 from repro.core import stdp as stdp_mod
 from repro.core.layout import BlockedGraph, blocked_layout
-from repro.kernels.stdp_update import stdp_update_kernel
-from repro.kernels.synaptic_gather import synaptic_gather
+from repro.kernels.stdp_update import stdp_update_kernel, stdp_update_worklist
+from repro.kernels.synaptic_gather import (blocked_reduce_sweep,
+                                           synaptic_gather)
 
 __all__ = ["EdgeLayout", "SweepBackend", "FlatBackend", "BucketedBackend",
-           "PallasBackend", "register_backend", "get_backend",
-           "available_backends", "to_native_weights", "to_flat_weights",
-           "flat_edge_values", "layout_tag", "layout_kind",
-           "resolve_runtime_weights"]
+           "PallasBackend", "SparsePallasBackend", "register_backend",
+           "get_backend", "available_backends", "to_native_weights",
+           "to_flat_weights", "flat_edge_values", "layout_tag",
+           "layout_kind", "resolve_runtime_weights"]
 
 
 # --------------------------------------------------------------------------
@@ -370,6 +372,27 @@ class SweepBackend:
         ex, inh, arrived = self.sweep(layout, weights, ring, t)
         return ex, inh, arrived, ring
 
+    # -- gate telemetry ---------------------------------------------------
+    #: True iff sweep dispatch is activity-gated - the ``*_with_stats``
+    #: variants then report real saturation counts (DESIGN.md §13)
+    gated: bool = False
+
+    def sweep_with_stats(self, layout: EdgeLayout, weights, ring, t):
+        """:meth:`sweep` plus this step's gate-saturation count: 1 when an
+        activity gate overflowed its worklist and fell back to the dense
+        pass, 0 otherwise (always 0 on ungated backends).  Engines
+        accumulate it into ``gate_overflow`` state, the compute twin of
+        ``DistState.wire_overflow``."""
+        ex, inh, arrived = self.sweep(layout, weights, ring, t)
+        return ex, inh, arrived, jnp.zeros((), jnp.int32)
+
+    def sweep_overlap_with_stats(self, layout: EdgeLayout, weights, ring,
+                                 t, fresh_bits):
+        """:meth:`sweep_overlap` plus the gate-saturation count."""
+        ex, inh, arrived, ring = self.sweep_overlap(layout, weights, ring,
+                                                    t, fresh_bits)
+        return ex, inh, arrived, ring, jnp.zeros((), jnp.int32)
+
     # -- neuron dynamics --------------------------------------------------
     def neuron_update(self, layout: EdgeLayout, neurons, table, input_ex,
                       input_in, *,
@@ -626,11 +649,228 @@ class PallasBackend(SweepBackend):
         return new_w.astype(weights.dtype)
 
 
+class SparsePallasBackend(PallasBackend):
+    """Activity-gated sweep: step cost scales with ACTIVITY, not topology
+    (DESIGN.md §13).
+
+    At biological rates only a few percent of neurons spike per step, yet
+    the dense kernel touches every ELL slot of every post block every step.
+    This backend runs a cheap jnp pre-pass that reproduces the fused
+    kernel's ring/fresh gather bit-for-bit (same flat-take, same fresh
+    overlay, same padding mask - (NB, EB) blocked arrivals), counts the
+    per-block arrival population, and compacts the ACTIVE block ids into a
+    fixed-capacity worklist:
+
+    * capacity comes from the same firing-rate headroom policy as the
+      ``sparse:<rate>`` wire (:func:`repro.core.autotune.gate_capacity`);
+    * the gated Pallas grid (:func:`blocked_reduce_sweep`) dispatches ONLY
+      worklist blocks - the compacted inputs are scattered back onto
+      zero-initialized accumulators, so dead blocks keep their zeros and
+      pay neither gather nor matmul;
+    * saturation (more active blocks than capacity) deterministically falls
+      back to the dense pass over the SAME pre-gathered arrivals - never a
+      dropped spike - and reports 1 through :meth:`sweep_with_stats`, the
+      compute twin of ``DistState.wire_overflow``;
+    * the gate covers BOTH halves of the single edge pass: the STDP
+      depression consuming ``emit_arrivals`` runs on a worklist grid too
+      (:func:`repro.kernels.stdp_update.stdp_update_worklist`), with a
+      block counted active when it has an arrival OR a post spike.  A
+      skipped block keeps its weights - bit-identical to the dense update
+      whenever resident plastic weights already sit inside
+      ``[w_min, w_max]`` (the dense kernel's only effect on a dead block is
+      the clip; engine init + every prior update maintain the invariant).
+
+    ``capacity >= NB`` (tiny graphs, or rates near 1) degenerates to the
+    dense reduce with no branch at all.  Dense ``pallas`` remains the
+    bit-exact oracle: active blocks run the identical where/dot tail on the
+    identical arrivals, so spikes AND voltages match bit-for-bit.
+    """
+
+    name = "pallas:sparse"
+    gated = True
+
+    def __init__(self, interpret: bool | None = None, block_shapes=None,
+                 gate_rate: float = autotune_mod.DEFAULT_GATE_RATE,
+                 min_capacity: int = autotune_mod.DEFAULT_GATE_MIN_CAPACITY):
+        super().__init__(interpret=interpret, block_shapes=block_shapes)
+        if not 0.0 < gate_rate <= 1.0:
+            raise ValueError(
+                f"gate rate must be in (0, 1], got {gate_rate!r}")
+        self.gate_rate = float(gate_rate)
+        self.min_capacity = int(min_capacity)
+        if self.gate_rate != autotune_mod.DEFAULT_GATE_RATE:
+            self.name = f"pallas:sparse:{self.gate_rate:g}"
+
+    # -- gate policy ------------------------------------------------------
+    def gate_capacity(self, layout: EdgeLayout) -> int:
+        """Static worklist capacity (in post blocks) for this layout."""
+        bg = _require_blocked(layout)
+        return autotune_mod.gate_capacity(
+            bg.nb, layout.n_edges, self.gate_rate,
+            min_capacity=self.min_capacity)
+
+    def _blocked_arrivals(self, layout: EdgeLayout, ring, t, fresh):
+        """(NB, EB) f32 per-edge arrivals - the pre-pass.
+
+        Bit-identical to the fused kernel's in-kernel gather: same flat
+        ring take, same delay==1 fresh overlay, same delay>0 padding mask.
+        """
+        bg = _require_blocked(layout)
+        d, m = ring.shape
+        t = jnp.asarray(t, jnp.int32)
+        row = jnp.mod(t - bg.delay, layout.max_delay)
+        flat = ring.astype(jnp.float32).reshape(-1)
+        arrived = jnp.take(flat, row * m + bg.pre_idx, axis=0)
+        if fresh is not None:
+            fresh_arr = jnp.take(fresh.astype(jnp.float32).reshape(-1),
+                                 bg.pre_idx, axis=0)
+            arrived = jnp.where(bg.delay == 1, fresh_arr, arrived)
+        return arrived * (bg.delay > 0).astype(jnp.float32)
+
+    def gate_stats(self, layout: EdgeLayout, ring, t, fresh=None):
+        """(per-block arrival counts (NB,), n_active (), capacity) - the
+        observable the gate dispatches on; used by telemetry and tests."""
+        arrived = self._blocked_arrivals(layout, ring, t, fresh)
+        counts = jnp.sum(arrived > 0, axis=1).astype(jnp.int32)
+        n_active = jnp.count_nonzero(counts).astype(jnp.int32)
+        return counts, n_active, self.gate_capacity(layout)
+
+    # -- gated edge pass --------------------------------------------------
+    def _gated_sweep(self, layout, weights, ring, t, fresh):
+        bg = _require_blocked(layout)
+        nb, eb, pb = bg.nb, bg.eb, bg.pb
+        interp = self._interp()
+        arrived = self._blocked_arrivals(layout, ring, t, fresh)
+        w32 = weights.astype(jnp.float32).reshape(nb, eb)
+        cap = self.gate_capacity(layout)
+
+        if cap >= nb:       # full-capacity gate == dense pass, no branch
+            ex, inh = blocked_reduce_sweep(
+                bg.post_rel, w32, arrived, bg.channel, pb=pb,
+                interpret=interp)
+            overflow = jnp.zeros((), jnp.int32)
+        else:
+            counts = jnp.sum(arrived > 0, axis=1)
+            n_active = jnp.count_nonzero(counts).astype(jnp.int32)
+            # deterministic fixed-size compaction: ascending block ids,
+            # padding slots carry the out-of-range sentinel ``nb`` whose
+            # takes clip and whose scatter rows drop
+            (wl,) = jnp.nonzero(counts > 0, size=cap, fill_value=nb)
+            wl = wl.astype(jnp.int32)
+            overflow = (n_active > cap).astype(jnp.int32)
+
+            def gated(_):
+                take = lambda a: jnp.take(a, wl, axis=0)
+                exc, inc = blocked_reduce_sweep(
+                    take(bg.post_rel), take(w32), take(arrived),
+                    take(bg.channel), pb=pb, interpret=interp)
+                zeros = jnp.zeros((nb, pb), jnp.float32)
+                return (zeros.at[wl].set(exc, mode="drop"),
+                        zeros.at[wl].set(inc, mode="drop"))
+
+            def dense(_):
+                return blocked_reduce_sweep(
+                    bg.post_rel, w32, arrived, bg.channel, pb=pb,
+                    interpret=interp)
+
+            ex, inh = jax.lax.cond(n_active <= cap, gated, dense, None)
+
+        dtype = ring.dtype
+        return (ex.reshape(-1)[:layout.n_local].astype(dtype),
+                inh.reshape(-1)[:layout.n_local].astype(dtype),
+                arrived.reshape(-1).astype(dtype), overflow)
+
+    def sweep(self, layout, weights, ring, t):
+        ex, inh, arrived, _ = self._gated_sweep(layout, weights, ring, t,
+                                                None)
+        return ex, inh, arrived
+
+    def sweep_with_stats(self, layout, weights, ring, t):
+        return self._gated_sweep(layout, weights, ring, t, None)
+
+    def sweep_overlap(self, layout, weights, ring, t, fresh_bits):
+        out = self.sweep_overlap_with_stats(layout, weights, ring, t,
+                                            fresh_bits)
+        return out[:4]
+
+    def sweep_overlap_with_stats(self, layout, weights, ring, t,
+                                 fresh_bits):
+        # same §III.C split as the dense backend: the pre-pass folds
+        # ``fresh_bits`` into the delay-1 arrivals, so the slot-(t-1) ring
+        # write stays independent of the sweep and only the delay-1 term
+        # waits on the exchange collective
+        ex, inh, arrived, overflow = self._gated_sweep(
+            layout, weights, ring, t, fresh_bits)
+        ring = jax.lax.dynamic_update_index_in_dim(
+            ring, fresh_bits, jnp.mod(t - 1, layout.max_delay), axis=0)
+        return ex, inh, arrived, ring, overflow
+
+    # -- gated plasticity -------------------------------------------------
+    def stdp_update(self, layout, weights, arrived, post_spike, traces,
+                    params: stdp_mod.STDPParams):
+        bg = _require_blocked(layout)
+        if bg.plastic is None:
+            raise ValueError(
+                "blocked layout lacks the plastic mask (ship the "
+                "blk_plastic const alongside the other blk_* arrays) - "
+                "required by the blocked-resident STDP kernel")
+        nb, eb, pb = bg.nb, bg.eb, bg.pb
+        cap = self.gate_capacity(layout)
+        if cap >= nb:       # full-capacity gate: the dense oracle path
+            return super().stdp_update(layout, weights, arrived,
+                                       post_spike, traces, params)
+
+        w32 = weights.astype(jnp.float32).reshape(nb, eb)
+        arr = arrived.astype(jnp.float32).reshape(nb, eb)
+        sp = post_spike.astype(jnp.float32)
+        kpre = traces.k_pre.astype(jnp.float32)
+        kpost = traces.k_post.astype(jnp.float32)
+        ptuple = (params.lam, params.alpha, params.mu, params.w0,
+                  params.w_min, params.w_max)
+        interp = self._interp()
+
+        # a block is active for plasticity if any edge arrival lands in it
+        # (depression term) OR any of its post rows spiked (potentiation
+        # term); a block with neither only re-clips in the dense kernel
+        sp_blk = jnp.pad(sp > 0, (0, nb * pb - layout.n_local)
+                         ).reshape(nb, pb)
+        active = jnp.any(arr > 0, axis=1) | jnp.any(sp_blk, axis=1)
+        n_active = jnp.count_nonzero(active).astype(jnp.int32)
+        (wl,) = jnp.nonzero(active, size=cap, fill_value=nb)
+        wl = wl.astype(jnp.int32)
+
+        def gated(_):
+            take = lambda a: jnp.take(a, wl, axis=0)
+            out_c = stdp_update_worklist(
+                take(w32), take(bg.pre_idx), take(bg.post_rel),
+                take(bg.plastic), take(arr), wl, sp, kpre, kpost,
+                params=ptuple, pb=pb, interpret=interp)
+            return w32.at[wl].set(out_c, mode="drop")
+
+        def dense(_):
+            out = stdp_update_kernel(
+                w32.reshape(-1), bg.pre_idx.reshape(-1),
+                bg.post_rel.reshape(-1), bg.plastic.reshape(-1),
+                arr.reshape(-1), sp, kpre, kpost, params=ptuple,
+                eb=eb, pb=pb, interpret=interp)
+            return out.reshape(nb, eb)
+
+        new_w = jax.lax.cond(n_active <= cap, gated, dense, None)
+        return new_w.reshape(-1).astype(weights.dtype)
+
+
 # --------------------------------------------------------------------------
 # registry
 # --------------------------------------------------------------------------
 
 _REGISTRY: dict[str, SweepBackend] = {}
+
+#: parameterized variants ("pallas:auto", "pallas:sparse:<rate>") resolve
+#: into THIS side cache, never the registry proper, so
+#: ``available_backends()`` stays stable however many variants a run
+#: touches - the same bug class as the "sparse:<rate>" wire cache fixed
+#: in repro.core.wire (DESIGN.md §10)
+_VARIANT_CACHE: dict[str, SweepBackend] = {}
 
 
 def register_backend(name: str, backend: SweepBackend,
@@ -641,6 +881,35 @@ def register_backend(name: str, backend: SweepBackend,
     _REGISTRY[name] = backend
 
 
+def _resolve_variant(name: str) -> SweepBackend | None:
+    if not name.startswith("pallas:"):
+        return None
+    mode = name.split(":", 1)[1]
+    if mode == "auto":
+        return PallasBackend(block_shapes="auto")
+    if mode.startswith("sparse:"):
+        text = mode.split(":", 1)[1]
+        try:
+            rate = float(text)
+        except ValueError:
+            raise ValueError(
+                f"bad gate rate in backend name {name!r}: {text!r} is "
+                "not a float") from None
+        if not 0.0 < rate <= 1.0:
+            raise ValueError(
+                f"gate rate in backend name {name!r} must be in (0, 1], "
+                f"got {rate!r}")
+        # canonical-key cache, so "pallas:sparse:0.01" and
+        # "pallas:sparse:0.010" share one backend (and its device caches)
+        canon = f"pallas:sparse:{rate:g}"
+        hit = _VARIANT_CACHE.get(canon)
+        if hit is None:
+            hit = _VARIANT_CACHE[canon] = SparsePallasBackend(
+                gate_rate=rate)
+        return hit
+    return None
+
+
 def get_backend(name) -> SweepBackend:
     if isinstance(name, SweepBackend):
         return name
@@ -648,11 +917,13 @@ def get_backend(name) -> SweepBackend:
         return _REGISTRY[name]
     # parameterized variants resolve (and cache) on first use, the same
     # move as the "sparse:<rate>" wire names (DESIGN.md §10)
-    if isinstance(name, str) and name.startswith("pallas:"):
-        mode = name.split(":", 1)[1]
-        if mode == "auto":
-            backend = PallasBackend(block_shapes="auto")
-            _REGISTRY[name] = backend
+    if isinstance(name, str):
+        hit = _VARIANT_CACHE.get(name)
+        if hit is not None:
+            return hit
+        backend = _resolve_variant(name)
+        if backend is not None:
+            _VARIANT_CACHE[name] = backend
             return backend
     raise ValueError(
         f"unknown sweep backend {name!r}; available: "
@@ -666,3 +937,4 @@ def available_backends() -> tuple[str, ...]:
 register_backend("flat", FlatBackend())
 register_backend("bucketed", BucketedBackend())
 register_backend("pallas", PallasBackend())
+register_backend("pallas:sparse", SparsePallasBackend())

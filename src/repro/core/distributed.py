@@ -389,6 +389,10 @@ class DistState:
     t: jax.Array             # (S,) step counter (identical values)
     key: jax.Array           # (S, 2) per-shard PRNG key data
     wire_overflow: jax.Array  # (S,) cumulative saturated lossy-wire payloads
+    #: (S,) cumulative steps whose activity gate saturated its worklist and
+    #: fell back to the dense sweep (DESIGN.md §13) - the compute twin of
+    #: ``wire_overflow``; always 0 on ungated backends
+    gate_overflow: jax.Array = None
     #: model-specific per-neuron state (S, n_local) arrays beyond the
     #: common four - Izhikevich's {"u"}, AdEx's {"w_ad"}; {} for lif and
     #: poisson.  The key set is fixed per NeuronModel (DESIGN.md §12), so
@@ -408,7 +412,7 @@ jax.tree_util.register_dataclass(
     DistState,
     data_fields=["v_m", "syn_ex", "syn_in", "ref_count", "ring", "weights",
                  "k_pre", "k_post", "prev_bits", "t", "key",
-                 "wire_overflow", "aux"],
+                 "wire_overflow", "gate_overflow", "aux"],
     meta_fields=["weights_layout", "neuron_model"])
 
 
@@ -455,6 +459,7 @@ def init_stacked_state(net: StackedNetwork, groups, seed: int = 0,
         t=jnp.zeros((S,), jnp.int32),
         key=jax.random.key_data(keys),
         wire_overflow=jnp.zeros((S,), jnp.int32),
+        gate_overflow=jnp.zeros((S,), jnp.int32),
         aux={k: jnp.asarray(nvars[k], dtype) for k in model.extra_fields},
         weights_layout=weights_layout,
         neuron_model=model.name,
@@ -747,15 +752,16 @@ def _build_step(mesh: Mesh, groups, cfg: DistributedConfig, max_delay: int,
             # backend splits delays >= 2 (old ring, independent of the
             # collective) from delay == 1 (the fresh exchange) when it can;
             # otherwise it degrades to write-then-sweep
-            input_ex, input_in, arrived, ring = backend.sweep_overlap(
+            (input_ex, input_in, arrived, ring,
+             gate_ovf) = backend.sweep_overlap_with_stats(
                 layout, w_native, state.ring, t, mirror_prev)
         else:
             # naive schedule: write first, then one full sweep (the sweep
             # then depends on the collective - no overlap possible)
             ring = jax.lax.dynamic_update_index_in_dim(
                 state.ring, mirror_prev, jnp.mod(t - 1, D), axis=0)
-            input_ex, input_in, arrived = backend.sweep(
-                layout, w_native, ring, t)
+            input_ex, input_in, arrived, gate_ovf = (
+                backend.sweep_with_stats(layout, w_native, ring, t))
 
         # ---- (3) external drive + neuron dynamics ------------------------
         key = jax.random.wrap_key_data(state.key)
@@ -816,6 +822,8 @@ def _build_step(mesh: Mesh, groups, cfg: DistributedConfig, max_delay: int,
             prev_bits=bits.astype(dtype), t=t + 1,
             key=jax.random.key_data(key),
             wire_overflow=state.wire_overflow + overflow,
+            gate_overflow=(gate_ovf if state.gate_overflow is None
+                           else state.gate_overflow + gate_ovf),
             aux=neurons.extra,
             weights_layout=state.weights_layout,
             neuron_model=state.neuron_model)

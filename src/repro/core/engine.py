@@ -149,6 +149,11 @@ class EngineState:
     traces: stdp_mod.TraceState
     t: jax.Array             # () int32 step counter
     key: jax.Array           # PRNG key for stochastic drive
+    #: () int32: steps whose activity gate saturated its worklist and fell
+    #: back to the dense pass (DESIGN.md §13) - always 0 on ungated
+    #: backends; the compute twin of ``DistState.wire_overflow``.  None
+    #: (legacy states) is normalized to zeros at the step boundary.
+    gate_overflow: jax.Array | None = None
     #: static marker: layout of ``weights`` - "flat" or a shape-qualified
     #: blocked tag like "blocked:256x2048" (backends.layout_tag).  Pytree
     #: metadata, so a blocked-resident state can never be silently misread
@@ -163,7 +168,8 @@ class EngineState:
 
 jax.tree_util.register_dataclass(
     EngineState,
-    data_fields=["neurons", "ring", "weights", "traces", "t", "key"],
+    data_fields=["neurons", "ring", "weights", "traces", "t", "key",
+                 "gate_overflow"],
     meta_fields=["weights_layout", "neuron_model"])
 
 
@@ -195,6 +201,7 @@ def init_state(graph: ShardGraph, groups, key: jax.Array, *,
         traces=stdp_mod.init_traces(graph.n_mirror, graph.n_local, dtype),
         t=jnp.zeros((), jnp.int32),
         key=key,
+        gate_overflow=jnp.zeros((), jnp.int32),
         weights_layout=weights_layout,
         neuron_model=model.name,
     )
@@ -278,9 +285,12 @@ def engine_step(state: EngineState, graph: ShardGraph, table: jax.Array,
     w_native, native_tag, convert = backends_mod.resolve_runtime_weights(
         backend, layout, state.weights, state.weights_layout)
 
-    # (1) synaptic sweep over owned edges
-    input_ex, input_in, arrived = backend.sweep(
+    # (1) synaptic sweep over owned edges (+ gate-saturation telemetry,
+    #     a constant 0 on ungated backends)
+    input_ex, input_in, arrived, gate_ovf = backend.sweep_with_stats(
         layout, w_native, state.ring, state.t)
+    gate_prev = (state.gate_overflow if state.gate_overflow is not None
+                 else jnp.zeros((), jnp.int32))
 
     # (2) external stochastic drive
     key, sub = jax.random.split(state.key)
@@ -331,6 +341,7 @@ def engine_step(state: EngineState, graph: ShardGraph, table: jax.Array,
 
     new_state = EngineState(neurons=neurons, ring=ring, weights=weights,
                             traces=traces, t=state.t + 1, key=key,
+                            gate_overflow=gate_prev + gate_ovf,
                             weights_layout=state.weights_layout,
                             neuron_model=state.neuron_model)
     return new_state, spike_bits
@@ -362,6 +373,9 @@ def run(state: EngineState, graph: ShardGraph, table: jax.Array,
     layout = backend.prepare(graph)
     model = neuron_models_mod.get_model(cfg.neuron_model)
     native_tag = backends_mod.layout_tag(layout, backend.weights_layout)
+    if state.gate_overflow is None:   # stable scan carry structure
+        state = dataclasses.replace(
+            state, gate_overflow=jnp.zeros((), jnp.int32))
     if state.weights_layout != native_tag:
         state = dataclasses.replace(
             state,

@@ -34,7 +34,7 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
-__all__ = ["stdp_update_kernel", "DEFAULT_EB"]
+__all__ = ["stdp_update_kernel", "stdp_update_worklist", "DEFAULT_EB"]
 
 DEFAULT_EB = 2048
 
@@ -99,3 +99,69 @@ def stdp_update_kernel(weights, pre_idx, post_idx, plastic, arrived,
     )(vec(weights), vec(pre_idx), vec(post_idx), vec(plastic),
       vec(arrived), post_spike, k_pre, k_post)
     return out.reshape(e)
+
+
+# --------------------------------------------------------------------------
+# worklist-aware grid (activity-gated backend, DESIGN.md §13)
+# --------------------------------------------------------------------------
+
+def _wl_kernel(wl_ref, w_ref, pre_ref, post_ref, plast_ref, arrived_ref,
+               spike_ref, kpre_ref, kpost_ref, w_out, *, lam, alpha, mu, w0,
+               wmin, wmax, pb: int):
+    """Same pl-STDP update as :func:`_kernel` in ELL mode, but the owning
+    post block is read from the worklist instead of ``program_id`` - grid
+    cell ``i`` covers post block ``worklist[i]``, so the grid dispatches
+    only the gate's ACTIVE blocks (compacted inputs)."""
+    w = w_ref[...][0]
+    pre = pre_ref[...][0]
+    post = post_ref[...][0]
+    plastic = plast_ref[...][0]
+    arrived = arrived_ref[...][0]
+    # absolute post rows of the owning block; padding worklist slots carry
+    # an out-of-range sentinel whose gathers clamp (jnp.take clips under
+    # jit) and whose output row the caller drops at the scatter
+    post = post + wl_ref[0] * pb
+
+    k_post = jnp.take(kpost_ref[...].reshape(-1), post, axis=0)
+    k_pre = jnp.take(kpre_ref[...].reshape(-1), pre, axis=0)
+    post_sp = jnp.take(spike_ref[...].reshape(-1), post, axis=0)
+
+    w1 = w - arrived * (lam * alpha) * w * k_post
+    w_safe = jnp.maximum(w1, 1e-12)
+    pot = lam * (w0 ** (1.0 - mu)) * jnp.exp(mu * jnp.log(w_safe)) * k_pre
+    w2 = jnp.clip(w1 + post_sp * pot, wmin, wmax)
+    w_out[...] = jnp.where(plastic, w2, w)[None]
+
+
+@functools.partial(jax.jit, static_argnames=("interpret", "params", "pb"))
+def stdp_update_worklist(weights, pre_idx, post_rel, plastic, arrived,
+                         worklist, post_spike, k_pre, k_post, *, params,
+                         pb: int, interpret: bool = True):
+    """pl-STDP over a compacted worklist of post blocks.
+
+    ``weights``/``pre_idx``/``post_rel``/``plastic``/``arrived`` are
+    (G, EB) ELL arrays already compacted through ``worklist`` (G = the
+    gate's fixed capacity); ``worklist`` is (G,) int32 absolute post-block
+    ids (entries ``>= NB`` mark padding slots - their rows compute on
+    clamped gathers and are dropped by the caller's scatter).  Returns the
+    updated (G, EB) weights in the same compacted order.
+    """
+    g, eb = weights.shape
+    blk = pl.BlockSpec((1, eb), lambda i: (i, 0))
+    m = k_pre.shape[0]
+    nl = k_post.shape[0]
+    full = lambda shape: pl.BlockSpec(shape, lambda i: tuple(
+        0 for _ in shape))
+    lam, alpha, mu, w0, wmin, wmax = params
+    return pl.pallas_call(
+        functools.partial(_wl_kernel, lam=lam, alpha=alpha, mu=mu, w0=w0,
+                          wmin=wmin, wmax=wmax, pb=pb),
+        grid=(g,),
+        in_specs=[pl.BlockSpec((1,), lambda i: (i,)),
+                  blk, blk, blk, blk, blk,
+                  full((nl,)), full((m,)), full((nl,))],
+        out_specs=blk,
+        out_shape=jax.ShapeDtypeStruct((g, eb), jnp.float32),
+        interpret=interpret,
+    )(worklist, weights, pre_idx, post_rel, plastic, arrived,
+      post_spike, k_pre, k_post)

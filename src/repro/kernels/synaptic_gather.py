@@ -51,7 +51,8 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
-__all__ = ["synaptic_gather", "DEFAULT_EB", "DEFAULT_PB"]
+__all__ = ["synaptic_gather", "blocked_reduce_sweep", "DEFAULT_EB",
+           "DEFAULT_PB"]
 
 DEFAULT_EB = 2048   # edges per post-block (padded)
 DEFAULT_PB = 256    # post neurons per block
@@ -157,3 +158,64 @@ def synaptic_gather(pre_idx, post_rel, weight, delay, channel, ring, t, *,
     if emit_arrivals:
         return ex, inh, out[2]
     return ex, inh
+
+
+# --------------------------------------------------------------------------
+# activity-gated two-pass variant (DESIGN.md §13)
+# --------------------------------------------------------------------------
+
+def _reduce_kernel(post_rel_ref, w_ref, arr_ref, chan_ref, ex_ref, in_ref,
+                   *, pb: int):
+    """MXU reduction half of the edge pass, decoupled from the ring gather.
+
+    Consumes pre-gathered per-edge arrivals (the gate pre-pass's output)
+    instead of gathering the ring itself, so a worklist-driven grid can
+    dispatch it over COMPACTED blocks only - dead blocks pay no gather and
+    no matmul.  The math is the tail of :func:`_kernel` verbatim
+    (same where/dot sequence), which is what makes the gated backend
+    bit-identical to the dense oracle on active blocks.
+    """
+    post_rel = post_rel_ref[...][0]   # (EB,) int32 in [0, PB)
+    w = w_ref[...][0]                 # (EB,) f32
+    arrived = arr_ref[...][0]         # (EB,) f32, padding already masked
+    chan = chan_ref[...][0]           # (EB,) int32
+    contrib = w * arrived
+    onehot = (post_rel[:, None] ==
+              jax.lax.broadcasted_iota(jnp.int32, (1, pb), 1)
+              ).astype(w.dtype)                      # (EB, PB)
+    ex = jnp.where(chan == 0, contrib, 0.0)[None, :]
+    inh = jnp.where(chan == 1, contrib, 0.0)[None, :]
+    ex_ref[...] = jax.lax.dot(ex, onehot,
+                              preferred_element_type=jnp.float32)
+    in_ref[...] = jax.lax.dot(inh, onehot,
+                              preferred_element_type=jnp.float32)
+
+
+@functools.partial(jax.jit, static_argnames=("pb", "interpret"))
+def blocked_reduce_sweep(post_rel, weight, arrived, channel, *,
+                         pb: int = DEFAULT_PB, interpret: bool = True):
+    """Arrivals-consuming sweep reduction: (G, EB) blocks -> (G, PB) x 2.
+
+    ``G`` is whatever leading dimension the caller dispatches - the full
+    ``NB`` for the dense fallback pass, or the gate's fixed worklist
+    capacity with every input compacted through the worklist (two-pass
+    compact-then-sweep, DESIGN.md §13).  Outputs stay (G, PB); the caller
+    scatters worklist rows back onto the zero-initialized (NB, PB)
+    accumulators (dead blocks keep their zeros).
+
+    VMEM per grid cell: edge arrays 4*EB*4 (post_rel, w, arrived, chan) +
+    onehot EB*PB*4 + outputs 2*PB*4 - no ring, no fresh residency (the
+    pre-pass already folded both into ``arrived``).
+    """
+    g, eb = post_rel.shape
+    edge_spec = pl.BlockSpec((1, eb), lambda i: (i, 0))
+    out_spec = pl.BlockSpec((1, pb), lambda i: (i, 0))
+    return pl.pallas_call(
+        functools.partial(_reduce_kernel, pb=pb),
+        grid=(g,),
+        in_specs=[edge_spec, edge_spec, edge_spec, edge_spec],
+        out_specs=[out_spec, out_spec],
+        out_shape=[jax.ShapeDtypeStruct((g, pb), jnp.float32),
+                   jax.ShapeDtypeStruct((g, pb), jnp.float32)],
+        interpret=interpret,
+    )(post_rel, weight, arrived, channel)

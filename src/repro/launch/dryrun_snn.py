@@ -72,7 +72,8 @@ def state_and_consts_sds(dims, mesh, axes, *, compact: bool = False):
         ref_count=sds((nl,), i32), ring=sds((D, nm), f32),
         weights=sds((e,), f32), k_pre=sds((nm,), f32), k_post=sds((nl,), f32),
         prev_bits=sds((nl,), f32), t=sds((), i32),
-        key=sds((2,), jnp.uint32), wire_overflow=sds((), i32))
+        key=sds((2,), jnp.uint32), wire_overflow=sds((), i32),
+        gate_overflow=sds((), i32))
     consts = dict(
         pre_idx=sds((e,), idx_t), post_idx=sds((e,), idx_t),
         delay=sds((e,), small_t), channel=sds((e,), small_t),
@@ -194,9 +195,21 @@ def measure_firing_rates(*, scale: float = 0.02, steps: int = 400,
             frac_peak=round(float(frac.max()), 6)))
     peak = max(r["frac_peak"] for r in rows)
     recommended = round(min(max(2.0 * peak, 1e-4), 1.0), 5)
+    # the same measured peak also provisions the activity-gated sweep
+    # (DESIGN.md §13): the gate's worklist capacity follows the identical
+    # 2x-headroom policy, reported here in post blocks on THIS probe's
+    # geometry so saturation->dense fallback is predictable up front
+    from repro.core import autotune
+    from repro.core.layout import DEFAULT_PB
+    gate_rate = autotune.recommend_gate_rate(peak)
+    nb = max(-(-g.n_local // DEFAULT_PB), 1)
+    cap = autotune.gate_capacity(nb, g.n_edges, gate_rate)
     return dict(probe_scale=scale, probe_steps=steps, n_rows=n_rows,
                 rows=rows, frac_peak=peak,
-                recommended_sparse=f"sparse:{recommended}")
+                recommended_sparse=f"sparse:{recommended}",
+                recommended_gate=f"pallas:sparse:{gate_rate:g}",
+                gate_rate=gate_rate,
+                gate_capacity_blocks=cap, gate_blocks_total=nb)
 
 
 def main():
@@ -265,6 +278,11 @@ def main():
           f"/step -> recommended wire '{probe['recommended_sparse']}' "
           f"(2x headroom; default 'sparse' provisions "
           f"{get_wire('sparse').max_rate:g})", flush=True)
+    print(f"[probe] same peak -> recommended sweep backend "
+          f"'{probe['recommended_gate']}' (gate worklist "
+          f"{probe['gate_capacity_blocks']}/{probe['gate_blocks_total']} "
+          f"post blocks on the probe geometry; saturation falls back to "
+          f"the dense pass and counts in gate_overflow)", flush=True)
     results.append(dict(name="firing_probe", **probe))
     os.makedirs(os.path.dirname(args.out) or ".", exist_ok=True)
     with open(args.out, "w") as f:

@@ -474,6 +474,104 @@ def bench_mapping_comparison(out, *, quick=False):
                 dict(remote_mirrors=remote, comm_bytes_step=comm))
 
 
+_BUILD_SCALING_CODE = """
+import dataclasses, json, resource, sys, time
+from repro.core import builder, models
+
+def peak_rss_mb():
+    try:
+        with open("/proc/self/status") as f:
+            for line in f:
+                if line.startswith("VmHWM:"):
+                    return int(line.split()[1]) / 1024
+    except OSError:
+        pass
+    return resource.getrusage(resource.RUSAGE_SELF).ru_maxrss / 1024
+
+mode, scale = sys.argv[1], float(sys.argv[2])
+spec, _ = models.hpc_benchmark(scale=scale, stdp=True)
+spec = dataclasses.replace(spec, connectivity="procedural")
+dec = builder.decompose(spec, 1)
+# a forked child momentarily shares the parent's address space, so the
+# kernel's RSS high-water mark starts at the HARNESS's peak, not ours -
+# reset it (clear_refs code 5) so VmHWM measures this build alone
+try:
+    with open("/proc/self/clear_refs", "w") as f:
+        f.write("5")
+except OSError:
+    pass
+t0 = time.perf_counter()
+shards = builder.build_shards(spec, dec, with_blocked=False,
+                              force_materialized=(mode == "materialized"))
+us = (time.perf_counter() - t0) * 1e6
+print(json.dumps(dict(us=us, peak_rss_mb=round(peak_rss_mb(), 1),
+                      edges=shards[0].n_edges, n_neurons=spec.n_neurons)))
+"""
+
+
+def bench_build_scaling(out, *, quick=False):
+    """Tentpole axis (DESIGN.md §14): wall-clock + peak RSS of building the
+    SAME fixed-indegree network through the materialize-then-route
+    pipeline vs the procedural O(owned rows) shard-local build.  Each
+    (mode, scale) runs in a fresh subprocess so ``ru_maxrss`` is that
+    build's own peak, not the harness's; edge counts are identical across
+    modes by construction (analytic fixed indegree), so ``edges`` is an
+    exact-diffable field while the RSS/time numbers drift per machine."""
+    scales = (0.1, 0.3) if quick else (0.1, 0.3, 0.6)
+    src = os.path.abspath(os.path.join(os.path.dirname(__file__), "..",
+                                       "src"))
+    env = dict(os.environ, PYTHONPATH=os.pathsep.join(
+        p for p in (src, os.environ.get("PYTHONPATH")) if p))
+    import subprocess
+    for scale in scales:
+        for mode in ("materialized", "procedural"):
+            r = subprocess.run(
+                [sys.executable, "-c", _BUILD_SCALING_CODE, mode,
+                 str(scale)], env=env, capture_output=True, text=True,
+                timeout=600)
+            if r.returncode != 0:
+                raise RuntimeError(f"build-scaling subprocess failed "
+                                   f"({mode}, {scale}): {r.stderr[-2000:]}")
+            rec = json.loads(r.stdout.strip().splitlines()[-1])
+            out(f"snn_build/{mode}/scale{scale}", rec["us"],
+                dict(edges=rec["edges"], n_neurons=rec["n_neurons"],
+                     peak_rss_mb=rec["peak_rss_mb"], scale=scale))
+
+
+def bench_shape_tune(out, *, quick=False):
+    """Measured (PB, EB) timings for the autotuner (DESIGN.md §14): time
+    the blocked sweep at each feasible candidate shape on the profile
+    network, keyed by the shard's degree-distribution signature.  The
+    records feed ``autotune.load_measured_timings`` /
+    ``block_shapes="measured:<BENCH json>"`` - committed benchmarks become
+    the tie-breaker for future builds with the same degree profile."""
+    from repro.core import autotune, layout as layout_mod
+
+    scale = 0.02 if quick else 0.1
+    reps = 5 if quick else 30
+    spec, _, tag = _scenario_net(scale)
+    dec = builder.decompose(spec, 1)
+    base = builder.build_shards(spec, dec, with_blocked=False)[0]
+    sig = autotune.degree_signature(autotune.degrees_from_graphs([base]))
+    rng = np.random.default_rng(0)
+    ring = (rng.uniform(size=(spec.max_delay, base.n_mirror)) < 0.02) \
+        .astype(np.float32)
+    for pb in autotune.DEFAULT_PB_CANDIDATES:
+        if pb > 4 * base.n_local:
+            continue   # degenerate: whole shard in a fraction of a block
+        eb = layout_mod.blocked_eb(base, pb=pb)
+        g = builder.build_shards(spec, dec, block_shapes=(pb, eb))[0] \
+            .device_arrays()
+        backend = backends_mod.get_backend("pallas")
+        lay = backend.prepare(g)
+        w = backend.to_native_weights(lay, g.weight_init)
+        sweep = jax.jit(lambda w, r, t: backend.sweep(lay, w, r, t))
+        us = _time(sweep, (w, jnp.asarray(ring), jnp.asarray(5, jnp.int32)),
+                   reps)
+        out(f"shape_tune/{sig}/pb{pb}xeb{eb}", us,
+            dict(pb=pb, eb=eb, edges=g.n_edges, scenario=tag, scale=scale))
+
+
 def main(out, backend: str | None = None, *, wires=DEFAULT_WIRES,
          comm_modes=DEFAULT_COMM_MODES, remote_wire=None,
          processes: int | None = None, devices_per_process: int = 2,
@@ -502,6 +600,7 @@ def main(out, backend: str | None = None, *, wires=DEFAULT_WIRES,
                         quick=quick, model=model, scenario=scenario,
                         backend=backend)
     bench_mapping_comparison(out, quick=quick)
+    bench_build_scaling(out, quick=quick)
 
 
 if __name__ == "__main__":

@@ -1,7 +1,7 @@
 """Perf-trajectory guard: diff a fresh BENCH run against the committed
 baseline (``benchmarks/run.py --json`` output).
 
-Three independent checks, ordered machine-independent first:
+Five independent checks, ordered machine-independent first:
 
 1. **Structure** - the fresh run must produce exactly the committed
    record set (a silently dropped backend/wire/phase leg fails CI even
@@ -12,7 +12,11 @@ Three independent checks, ordered machine-independent first:
    regime the gated ``sweep_plus_stdp`` must beat dense pallas by the
    required factor (the pallas:sparse acceptance bar, immune to runner
    speed).
-4. **Timing drift** - fresh/baseline timing ratios, normalized by the
+4. **Build RSS** - from the FRESH run alone: the procedural O(owned
+   rows) build must peak strictly below the materialize-then-route
+   pipeline at the largest scale both modes ran (the DESIGN.md §14
+   memory claim, immune to absolute RSS baselines).
+5. **Timing drift** - fresh/baseline timing ratios, normalized by the
    run's median ratio (cancels absolute machine speed), must stay inside
    a wide band; catches one phase regressing relative to the rest.
 
@@ -89,6 +93,31 @@ def check_gate_win(fresh, errors, *, factor):
               f"({pair['dense'] / max(pair['sparse'], 1e-9):.2f}x)")
 
 
+def check_build_rss(fresh, errors):
+    """Procedural < materialized build peak RSS, fresh run only."""
+    by = {}
+    for r in fresh.values():
+        if r["name"].startswith("snn_build/"):
+            mode = r["name"].split("/")[1]
+            by.setdefault(r["scale"], {})[mode] = r["peak_rss_mb"]
+    common = [s for s, m in by.items()
+              if {"materialized", "procedural"} <= set(m)]
+    if not common:
+        errors.append("no scale with both snn_build modes in fresh run: "
+                      f"{sorted(by)}")
+        return
+    s = max(common)
+    mat, proc = by[s]["materialized"], by[s]["procedural"]
+    if proc >= mat:
+        errors.append(
+            f"procedural build peak RSS {proc}MB is not below the "
+            f"materialized pipeline's {mat}MB at scale {s} (the O(owned "
+            f"rows) memory claim)")
+    else:
+        print(f"build RSS at scale {s}: procedural {proc}MB vs "
+              f"materialized {mat}MB ({mat / max(proc, 1e-9):.2f}x)")
+
+
 def check_drift(fresh, base, errors, *, band):
     shared = sorted(set(fresh) & set(base))
     ratios = {}
@@ -128,6 +157,7 @@ def main(argv=None) -> int:
     check_structure(fresh, base, errors)
     check_exact(fresh, base, errors)
     check_gate_win(fresh, errors, factor=args.gate_factor)
+    check_build_rss(fresh, errors)
     check_drift(fresh, base, errors, band=args.drift)
 
     if errors:

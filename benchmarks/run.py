@@ -56,6 +56,14 @@ def _bench_json(path: str, scale: str) -> None:
     # wire codecs with the intra/inter byte split (backend x wire)
     bench_snn.bench_wire_exchange(out, comm_modes=("area",), quick=quick)
     bench_snn.bench_mapping_comparison(out, quick=quick)
+    # build scaling: materialized vs procedural wall-clock + peak RSS
+    # (fresh subprocess per point); diff.py holds procedural's peak
+    # strictly below materialized at the largest common scale
+    bench_snn.bench_build_scaling(out, quick=quick)
+    # measured (PB, EB) sweep timings keyed by degree signature - the
+    # committed records ARE the autotuner's measured tie-breaker
+    # (block_shapes="measured:BENCH_full.json")
+    bench_snn.bench_shape_tune(out, quick=quick)
 
     payload = {
         "meta": {

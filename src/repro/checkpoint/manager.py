@@ -39,7 +39,41 @@ from typing import Any
 import jax
 import numpy as np
 
-__all__ = ["CheckpointManager"]
+__all__ = ["CheckpointManager", "network_metadata", "restore_spec"]
+
+
+# --------------------------------------------------------------------------
+# procedural network checkpoints: spec + seed + state (no topology files)
+# --------------------------------------------------------------------------
+
+def network_metadata(spec, *, seed: int, extra: dict | None = None) -> dict:
+    """Checkpoint metadata embedding the FULL network identity.
+
+    With procedural connectivity the spec + seed ARE the topology
+    (regenerated on restore, never stored), so a checkpoint of just the
+    engine state plus this metadata is a complete network snapshot - pass
+    the result as ``CheckpointManager.save(..., metadata=...)``.
+    """
+    from repro.core.builder import spec_to_dict
+    md = dict(extra or {})
+    md["network"] = {"spec": spec_to_dict(spec), "seed": int(seed)}
+    return md
+
+
+def restore_spec(metadata: dict):
+    """Inverse of :func:`network_metadata`: ``(NetworkSpec, seed)``.
+
+    Feed the spec back through ``build_shards`` / ``prepare_stacked`` /
+    ``prepare_stacked_local`` to regenerate consts O(owned rows) on the
+    restoring topology, then ``CheckpointManager.restore`` the state tree.
+    """
+    from repro.core.builder import spec_from_dict
+    net = metadata.get("network")
+    if net is None:
+        raise KeyError(
+            "checkpoint metadata carries no 'network' entry - it was not "
+            "written via network_metadata()")
+    return spec_from_dict(net["spec"]), int(net["seed"])
 
 
 def _tree_paths(tree):
@@ -130,6 +164,21 @@ class CheckpointManager:
             return None
         with open(p) as f:
             return int(f.read().strip())
+
+    def load_metadata(self, step: int | None = None) -> dict:
+        """Read a checkpoint's metadata WITHOUT loading any arrays.
+
+        A procedural-network restart needs the spec (``restore_spec``)
+        before it can rebuild consts and allocate the target state tree,
+        so metadata must be readable first.
+        """
+        self.wait()
+        step = step if step is not None else self.latest_step()
+        if step is None:
+            raise FileNotFoundError(f"no checkpoint in {self.dir}")
+        d = os.path.join(self.dir, f"step_{step:09d}")
+        with open(os.path.join(d, "manifest.json")) as f:
+            return json.load(f)["metadata"]
 
     def restore(self, target_tree: Any, step: int | None = None,
                 *, shardings: Any = None) -> tuple[Any, dict]:

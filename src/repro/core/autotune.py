@@ -41,7 +41,10 @@ __all__ = ["BlockShapes", "sweep_vmem_bytes", "autotune_block_shapes",
            "resolve_block_shapes", "autotune_report", "DEFAULT_PB_CANDIDATES",
            "DEFAULT_VMEM_BUDGET", "DEFAULT_GATE_RATE",
            "DEFAULT_GATE_MIN_CAPACITY", "gate_capacity",
-           "gated_sweep_vmem_bytes", "recommend_gate_rate"]
+           "gated_sweep_vmem_bytes", "recommend_gate_rate",
+           "eb_from_degrees", "degrees_from_graphs", "degree_signature",
+           "load_measured_timings", "autotune_block_shapes_from_degrees",
+           "resolve_block_shapes_from_degrees"]
 
 #: lane-aligned post-block candidates (the one-hot matmul wants PB >= 128)
 DEFAULT_PB_CANDIDATES = (128, 256, 512, 1024)
@@ -150,45 +153,222 @@ def _candidates(graphs, pb_candidates, eb_multiple, vmem_budget):
     return out
 
 
+def eb_from_degrees(row_degree, n_local: int, *, pb: int = DEFAULT_PB,
+                    eb_multiple: int = DEFAULT_EB_MULTIPLE) -> int:
+    """Padded per-block edge count from per-row indegrees alone.
+
+    The counts-only twin of :func:`repro.core.layout.blocked_eb` for builds
+    that never materialize the shard (the procedural dims pre-pass):
+    a block's edge count is just the sum of its rows' indegrees.
+    """
+    rd = np.asarray(row_degree, dtype=np.int64)
+    nb = max(-(-int(n_local) // pb), 1)
+    full = np.zeros(nb * pb, np.int64)
+    full[:rd.size] = rd
+    counts = full.reshape(nb, pb).sum(axis=1)
+    eb = int(max(counts.max() if counts.size else 1, 1))
+    return ((eb + eb_multiple - 1) // eb_multiple) * eb_multiple
+
+
+def degrees_from_graphs(graphs) -> list[np.ndarray]:
+    """Per-shard per-row real-edge counts - the degree distribution every
+    signature/tuner entry point keys on."""
+    gs = list(graphs) if isinstance(graphs, (list, tuple)) else [graphs]
+    out = []
+    for g in gs:
+        post = np.asarray(g.post_idx)
+        d = np.asarray(g.delay)
+        deg = np.bincount(post[d > 0], minlength=int(g.n_local))
+        gid = getattr(g, "global_id", None)
+        if gid is not None:
+            # drop padding rows (global_id -1) so the signature matches
+            # the procedural build's unpadded per-row degree arrays
+            deg = deg[np.asarray(gid) >= 0]
+        out.append(deg)
+    return out
+
+
+def degree_signature(degrees, *, n_quantiles: int = 8) -> str:
+    """Short stable fingerprint of a (multi-shard) degree distribution.
+
+    Measured timings are only transferable between networks whose blocked
+    layouts look alike; quantized integer degree quantiles (plus shard
+    count and totals) capture exactly the geometry the (PB, EB) cost model
+    sees, while staying invariant to neuron identity and machine.
+    """
+    import hashlib
+    ds = [np.asarray(d, dtype=np.int64) for d in degrees]
+    alld = (np.concatenate(ds) if ds and sum(d.size for d in ds)
+            else np.zeros(1, np.int64))
+    qs = np.percentile(alld, np.linspace(0, 100, n_quantiles + 1),
+                       method="nearest").astype(np.int64)
+    raw = (f"s{len(ds)};n{alld.size};e{int(alld.sum())};"
+           + ",".join(str(int(q)) for q in qs))
+    return hashlib.sha256(raw.encode()).hexdigest()[:12]
+
+
+def load_measured_timings(path: str) -> dict:
+    """Measured sweep timings from a BENCH_*.json perf-trajectory file.
+
+    Reads ``shape_tune/<signature>/pb{PB}xeb{EB}`` records (emitted by
+    ``benchmarks.bench_snn.bench_shape_tune``) into a
+    ``{(signature, pb, eb): us_per_call}`` map - the tuner's measured
+    tie-break table.  Missing files / malformed records yield an empty map
+    (the tuner then falls back to the padded-slots VMEM model).
+    """
+    import json
+    import os
+    out: dict = {}
+    if not os.path.exists(path):
+        return out
+    try:
+        with open(path) as f:
+            payload = json.load(f)
+        recs = payload["records"] if isinstance(payload, dict) else payload
+    except (json.JSONDecodeError, KeyError, TypeError):
+        return out
+    for r in recs:
+        name = r.get("name", "")
+        if not name.startswith("shape_tune/"):
+            continue
+        try:
+            _, sig, shape = name.split("/")
+            pb_s, eb_s = shape.split("x")
+            out[(sig, int(pb_s[2:]), int(eb_s[2:]))] = float(
+                r["us_per_call"])
+        except (ValueError, KeyError):
+            continue
+    return out
+
+
+def _select(cands, *, measured=None, signature=None) -> BlockShapes:
+    """Shared candidate selection: measured timings (when present for this
+    signature) beat the padded-slots model; the VMEM model always gates
+    feasibility; infeasible-everywhere falls back to smallest footprint."""
+    feasible = [c for c in cands if c.feasible]
+    if not feasible:
+        return min(cands, key=lambda c: c.vmem_bytes)
+    if measured and signature is not None:
+        timed = [c for c in feasible
+                 if (signature, c.pb, c.eb) in measured]
+        if timed:
+            return min(timed, key=lambda c: (
+                measured[(signature, c.pb, c.eb)], -c.pb))
+    return min(feasible, key=lambda c: (c.padded_slots, -c.pb))
+
+
 def autotune_block_shapes(graphs, *,
                           pb_candidates: Sequence[int] = DEFAULT_PB_CANDIDATES,
                           eb_multiple: int = DEFAULT_EB_MULTIPLE,
-                          vmem_budget: int = DEFAULT_VMEM_BUDGET
-                          ) -> BlockShapes:
+                          vmem_budget: int = DEFAULT_VMEM_BUDGET,
+                          measured=None) -> BlockShapes:
     """Pick (PB, EB) for one ShardGraph or a uniform set of them.
 
     Minimizes total padded edge slots over VMEM-feasible candidates,
     breaking ties toward larger PB; falls back to the smallest-footprint
     candidate if nothing fits the budget (the kernel still runs - the
     compiler spills - but the tuner flags it via ``feasible=False``).
+
+    ``measured`` (a ``{(signature, pb, eb): us}`` map or a BENCH_*.json
+    path) replaces the padded-slots model with real sweep timings whenever
+    the shards' degree signature has measured candidates - the VMEM budget
+    still gates feasibility either way.
     """
     gs = list(graphs) if isinstance(graphs, (list, tuple)) else [graphs]
     if not gs:
         raise ValueError("autotune_block_shapes needs at least one shard")
     cands = _candidates(gs, pb_candidates, eb_multiple, vmem_budget)
-    feasible = [c for c in cands if c.feasible]
-    if feasible:
-        return min(feasible, key=lambda c: (c.padded_slots, -c.pb))
-    return min(cands, key=lambda c: c.vmem_bytes)
+    sig = None
+    if measured is not None:
+        if isinstance(measured, str):
+            measured = load_measured_timings(measured)
+        sig = degree_signature(degrees_from_graphs(gs))
+    return _select(cands, measured=measured, signature=sig)
+
+
+def autotune_block_shapes_from_degrees(
+        degrees, *, n_local: int, n_mirror: int, max_delay: int,
+        pb_candidates: Sequence[int] = DEFAULT_PB_CANDIDATES,
+        eb_multiple: int = DEFAULT_EB_MULTIPLE,
+        vmem_budget: int = DEFAULT_VMEM_BUDGET,
+        measured=None) -> BlockShapes:
+    """:func:`autotune_block_shapes` from per-shard row-degree arrays alone
+    (uniform ``n_local`` / ``n_mirror`` pads) - the procedural build's
+    entry point: same candidates, same selection, zero shard graphs."""
+    ds = list(degrees)
+    if not ds:
+        raise ValueError("autotune_block_shapes_from_degrees needs at "
+                         "least one shard's degrees")
+    cands = []
+    for pb in pb_candidates:
+        eb = max(eb_from_degrees(rd, n_local, pb=pb,
+                                 eb_multiple=eb_multiple) for rd in ds)
+        nb = max(-(-int(n_local) // pb), 1)
+        vmem = sweep_vmem_bytes(pb, eb, max_delay=max_delay,
+                                n_mirror=n_mirror)
+        cands.append(BlockShapes(pb=pb, eb=eb, nb=nb,
+                                 padded_slots=len(ds) * nb * eb,
+                                 vmem_bytes=vmem,
+                                 feasible=vmem <= vmem_budget))
+    sig = None
+    if measured is not None:
+        if isinstance(measured, str):
+            measured = load_measured_timings(measured)
+        sig = degree_signature(ds)
+    return _select(cands, measured=measured, signature=sig)
+
+
+def _parse_shapes_spec(spec):
+    """Common passthrough/explicit cases of a block_shapes spec; returns
+    (handled, value)."""
+    if spec is None:
+        return True, None
+    if isinstance(spec, BlockShapes):
+        return True, spec
+    if isinstance(spec, tuple) and len(spec) == 2:
+        pb, eb = int(spec[0]), int(spec[1])
+        return True, BlockShapes(pb=pb, eb=eb, nb=0, padded_slots=0,
+                                 vmem_bytes=0, feasible=True)
+    return False, None
 
 
 def resolve_block_shapes(graphs, spec) -> BlockShapes | None:
     """Normalize a user/backend ``block_shapes`` spec.
 
     None -> None (keep the builder's layout / fixed defaults);
-    "auto" -> :func:`autotune_block_shapes`; a BlockShapes (or (pb, eb)
-    tuple) passes through pinned.
+    "auto" -> :func:`autotune_block_shapes`;
+    "measured:<path>" -> autotune with the BENCH file's measured timings
+    as the tie-break (VMEM-model fallback when the signature has no
+    measured candidates); a BlockShapes (or (pb, eb) tuple) passes
+    through pinned.
     """
-    if spec is None:
-        return None
+    handled, val = _parse_shapes_spec(spec)
+    if handled:
+        return val
     if spec == "auto":
         return autotune_block_shapes(graphs)
-    if isinstance(spec, BlockShapes):
-        return spec
-    if isinstance(spec, tuple) and len(spec) == 2:
-        pb, eb = int(spec[0]), int(spec[1])
-        return BlockShapes(pb=pb, eb=eb, nb=0, padded_slots=0,
-                           vmem_bytes=0, feasible=True)
+    if isinstance(spec, str) and spec.startswith("measured:"):
+        return autotune_block_shapes(graphs,
+                                     measured=spec.split(":", 1)[1])
+    raise ValueError(f"unknown block_shapes spec {spec!r}")
+
+
+def resolve_block_shapes_from_degrees(degrees, spec, *, n_local: int,
+                                      n_mirror: int,
+                                      max_delay: int) -> BlockShapes | None:
+    """:func:`resolve_block_shapes` for builds that only hold per-shard
+    degree arrays (the procedural dims pre-pass)."""
+    handled, val = _parse_shapes_spec(spec)
+    if handled:
+        return val
+    if spec == "auto":
+        return autotune_block_shapes_from_degrees(
+            degrees, n_local=n_local, n_mirror=n_mirror,
+            max_delay=max_delay)
+    if isinstance(spec, str) and spec.startswith("measured:"):
+        return autotune_block_shapes_from_degrees(
+            degrees, n_local=n_local, n_mirror=n_mirror,
+            max_delay=max_delay, measured=spec.split(":", 1)[1])
     raise ValueError(f"unknown block_shapes spec {spec!r}")
 
 

@@ -397,18 +397,20 @@ class SweepBackend:
     def neuron_update(self, layout: EdgeLayout, neurons, table, input_ex,
                       input_in, *,
                       synapse_model: str = snn.SynapseModel.CURRENT_EXP,
-                      model=None, key=None, t=None):
+                      model=None, key=None, t=None, gid=None):
         """Fused propagate/threshold/reset/refractory for one dt,
         dispatched through the NeuronModel registry (DESIGN.md §12).
 
         ``model`` is a registry name or NeuronModel instance (None =
         "lif", the historical default - bit-identical to the pre-registry
-        path); ``key``/``t`` feed stochastic models (poisson emitters)
-        and are ignored by deterministic dynamics.
+        path); ``key``/``t``/``gid`` feed stochastic models (poisson
+        emitters; ``gid`` keys per-neuron draws by GLOBAL id so they are
+        decomposition-invariant) and are ignored by deterministic
+        dynamics.
         """
         m = neuron_models_mod.get_model("lif" if model is None else model)
         return m.step(neurons, table, input_ex, input_in,
-                      synapse_model=synapse_model, key=key, t=t)
+                      synapse_model=synapse_model, key=key, t=t, gid=gid)
 
     # -- plasticity -------------------------------------------------------
     def stdp_update(self, layout: EdgeLayout, weights, arrived, post_spike,
@@ -613,17 +615,17 @@ class PallasBackend(SweepBackend):
 
     def neuron_update(self, layout, neurons, table, input_ex, input_in, *,
                       synapse_model: str = snn.SynapseModel.CURRENT_EXP,
-                      model=None, key=None, t=None):
+                      model=None, key=None, t=None, gid=None):
         # kernel path when the model ships a Pallas twin (lif/izhikevich/
         # adex); models without one (poisson) run their jnp step - it is
         # a single elementwise draw, the same on every backend
         m = neuron_models_mod.get_model("lif" if model is None else model)
         if m.kernel_step is None:
             return m.step(neurons, table, input_ex, input_in,
-                          synapse_model=synapse_model, key=key, t=t)
+                          synapse_model=synapse_model, key=key, t=t, gid=gid)
         return m.kernel_step(neurons, table, input_ex, input_in,
                              synapse_model=synapse_model, nb=self.lif_nb,
-                             interpret=self._interp(), key=key, t=t)
+                             interpret=self._interp(), key=key, t=t, gid=gid)
 
     def stdp_update(self, layout, weights, arrived, post_spike, traces,
                     params: stdp_mod.STDPParams):

@@ -65,14 +65,15 @@ from repro.core import wire as wire_mod
 from repro.core.builder import NetworkSpec, build_shards
 from repro.core.decomposition import (Decomposition, apportion_devices,
                                       multisection_divide)
-from repro.core.engine import EngineConfig, ShardGraph
-from repro.core.layout import BlockedGraph
+from repro.core.engine import DRIVE_SALT, EngineConfig, ShardGraph
+from repro.core.layout import BlockedGraph, DEFAULT_PB
 from repro.utils.jax_compat import shard_map
 
 __all__ = ["mesh_decompose", "StackedNetwork", "prepare_stacked",
            "DistributedConfig", "make_distributed_step", "init_stacked_state",
            "wire_bytes_per_step", "wire_bytes_for_dims", "wire_bytes_split",
-           "stacked_consts", "check_net_backend"]
+           "stacked_consts", "check_net_backend", "procedural_stack_plan",
+           "resolve_stack_pads", "procedural_shard_graphs"]
 
 
 # --------------------------------------------------------------------------
@@ -199,6 +200,11 @@ class StackedNetwork:
     # lets make_distributed_step warn ONLY when a shape-tuning backend is
     # paired with an untuned net
     block_shapes_spec: Any = None
+    # multi-process builds hold only their own shards: every (S, ...) array
+    # here then has leading dim ``hi - lo`` and this records the owned
+    # ``(lo, hi)`` range of the global shard axis.  None = all shards
+    # present (the single-process case).  See multihost.prepare_stacked_local.
+    local_slice: tuple[int, int] | None = None
 
     # per-shard per-step spike traffic (DESIGN.md §2/§10).  The fp32-bitmap
     # figures are kept as the mapping-quality metric (they count exchanged
@@ -213,6 +219,248 @@ class StackedNetwork:
         return int(wire_bytes_per_step(self, "area", "f32"))
 
 
+def _alloc_stacked_graph(S: int, e_pad: int, n_local: int, n_mirror: int,
+                         blocked_meta) -> dict[str, np.ndarray]:
+    """Preallocate the (S, ...) stacked const arrays so shard graphs can be
+    filled (and freed) one at a time - the streaming half of the procedural
+    build's O(owned rows) peak-RSS contract."""
+    graph = dict(
+        pre_idx=np.zeros((S, e_pad), np.int32),
+        post_idx=np.zeros((S, e_pad), np.int32),
+        delay=np.zeros((S, e_pad), np.int32),
+        channel=np.zeros((S, e_pad), np.int32),
+        plastic=np.zeros((S, e_pad), bool),
+        weight_init=np.zeros((S, e_pad), np.float32),
+        group_id=np.zeros((S, n_local), np.int32),
+        ext_rate=np.zeros((S, n_local), np.float32),
+        ext_weight=np.zeros((S, n_local), np.float32),
+        global_id=np.full((S, n_local), -1, np.int32),
+        mirror_src_idx=np.zeros((S, n_mirror), np.int32),
+    )
+    if blocked_meta is not None:
+        nb, eb, _pb = blocked_meta
+        graph.update(
+            blk_pre_idx=np.zeros((S, nb, eb), np.int32),
+            blk_post_rel=np.zeros((S, nb, eb), np.int32),
+            blk_delay=np.zeros((S, nb, eb), np.int32),
+            blk_channel=np.zeros((S, nb, eb), np.int32),
+            blk_plastic=np.zeros((S, nb, eb), bool),
+            blk_edge_perm=np.zeros((S, nb, eb), np.int32),
+        )
+    return graph
+
+
+def _fill_stacked_row(graph: dict, i: int, g: ShardGraph,
+                      blocked_meta) -> None:
+    """Write one ShardGraph into row ``i`` of the stacked const arrays."""
+    for field in ("pre_idx", "post_idx", "delay", "channel", "plastic",
+                  "weight_init", "group_id", "ext_rate", "ext_weight",
+                  "global_id", "mirror_src_idx"):
+        graph[field][i] = np.asarray(getattr(g, field))
+    if blocked_meta is not None:
+        bg = g.blocked
+        if (bg.nb, bg.eb, bg.pb) != blocked_meta:
+            raise AssertionError(
+                f"shard {i} blocked shape {(bg.nb, bg.eb, bg.pb)} != agreed "
+                f"{blocked_meta}")
+        graph["blk_pre_idx"][i] = np.asarray(bg.pre_idx)
+        graph["blk_post_rel"][i] = np.asarray(bg.post_rel)
+        graph["blk_delay"][i] = np.asarray(bg.delay)
+        graph["blk_channel"][i] = np.asarray(bg.channel)
+        graph["blk_plastic"][i] = np.asarray(bg.plastic)
+        graph["blk_edge_perm"][i] = np.asarray(bg.edge_perm)
+
+
+def _boundary_slots_from_lists(boundary: list[np.ndarray], n_local: int,
+                               pad_to_multiple: int):
+    """Pad per-shard boundary index lists to one (S, b_pad) table.
+
+    Pad slots carry the out-of-range sentinel n_local: the exchange reads
+    them with a zero fill, so a pad slot never aliases a real neuron's
+    bit (it would inflate the sparse wire's spike count otherwise).
+    """
+    b_pad = max(max((b.size for b in boundary), default=1), 1)
+    b_pad = ((b_pad + pad_to_multiple - 1) // pad_to_multiple) * pad_to_multiple
+    slots = np.full((len(boundary), b_pad), n_local, dtype=np.int32)
+    for s, b in enumerate(boundary):
+        slots[s, :b.size] = b
+    return b_pad, slots
+
+
+def _mirror_meta_row(src: np.ndarray, idx: np.ndarray, s: int,
+                     row_of: np.ndarray, boundary: list[np.ndarray],
+                     b_pad: int, n_local: int, row_width: int):
+    """Exchange gather indices for ONE shard's mirror table.
+
+    Returns ``(intra, row_gather, remote_gather)``:
+
+    - row gather: (model_idx_within_row, local_idx) -> flat;
+    - remote gather: (src_flat, slot) -> flat; slot via searchsorted into
+      the source's sorted boundary list (only meaningful where ~intra and
+      the source actually publishes that neuron).
+    """
+    intra = row_of[src] == row_of[s]
+    row_gather = ((src % row_width) * n_local + idx).astype(np.int32)
+    slot = np.zeros(src.size, dtype=np.int64)
+    for src_shard in np.unique(src[~intra]):
+        m = (~intra) & (src == src_shard)
+        b = boundary[int(src_shard)]
+        pos = np.searchsorted(b, idx[m])
+        pos = np.clip(pos, 0, max(b.size - 1, 0))
+        slot[m] = pos
+    remote_gather = (src * b_pad + slot).astype(np.int32)
+    return intra, row_gather, remote_gather
+
+
+def _stack_and_index(spec: NetworkSpec, shard_iter, *, S: int,
+                     row_width: int, e_pad: int, n_local: int,
+                     n_mirror: int, blocked_meta,
+                     pad_to_multiple: int,
+                     block_shapes_spec) -> StackedNetwork:
+    """Consume shard graphs one at a time into the stacked const arrays and
+    derive the exchange metadata.  Peak host memory = the stacked arrays
+    plus ONE shard graph (the materialized path holds all shards anyway;
+    the procedural path streams them)."""
+    row_of = np.arange(S) // row_width
+    graph = _alloc_stacked_graph(S, e_pad, n_local, n_mirror, blocked_meta)
+    src_all = np.zeros((S, n_mirror), np.int32)
+    idx_all = np.zeros((S, n_mirror), np.int32)
+
+    # boundary sets: local indices consumed by shards in OTHER rows
+    consumers: list[list[np.ndarray]] = [[] for _ in range(S)]
+    n_seen = 0
+    for s, g in enumerate(shard_iter):
+        _fill_stacked_row(graph, s, g, blocked_meta)
+        src = np.asarray(g.mirror_src_shard)
+        idx = np.asarray(g.mirror_src_idx)
+        src_all[s] = src
+        idx_all[s] = idx
+        used = np.zeros(n_mirror, dtype=bool)
+        used[np.asarray(g.pre_idx)[np.asarray(g.delay) > 0]] = True
+        for src_shard in np.unique(src[used]):
+            if row_of[src_shard] != row_of[s]:
+                sel = used & (src == src_shard)
+                consumers[int(src_shard)].append(np.unique(idx[sel]))
+        n_seen += 1
+    assert n_seen == S
+
+    boundary = [np.unique(np.concatenate(c)) if c else np.zeros(0, np.int64)
+                for c in consumers]
+    b_pad, boundary_slots = _boundary_slots_from_lists(
+        boundary, n_local, pad_to_multiple)
+
+    mirror_is_intra = np.zeros((S, n_mirror), dtype=bool)
+    mirror_row_gather = np.zeros((S, n_mirror), dtype=np.int32)
+    mirror_remote_gather = np.zeros((S, n_mirror), dtype=np.int32)
+    for s in range(S):
+        (mirror_is_intra[s], mirror_row_gather[s],
+         mirror_remote_gather[s]) = _mirror_meta_row(
+            src_all[s], idx_all[s], s, row_of, boundary, b_pad,
+            n_local, row_width)
+
+    return StackedNetwork(
+        n_shards=S, row_width=row_width, n_local=n_local, n_mirror=n_mirror,
+        n_edges=e_pad, b_pad=b_pad, max_delay=spec.max_delay, graph=graph,
+        blocked_meta=blocked_meta, block_shapes_spec=block_shapes_spec,
+        boundary_slots=boundary_slots, mirror_is_intra=mirror_is_intra,
+        mirror_row_gather=mirror_row_gather,
+        mirror_remote_gather=mirror_remote_gather,
+        mirror_src_flat=src_all)
+
+
+def procedural_stack_plan(spec: NetworkSpec, dec: Decomposition, *,
+                          devices=None, pad_to_multiple: int = 8,
+                          with_blocked: bool = True,
+                          block_shapes=None,
+                          row_chunk: int | None = None) -> dict:
+    """Dims pre-pass of the procedural stacked build (pass A only, per
+    shard): everything every process must AGREE on before filling arrays -
+    the uniform pads and the shared blocked shape - derived without ever
+    holding more than one shard's counts.
+
+    ``devices`` restricts the pass to a subset of shards (the multihost
+    build runs it per process and allgathers the per-shard dims instead).
+    Returns ``dict(e, n_local, n_mirror, row_degree)`` lists per shard plus
+    the resolved pads under key ``"pads"`` when all shards were scanned.
+    """
+    from repro.core import builder as builder_mod
+    devs = range(dec.n_devices) if devices is None else devices
+    kw = {} if row_chunk is None else dict(row_chunk=row_chunk)
+    dims = [builder_mod.procedural_shard_raw(spec, dec, int(s),
+                                             dims_only=True, **kw)
+            for s in devs]
+    plan = dict(
+        e=[d["e"] for d in dims],
+        n_local=[int(d["owned"].size) for d in dims],
+        n_mirror=[int(d["mirror_gids"].size) for d in dims],
+        row_degree=[d["row_degree"] for d in dims],
+    )
+    if devices is None:
+        plan["pads"] = resolve_stack_pads(
+            plan, spec, pad_to_multiple=pad_to_multiple,
+            with_blocked=with_blocked, block_shapes=block_shapes)
+    return plan
+
+
+def resolve_stack_pads(plan: dict, spec: NetworkSpec, *,
+                       pad_to_multiple: int = 8,
+                       with_blocked: bool = True,
+                       block_shapes=None) -> dict:
+    """Turn (possibly allgathered) per-shard dims into the agreed uniform
+    pads and blocked meta - pure arithmetic, no RNG, so every process that
+    holds the same dims derives the same answer."""
+    from repro.core import autotune as autotune_mod
+    _pad = lambda n: max(((int(n) + pad_to_multiple - 1) // pad_to_multiple)
+                         * pad_to_multiple, pad_to_multiple)
+    e_pad = _pad(max(plan["e"]))
+    n_local_pad = _pad(max(plan["n_local"]))
+    n_mirror_pad = _pad(max(plan["n_mirror"]))
+    blocked_meta = shapes = None
+    if with_blocked:
+        shapes = autotune_mod.resolve_block_shapes_from_degrees(
+            plan["row_degree"], block_shapes, n_local=n_local_pad,
+            n_mirror=n_mirror_pad, max_delay=spec.max_delay)
+        pb = DEFAULT_PB if shapes is None else shapes.pb
+        need = max(autotune_mod.eb_from_degrees(rd, n_local_pad, pb=pb)
+                   for rd in plan["row_degree"])
+        if shapes is None:
+            eb = need
+        else:
+            eb = shapes.eb
+            if eb < need:
+                raise ValueError(
+                    f"block_shapes eb={eb} is below the widest shard's "
+                    f"per-block edge count {need} at pb={pb} - raise eb "
+                    "(or use 'auto')")
+        blocked_meta = (max(-(-n_local_pad // pb), 1), eb, pb)
+    return dict(e_pad=e_pad, n_local_pad=n_local_pad,
+                n_mirror_pad=n_mirror_pad, blocked_meta=blocked_meta,
+                shapes=shapes)
+
+
+def procedural_shard_graphs(spec: NetworkSpec, dec: Decomposition,
+                            devices, pads: dict, *,
+                            pad_to_multiple: int = 8,
+                            with_blocked: bool = True,
+                            row_chunk: int | None = None):
+    """Yield finalized ShardGraphs for ``devices`` one at a time, each built
+    O(owned rows) and padded to the agreed ``pads`` - the generator both
+    prepare_stacked (all shards) and the multihost per-process build (its
+    own shards) drain."""
+    from repro.core import builder as builder_mod
+    kw = {} if row_chunk is None else dict(row_chunk=row_chunk)
+    bm = pads["blocked_meta"]
+    pad_dims = (pads["e_pad"], pads["n_local_pad"], pads["n_mirror_pad"])
+    for s in devices:
+        raw = builder_mod.procedural_shard_raw(spec, dec, int(s), **kw)
+        [g] = builder_mod.finalize_shards(
+            spec, dec, [raw], pad_to_multiple=pad_to_multiple,
+            with_blocked=with_blocked, block_shapes=pads["shapes"],
+            streamed=True, pad_dims=pad_dims,
+            blocked_eb_min=None if bm is None else bm[1])
+        yield g
+
+
 def prepare_stacked(spec: NetworkSpec, dec: Decomposition,
                     n_rows: int, row_width: int, *,
                     pad_to_multiple: int = 8,
@@ -224,106 +472,45 @@ def prepare_stacked(spec: NetworkSpec, dec: Decomposition,
     arrays (saves build time + host memory) for runs that will never select
     the pallas backend.  ``block_shapes`` (None | "auto" | BlockShapes)
     picks the shared (PB, EB) pair - see ``builder.build_shards``.
+
+    For ``spec.connectivity == "procedural"`` the shards are built AND
+    stacked one at a time (DESIGN.md §14): a dims pre-pass agrees on the
+    uniform pads and blocked shape, then each shard is generated, written
+    into the preallocated stacked arrays, and freed - peak host memory is
+    the stacked consts plus one shard, never the global edge list.
     """
-    shards = build_shards(spec, dec, pad_to_multiple=pad_to_multiple,
-                          uniform_pad=True, with_blocked=with_blocked,
-                          block_shapes=block_shapes)
-    S = len(shards)
-    assert S == n_rows * row_width
-    n_local = shards[0].n_local
-    n_mirror = shards[0].n_mirror
-    n_edges = shards[0].n_edges
-    row_of = np.arange(S) // row_width
-
-    # boundary sets: local indices consumed by shards in OTHER rows
-    boundary: list[np.ndarray] = [np.zeros(0, np.int64) for _ in range(S)]
-    consumers: list[list[np.ndarray]] = [[] for _ in range(S)]
-    for s, g in enumerate(shards):
-        src = np.asarray(g.mirror_src_shard)
-        idx = np.asarray(g.mirror_src_idx)
-        used = np.zeros(n_mirror, dtype=bool)
-        used[np.asarray(g.pre_idx)[np.asarray(g.delay) > 0]] = True
-        for src_shard in np.unique(src[used]):
-            if row_of[src_shard] != row_of[s]:
-                sel = used & (src == src_shard)
-                consumers[int(src_shard)].append(np.unique(idx[sel]))
-    for s in range(S):
-        if consumers[s]:
-            boundary[s] = np.unique(np.concatenate(consumers[s]))
-    b_pad = max(max((b.size for b in boundary), default=1), 1)
-    b_pad = ((b_pad + pad_to_multiple - 1) // pad_to_multiple) * pad_to_multiple
-
-    # pad slots carry the out-of-range sentinel n_local: the exchange reads
-    # them with a zero fill, so a pad slot never aliases a real neuron's
-    # bit (it would inflate the sparse wire's spike count otherwise)
-    boundary_slots = np.full((S, b_pad), n_local, dtype=np.int32)
-    for s in range(S):
-        boundary_slots[s, :boundary[s].size] = boundary[s]
-
-    mirror_is_intra = np.zeros((S, n_mirror), dtype=bool)
-    mirror_row_gather = np.zeros((S, n_mirror), dtype=np.int32)
-    mirror_remote_gather = np.zeros((S, n_mirror), dtype=np.int32)
-    mirror_src_flat = np.zeros((S, n_mirror), dtype=np.int32)
-    for s, g in enumerate(shards):
-        src = np.asarray(g.mirror_src_shard)
-        idx = np.asarray(g.mirror_src_idx)
-        mirror_src_flat[s] = src
-        intra = row_of[src] == row_of[s]
-        mirror_is_intra[s] = intra
-        # row gather: (model_idx_within_row, local_idx) -> flat
-        mirror_row_gather[s] = (src % row_width) * n_local + idx
-        # remote gather: (src_flat, slot) -> flat; slot via searchsorted into
-        # the source's sorted boundary list (only meaningful where ~intra and
-        # the source actually publishes that neuron)
-        slot = np.zeros(n_mirror, dtype=np.int64)
-        for src_shard in np.unique(src[~intra]):
-            m = (~intra) & (src == src_shard)
-            b = boundary[int(src_shard)]
-            pos = np.searchsorted(b, idx[m])
-            pos = np.clip(pos, 0, max(b.size - 1, 0))
-            slot[m] = pos
-        mirror_remote_gather[s] = src * b_pad + slot
-
-    stack = lambda f: np.stack([np.asarray(getattr(g, f)) for g in shards])
-    graph = dict(
-        pre_idx=stack("pre_idx").astype(np.int32),
-        post_idx=stack("post_idx").astype(np.int32),
-        delay=stack("delay").astype(np.int32),
-        channel=stack("channel").astype(np.int32),
-        plastic=stack("plastic"),
-        weight_init=stack("weight_init").astype(np.float32),
-        group_id=stack("group_id").astype(np.int32),
-        ext_rate=stack("ext_rate").astype(np.float32),
-        ext_weight=stack("ext_weight").astype(np.float32),
-        mirror_src_idx=stack("mirror_src_idx").astype(np.int32),
-    )
-
-    # stacked post-block ELL arrays (uniform shape thanks to build_shards'
-    # two-pass eb) so the pallas backend is reachable under shard_map
-    blocked_meta = None
-    if all(g.blocked is not None for g in shards):
-        bgs = [g.blocked for g in shards]
-        blocked_meta = (bgs[0].nb, bgs[0].eb, bgs[0].pb)
-        assert all((bg.nb, bg.eb, bg.pb) == blocked_meta for bg in bgs)
-        bstack = lambda f: np.stack([np.asarray(getattr(bg, f))
-                                     for bg in bgs])
-        graph.update(
-            blk_pre_idx=bstack("pre_idx"),
-            blk_post_rel=bstack("post_rel"),
-            blk_delay=bstack("delay"),
-            blk_channel=bstack("channel"),
-            blk_plastic=bstack("plastic"),
-            blk_edge_perm=bstack("edge_perm"),
-        )
-
-    return StackedNetwork(
-        n_shards=S, row_width=row_width, n_local=n_local, n_mirror=n_mirror,
-        n_edges=n_edges, b_pad=b_pad, max_delay=spec.max_delay, graph=graph,
-        blocked_meta=blocked_meta, block_shapes_spec=block_shapes,
-        boundary_slots=boundary_slots, mirror_is_intra=mirror_is_intra,
-        mirror_row_gather=mirror_row_gather,
-        mirror_remote_gather=mirror_remote_gather,
-        mirror_src_flat=mirror_src_flat)
+    S = n_rows * row_width
+    assert S == dec.n_devices
+    if spec.connectivity == "procedural":
+        plan = procedural_stack_plan(spec, dec,
+                                     pad_to_multiple=pad_to_multiple,
+                                     with_blocked=with_blocked,
+                                     block_shapes=block_shapes)
+        pads = plan["pads"]
+        shard_iter = procedural_shard_graphs(
+            spec, dec, range(S), pads, pad_to_multiple=pad_to_multiple,
+            with_blocked=with_blocked)
+        e_pad, n_local, n_mirror = (pads["e_pad"], pads["n_local_pad"],
+                                    pads["n_mirror_pad"])
+        blocked_meta = pads["blocked_meta"]
+    else:
+        shards = build_shards(spec, dec, pad_to_multiple=pad_to_multiple,
+                              uniform_pad=True, with_blocked=with_blocked,
+                              block_shapes=block_shapes)
+        assert len(shards) == S
+        e_pad = shards[0].n_edges
+        n_local = shards[0].n_local
+        n_mirror = shards[0].n_mirror
+        blocked_meta = None
+        if all(g.blocked is not None for g in shards):
+            bgs = [g.blocked for g in shards]
+            blocked_meta = (bgs[0].nb, bgs[0].eb, bgs[0].pb)
+            assert all((bg.nb, bg.eb, bg.pb) == blocked_meta for bg in bgs)
+        shard_iter = iter(shards)
+    return _stack_and_index(
+        spec, shard_iter, S=S, row_width=row_width, e_pad=e_pad,
+        n_local=n_local, n_mirror=n_mirror, blocked_meta=blocked_meta,
+        pad_to_multiple=pad_to_multiple, block_shapes_spec=block_shapes)
 
 
 # --------------------------------------------------------------------------
@@ -393,6 +580,12 @@ class DistState:
     #: fell back to the dense sweep (DESIGN.md §13) - the compute twin of
     #: ``wire_overflow``; always 0 on ungated backends
     gate_overflow: jax.Array = None
+    #: (S, 2) key data of the DECOMPOSITION-INVARIANT stochastic-drive
+    #: stream: the same ``fold_in(key(seed), DRIVE_SALT)`` on every shard,
+    #: differentiated per neuron by folding the GLOBAL id inside the model
+    #: (engine.DRIVE_SALT) - so 1-shard and N-shard poisson trajectories
+    #: match bit-for-bit.  None on deterministic models (legacy treedef).
+    drive_key: jax.Array | None = None
     #: model-specific per-neuron state (S, n_local) arrays beyond the
     #: common four - Izhikevich's {"u"}, AdEx's {"w_ad"}; {} for lif and
     #: poisson.  The key set is fixed per NeuronModel (DESIGN.md §12), so
@@ -412,7 +605,7 @@ jax.tree_util.register_dataclass(
     DistState,
     data_fields=["v_m", "syn_ex", "syn_in", "ref_count", "ring", "weights",
                  "k_pre", "k_post", "prev_bits", "t", "key",
-                 "wire_overflow", "gate_overflow", "aux"],
+                 "wire_overflow", "gate_overflow", "drive_key", "aux"],
     meta_fields=["weights_layout", "neuron_model"])
 
 
@@ -428,12 +621,27 @@ def init_stacked_state(net: StackedNetwork, groups, seed: int = 0,
     without it the state is flat and the step converts at trace time.
     ``neuron_model`` picks the dynamics (DESIGN.md §12): ``groups`` must
     be that model's parameter class; model-specific state lands in
-    ``DistState.aux``."""
+    ``DistState.aux``.
+
+    Multi-process nets (``net.local_slice``) hold only their own shards:
+    every state leaf then has that local leading dim, but the PRNG keys are
+    still the GLOBAL per-shard split sliced to the owned range - so the
+    trajectory is independent of how many processes build it."""
     S = net.n_shards
+    lo, hi = (0, S) if net.local_slice is None else net.local_slice
     model = neuron_models_mod.get_model(neuron_model)
     gid = np.asarray(net.graph["group_id"])
+    Sl = gid.shape[0]
+    assert Sl == hi - lo, (Sl, net.local_slice)
     nvars = model.init_vars(gid, list(groups))
-    keys = jax.random.split(jax.random.key(seed), S)
+    keys = jax.random.split(jax.random.key(seed), S)[lo:hi]
+    drive_key = None
+    if model.stochastic:
+        # shard-independent drive stream (per-neuron via GLOBAL-id fold_in
+        # inside the model) - the decomposition-invariance contract
+        dk = jax.random.key_data(
+            jax.random.fold_in(jax.random.key(seed), DRIVE_SALT))
+        drive_key = jnp.broadcast_to(dk, (Sl,) + dk.shape)
     weights = np.asarray(net.graph["weight_init"])
     weights_layout = "flat"
     if sweep is not None and backends_mod.get_backend(
@@ -442,7 +650,7 @@ def init_stacked_state(net: StackedNetwork, groups, seed: int = 0,
             raise ValueError(
                 f"sweep={sweep!r} stores blocked-resident weights; build "
                 "the StackedNetwork with prepare_stacked(with_blocked=True)")
-        perm = np.asarray(net.graph["blk_edge_perm"]).reshape(S, -1)
+        perm = np.asarray(net.graph["blk_edge_perm"]).reshape(Sl, -1)
         weights = np.take_along_axis(weights, perm, axis=1)
         nb, eb, pb = net.blocked_meta
         weights_layout = f"blocked:{pb}x{eb}"
@@ -451,15 +659,16 @@ def init_stacked_state(net: StackedNetwork, groups, seed: int = 0,
         syn_ex=jnp.asarray(nvars["syn_ex"], dtype),
         syn_in=jnp.asarray(nvars["syn_in"], dtype),
         ref_count=jnp.asarray(nvars["ref_count"], jnp.int32),
-        ring=jnp.zeros((S, net.max_delay, net.n_mirror), dtype),
+        ring=jnp.zeros((Sl, net.max_delay, net.n_mirror), dtype),
         weights=jnp.asarray(weights, weight_dtype or dtype),
-        k_pre=jnp.zeros((S, net.n_mirror), dtype),
-        k_post=jnp.zeros((S, net.n_local), dtype),
-        prev_bits=jnp.zeros((S, net.n_local), dtype),
-        t=jnp.zeros((S,), jnp.int32),
+        k_pre=jnp.zeros((Sl, net.n_mirror), dtype),
+        k_post=jnp.zeros((Sl, net.n_local), dtype),
+        prev_bits=jnp.zeros((Sl, net.n_local), dtype),
+        t=jnp.zeros((Sl,), jnp.int32),
         key=jax.random.key_data(keys),
-        wire_overflow=jnp.zeros((S,), jnp.int32),
-        gate_overflow=jnp.zeros((S,), jnp.int32),
+        wire_overflow=jnp.zeros((Sl,), jnp.int32),
+        gate_overflow=jnp.zeros((Sl,), jnp.int32),
+        drive_key=drive_key,
         aux={k: jnp.asarray(nvars[k], dtype) for k in model.extra_fields},
         weights_layout=weights_layout,
         neuron_model=model.name,
@@ -717,7 +926,7 @@ def _build_step(mesh: Mesh, groups, cfg: DistributedConfig, max_delay: int,
         g = dict(g)
         for k in ("pre_idx", "post_idx", "delay", "channel",
                   "mirror_src_idx", "boundary_slots", "mirror_row_gather",
-                  "mirror_remote_gather", "mirror_src_flat",
+                  "mirror_remote_gather", "mirror_src_flat", "global_id",
                   "blk_pre_idx", "blk_post_rel", "blk_delay",
                   "blk_channel", "blk_edge_perm"):
             if k in g and g[k].dtype != jnp.int32:
@@ -771,6 +980,11 @@ def _build_step(mesh: Mesh, groups, cfg: DistributedConfig, max_delay: int,
             # split ONLY for stochastic models (poisson emitters) -
             # deterministic dynamics keep the pre-registry key stream
             sub, mkey = jax.random.split(sub)
+            if state.drive_key is not None:
+                # decomposition-invariant drive: the shared stream keyed
+                # per neuron by GLOBAL id inside the model, not the
+                # per-shard split
+                mkey = jax.random.wrap_key_data(state.drive_key)
         if cfg.engine.external_drive:
             lam = g["ext_rate"] * (cfg.engine.dt * 1e-3)
             input_ex = input_ex + (g["ext_weight"]
@@ -791,7 +1005,7 @@ def _build_step(mesh: Mesh, groups, cfg: DistributedConfig, max_delay: int,
         neurons = backend.neuron_update(
             layout, neurons, table, input_ex, input_in,
             synapse_model=cfg.engine.synapse_model,
-            model=model, key=mkey, t=t)
+            model=model, key=mkey, t=t, gid=g.get("global_id"))
         bits = neurons.spike
 
         # ---- (4) plasticity ----------------------------------------------
@@ -824,6 +1038,7 @@ def _build_step(mesh: Mesh, groups, cfg: DistributedConfig, max_delay: int,
             wire_overflow=state.wire_overflow + overflow,
             gate_overflow=(gate_ovf if state.gate_overflow is None
                            else state.gate_overflow + gate_ovf),
+            drive_key=state.drive_key,
             aux=neurons.extra,
             weights_layout=state.weights_layout,
             neuron_model=state.neuron_model)

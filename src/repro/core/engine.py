@@ -96,6 +96,10 @@ class ShardGraph:
     # Per-neuron external Poisson drive (rate [Hz], weight [pA or nS]).
     ext_rate: Any = None    # (n_local,) float32
     ext_weight: Any = None  # (n_local,) float32
+    # GLOBAL neuron id per owned row (-1 on padding rows): the
+    # decomposition-invariant key stochastic models fold into their draws
+    # so 1-shard and N-shard trajectories match (DESIGN.md §14).
+    global_id: Any = None   # (n_local,) int32
     # Post-block ELL twin of the flat arrays (repro.core.layout.BlockedGraph),
     # emitted natively by the builder; consumed by the pallas backend.
     blocked: Any = None
@@ -122,6 +126,8 @@ class ShardGraph:
                       else as_j(self.ext_rate, jnp.float32)),
             ext_weight=(None if self.ext_weight is None
                         else as_j(self.ext_weight, jnp.float32)),
+            global_id=(None if self.global_id is None
+                       else as_j(self.global_id, jnp.int32)),
         )
 
 
@@ -154,6 +160,12 @@ class EngineState:
     #: backends; the compute twin of ``DistState.wire_overflow``.  None
     #: (legacy states) is normalized to zeros at the step boundary.
     gate_overflow: jax.Array | None = None
+    #: decomposition-invariant PRNG key for stochastic MODEL draws: derived
+    #: once from the seed (never split per step; per-neuron streams come
+    #: from folding in time and GLOBAL neuron id), so the same network
+    #: sharded differently draws the same spikes.  None on deterministic
+    #: models (zero extra leaves - legacy checkpoints stay compatible).
+    drive_key: jax.Array | None = None
     #: static marker: layout of ``weights`` - "flat" or a shape-qualified
     #: blocked tag like "blocked:256x2048" (backends.layout_tag).  Pytree
     #: metadata, so a blocked-resident state can never be silently misread
@@ -169,8 +181,11 @@ class EngineState:
 jax.tree_util.register_dataclass(
     EngineState,
     data_fields=["neurons", "ring", "weights", "traces", "t", "key",
-                 "gate_overflow"],
+                 "gate_overflow", "drive_key"],
     meta_fields=["weights_layout", "neuron_model"])
+
+# salt for deriving the shard-invariant drive key from the user seed/key
+DRIVE_SALT = 0x5EED
 
 
 def init_state(graph: ShardGraph, groups, key: jax.Array, *,
@@ -202,6 +217,11 @@ def init_state(graph: ShardGraph, groups, key: jax.Array, *,
         t=jnp.zeros((), jnp.int32),
         key=key,
         gate_overflow=jnp.zeros((), jnp.int32),
+        # stochastic models get the shard-invariant drive key (per-neuron
+        # streams fold in t and global id); deterministic models carry None
+        # so their state tree - and every existing LIF pin - is unchanged
+        drive_key=(jax.random.fold_in(key, DRIVE_SALT)
+                   if model.stochastic else None),
         weights_layout=weights_layout,
         neuron_model=model.name,
     )
@@ -297,15 +317,21 @@ def engine_step(state: EngineState, graph: ShardGraph, table: jax.Array,
     mkey = None
     if model.stochastic:
         # split ONLY for stochastic models - deterministic dynamics keep
-        # the pre-registry key stream (the LIF bit-exactness pin)
+        # the pre-registry key stream (the LIF bit-exactness pin).  When
+        # the state carries the shard-invariant drive key, model draws use
+        # THAT (per-neuron streams fold in t + global id); the split still
+        # happens so the ext-drive stream is unchanged either way.
         sub, mkey = jax.random.split(sub)
+        if state.drive_key is not None:
+            mkey = state.drive_key
     if cfg.external_drive and graph.ext_rate is not None:
         input_ex = input_ex + _poisson_drive(sub, graph, cfg.dt, dtype)
 
     # (3) neuron dynamics (model-dispatched, DESIGN.md §12)
     neurons = backend.neuron_update(layout, state.neurons, table, input_ex,
                                     input_in, synapse_model=cfg.synapse_model,
-                                    model=model, key=mkey, t=state.t)
+                                    model=model, key=mkey, t=state.t,
+                                    gid=graph.global_id)
     spike_bits = neurons.spike
 
     # (4) plasticity: weights first (traces exclude this step's spikes:
@@ -342,6 +368,7 @@ def engine_step(state: EngineState, graph: ShardGraph, table: jax.Array,
     new_state = EngineState(neurons=neurons, ring=ring, weights=weights,
                             traces=traces, t=state.t + 1, key=key,
                             gate_overflow=gate_prev + gate_ovf,
+                            drive_key=state.drive_key,
                             weights_layout=state.weights_layout,
                             neuron_model=state.neuron_model)
     return new_state, spike_bits

@@ -34,8 +34,8 @@ from typing import Any
 
 import numpy as np
 
-__all__ = ["BlockedGraph", "blocked_layout", "blocked_eb", "DEFAULT_PB",
-           "DEFAULT_EB_MULTIPLE"]
+__all__ = ["BlockedGraph", "blocked_layout", "blocked_layout_streamed",
+           "blocked_eb", "DEFAULT_PB", "DEFAULT_EB_MULTIPLE"]
 
 DEFAULT_PB = 256          # post neurons per block (grid-cell ownership range)
 DEFAULT_EB_MULTIPLE = 128  # pad per-block edge count to a lane multiple
@@ -126,3 +126,80 @@ def blocked_layout(g, *, pb: int = DEFAULT_PB,
         plastic=scatter(pl_[order], bool, fill=False),
         edge_perm=scatter(order, np.int32),
     )
+
+
+def blocked_layout_streamed(g, *, pb: int = DEFAULT_PB,
+                            eb_multiple: int = DEFAULT_EB_MULTIPLE,
+                            eb_min: int = 0,
+                            chunk_blocks: int = 512) -> BlockedGraph:
+    """Row-streamed blocked fill for shards already in canonical flat order.
+
+    :func:`blocked_layout` lexsorts the whole edge set, which allocates
+    several O(E) int64 temporaries - fine for the materialized oracle, but
+    it defeats the procedural build's purpose of keeping peak RSS at
+    O(owned rows).  A builder-produced ShardGraph is already sorted by
+    (delay, post) with ``bucket_ptr`` delimiting the delay buckets, so
+    inside each bucket every post block's edges form one CONTIGUOUS run
+    locatable by binary search.  A block's (block, delay, post) order is
+    then just the concatenation of its per-delay runs, and the fill can
+    stream ``chunk_blocks`` blocks at a time into the preallocated
+    (NB, EB) arrays.  Output is bit-identical to :func:`blocked_layout`
+    (pinned by tests); only the peak memory differs.
+    """
+    post = np.asarray(g.post_idx)
+    d = np.asarray(g.delay)
+    bp = np.asarray(g.bucket_ptr)
+    nb = max(-(-int(g.n_local) // pb), 1)
+    n_delay = int(g.max_delay)
+
+    # per-(delay, block) segment bounds inside the flat arrays; D*(NB+1)
+    # int64 - O(owned rows), not O(edges)
+    block_edges = np.arange(nb + 1, dtype=np.int64) * pb
+    bounds = np.empty((n_delay, nb + 1), dtype=np.int64)
+    for di in range(n_delay):
+        lo, hi = int(bp[di + 1]), int(bp[di + 2])
+        bounds[di] = lo + np.searchsorted(post[lo:hi], block_edges)
+    seg_len = bounds[:, 1:] - bounds[:, :-1]         # (D, NB)
+    counts = seg_len.sum(axis=0)                     # edges per block
+    eb = int(max(counts.max() if counts.size else 1, 1, eb_min))
+    eb = ((eb + eb_multiple - 1) // eb_multiple) * eb_multiple
+    # column offset of each delay's run within its block row
+    col0 = np.concatenate([np.zeros((1, nb), np.int64),
+                           np.cumsum(seg_len, axis=0)])[:-1]
+
+    out = BlockedGraph(
+        nb=nb, eb=eb, pb=pb, n_local=nb * pb,
+        pre_idx=np.zeros((nb, eb), np.int32),
+        post_rel=np.zeros((nb, eb), np.int32),
+        delay=np.zeros((nb, eb), np.int32),
+        channel=np.zeros((nb, eb), np.int32),
+        weight=np.zeros((nb, eb), np.float32),
+        plastic=np.full((nb, eb), False, bool),
+        edge_perm=np.zeros((nb, eb), np.int32),
+    )
+    pre = np.asarray(g.pre_idx)
+    w = np.asarray(g.weight_init)
+    ch = np.asarray(g.channel)
+    pl_ = np.asarray(g.plastic)
+
+    for b0 in range(0, nb, chunk_blocks):
+        b1 = min(b0 + chunk_blocks, nb)
+        ls = seg_len[:, b0:b1].ravel()               # (D * cb,) d-major
+        tot = int(ls.sum())
+        if tot == 0:
+            continue
+        starts = bounds[:, b0:b1].ravel()            # flat src start per seg
+        seg_first = np.concatenate([[0], np.cumsum(ls)[:-1]])
+        within = np.arange(tot, dtype=np.int64) - np.repeat(seg_first, ls)
+        src = np.repeat(starts, ls) + within
+        rows = np.repeat(np.tile(np.arange(b0, b1, dtype=np.int64),
+                                 n_delay), ls)
+        cols = np.repeat(col0[:, b0:b1].ravel(), ls) + within
+        out.pre_idx[rows, cols] = pre[src]
+        out.post_rel[rows, cols] = post[src] - rows * pb
+        out.delay[rows, cols] = d[src]
+        out.channel[rows, cols] = ch[src]
+        out.weight[rows, cols] = w[src]
+        out.plastic[rows, cols] = pl_[src]
+        out.edge_perm[rows, cols] = src
+    return out

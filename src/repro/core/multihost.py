@@ -57,7 +57,7 @@ from repro.core import snn
 __all__ = ["initialize", "detect_cluster_env", "HostTopology",
            "make_host_mesh", "host_topology", "local_shard_slice",
            "shard_stacked", "replicate_to_host", "make_multihost_step",
-           "init_multihost_state"]
+           "init_multihost_state", "prepare_stacked_local"]
 
 #: default coordinator port when only a nodelist is known (SLURM);
 #: override with REPRO_COORD_PORT
@@ -245,19 +245,35 @@ def local_shard_slice(mesh: Mesh) -> slice:
     return slice(lo, hi)
 
 
-def shard_stacked(tree: Any, mesh: Mesh) -> Any:
+def shard_stacked(tree: Any, mesh: Mesh, *,
+                  local_slice: tuple[int, int] | None = None) -> Any:
     """(S, ...) host-side arrays -> GLOBAL arrays sharded on axis 0.
 
-    Every process passes the full stacked value (cheap: build-time numpy)
-    and contributes only its own rows; the result is a global jax.Array
-    usable as a jit input from every process.  Works unchanged in a
-    single-process program (where it is a plain sharded device_put).
+    Default (global) mode: every process passes the full stacked value
+    (cheap: build-time numpy) and contributes only its own rows; the
+    result is a global jax.Array usable as a jit input from every process.
+    Works unchanged in a single-process program (where it is a plain
+    sharded device_put).
+
+    ``local_slice=(lo, hi)`` switches to LOCAL mode - the O(owned rows)
+    contract of the procedural build (:func:`prepare_stacked_local`): the
+    passed arrays hold ONLY this process's rows (leading dim ``hi - lo``)
+    and are shipped verbatim; the global shape is reconstructed from the
+    mesh size.  No process ever holds another process's consts.
     """
     sh = NamedSharding(mesh, P(mesh.axis_names))
     sl = local_shard_slice(mesh)
+    S = int(np.asarray(mesh.devices, dtype=object).size)
 
     def put(a):
         a = np.asarray(a)
+        if local_slice is not None:
+            if (sl.start, sl.stop) != tuple(local_slice):
+                raise ValueError(
+                    f"local arrays cover shards {local_slice} but this "
+                    f"process owns {(sl.start, sl.stop)} on the mesh")
+            return jax.make_array_from_process_local_data(
+                sh, np.ascontiguousarray(a), (S,) + a.shape[1:])
         return jax.make_array_from_process_local_data(
             sh, np.ascontiguousarray(a[sl]), a.shape)
 
@@ -269,6 +285,150 @@ def replicate_to_host(x, mesh: Mesh) -> np.ndarray:
     EVERY process - one replicating collective, then a local read."""
     rep = jax.jit(lambda a: a, out_shardings=NamedSharding(mesh, P()))(x)
     return np.asarray(rep.addressable_data(0))
+
+
+def _allgather_host(a: np.ndarray) -> np.ndarray:
+    """Host-side allgather: (``local...``) -> (P, ``local...``) numpy.
+
+    Single-process programs skip the collective (the degenerate P=1 axis
+    is added locally) so the local-build code path is testable without a
+    cluster."""
+    if jax.process_count() <= 1:
+        return np.asarray(a)[None]
+    from jax.experimental import multihost_utils
+    return np.asarray(multihost_utils.process_allgather(np.asarray(a)))
+
+
+def prepare_stacked_local(spec, dec, n_rows: int, row_width: int,
+                          mesh: Mesh, *, pad_to_multiple: int = 8,
+                          with_blocked: bool = True,
+                          block_shapes=None) -> dist.StackedNetwork:
+    """O(owned rows) multi-process twin of
+    :func:`repro.core.distributed.prepare_stacked` for PROCEDURAL specs.
+
+    Every process builds only the shards its mesh devices own; nothing
+    proportional to the global edge count is ever held or broadcast.  The
+    processes still have to AGREE on the stacked geometry and the exchange
+    metadata, which procedural connectivity makes almost free:
+
+    * per-shard edge counts, row degrees (hence the shared blocked
+      (PB, EB) shape) and local sizes are ANALYTIC under the
+      fixed-indegree rule - every process derives them for all shards
+      with zero RNG and zero communication;
+    * only the remote-mirror tables need real draws: each process runs
+      the counting pass (pass A) over its own rows and allgathers the
+      padded remote gid sets - O(sum of mirror tables), not O(edges);
+    * every remote mirror of a procedural shard is referenced by a
+      generated edge BY CONSTRUCTION, so the boundary lists derived from
+      those tables match the materialized ``used``-filtered computation
+      bit-exactly (pinned by tests/test_multihost.py).
+
+    Returns a StackedNetwork whose (S, ...) arrays hold only this
+    process's rows, with ``local_slice`` recording the owned range; feed
+    it to :func:`make_multihost_step` / :func:`init_multihost_state`,
+    which ship the local rows via ``shard_stacked(local_slice=...)``.
+    """
+    from repro.core import builder as builder_mod
+    if spec.connectivity != "procedural":
+        raise ValueError(
+            "prepare_stacked_local needs connectivity='procedural' - a "
+            "materialized spec has a global edge list anyway, use "
+            "prepare_stacked")
+    S = n_rows * row_width
+    assert S == dec.n_devices
+    sl = local_shard_slice(mesh)
+    lo, hi = sl.start, sl.stop
+    row_of = np.arange(S) // row_width
+
+    # --- analytic dims for ALL shards (no RNG, no comms) -------------------
+    e_all = builder_mod.shard_edge_counts(spec, dec)
+    degrees = [builder_mod.shard_row_degrees(spec, dec, s)
+               for s in range(S)]
+    n_local_all = [int(p.size) for p in dec.parts]
+
+    # --- pass A on OWNED shards: remote-mirror gid sets --------------------
+    own_remotes = []
+    for s in range(lo, hi):
+        d = builder_mod.procedural_shard_raw(spec, dec, s, dims_only=True)
+        own_remotes.append(d["mirror_gids"][d["owned"].size:])
+        if d["e"] != int(e_all[s]) or not np.array_equal(
+                d["row_degree"], degrees[s]):
+            raise AssertionError(
+                f"shard {s}: generated dims disagree with the analytic "
+                "fixed-indegree counts")
+
+    # --- two small allgather rounds: counts, then padded gid tables --------
+    counts_local = np.asarray([r.size for r in own_remotes], np.int64)
+    counts_all = _allgather_host(counts_local).reshape(-1)
+    if counts_all.size != S:
+        raise ValueError(
+            f"processes own unequal shard counts ({counts_all.size} "
+            f"gathered entries for {S} shards); align the mesh to hosts "
+            "with make_host_mesh")
+    r_pad = max(int(counts_all.max()), 1)
+    table_local = np.full((hi - lo, r_pad), -1, np.int64)
+    for i, r in enumerate(own_remotes):
+        table_local[i, :r.size] = r
+    tables = _allgather_host(table_local).reshape(S, r_pad)
+
+    # --- agreed pads + boundary lists (identical on every process) ---------
+    plan = dict(e=[int(e) for e in e_all],
+                n_local=n_local_all,
+                n_mirror=[n_local_all[s] + int(counts_all[s])
+                          for s in range(S)],
+                row_degree=degrees)
+    pads = dist.resolve_stack_pads(plan, spec,
+                                   pad_to_multiple=pad_to_multiple,
+                                   with_blocked=with_blocked,
+                                   block_shapes=block_shapes)
+    consumers: list[list[np.ndarray]] = [[] for _ in range(S)]
+    for s in range(S):
+        rg = tables[s, :int(counts_all[s])]
+        src = dec.owner[rg]
+        for src_shard in np.unique(src):
+            if row_of[src_shard] != row_of[s]:
+                sel = src == src_shard
+                consumers[int(src_shard)].append(np.unique(
+                    np.searchsorted(dec.parts[int(src_shard)], rg[sel])))
+    boundary = [np.unique(np.concatenate(c)) if c else np.zeros(0, np.int64)
+                for c in consumers]
+    b_pad, boundary_slots = dist._boundary_slots_from_lists(
+        boundary, pads["n_local_pad"], pad_to_multiple)
+
+    # --- full build of OWNED shards, streamed into local stacked arrays ---
+    Sl = hi - lo
+    nm = pads["n_mirror_pad"]
+    graph = dist._alloc_stacked_graph(Sl, pads["e_pad"],
+                                      pads["n_local_pad"], nm,
+                                      pads["blocked_meta"])
+    src_all = np.zeros((Sl, nm), np.int32)
+    idx_all = np.zeros((Sl, nm), np.int32)
+    mirror_is_intra = np.zeros((Sl, nm), dtype=bool)
+    mirror_row_gather = np.zeros((Sl, nm), dtype=np.int32)
+    mirror_remote_gather = np.zeros((Sl, nm), dtype=np.int32)
+    shard_iter = dist.procedural_shard_graphs(
+        spec, dec, range(lo, hi), pads, pad_to_multiple=pad_to_multiple,
+        with_blocked=with_blocked)
+    for i, g in enumerate(shard_iter):
+        dist._fill_stacked_row(graph, i, g, pads["blocked_meta"])
+        src_all[i] = np.asarray(g.mirror_src_shard)
+        idx_all[i] = np.asarray(g.mirror_src_idx)
+        (mirror_is_intra[i], mirror_row_gather[i],
+         mirror_remote_gather[i]) = dist._mirror_meta_row(
+            src_all[i], idx_all[i], lo + i, row_of, boundary, b_pad,
+            pads["n_local_pad"], row_width)
+
+    return dist.StackedNetwork(
+        n_shards=S, row_width=row_width, n_local=pads["n_local_pad"],
+        n_mirror=nm, n_edges=pads["e_pad"], b_pad=b_pad,
+        max_delay=spec.max_delay, graph=graph,
+        blocked_meta=pads["blocked_meta"], block_shapes_spec=block_shapes,
+        local_slice=(lo, hi),
+        boundary_slots=boundary_slots[lo:hi],
+        mirror_is_intra=mirror_is_intra,
+        mirror_row_gather=mirror_row_gather,
+        mirror_remote_gather=mirror_remote_gather,
+        mirror_src_flat=src_all)
 
 
 def make_multihost_step(net: dist.StackedNetwork, mesh: Mesh,
@@ -292,7 +452,8 @@ def make_multihost_step(net: dist.StackedNetwork, mesh: Mesh,
         mesh, groups, cfg, net.max_delay, net.n_local, net.n_mirror,
         net.blocked_meta if backend.needs_blocked else None)
     consts = shard_stacked(
-        dist.stacked_consts(net, needs_blocked=backend.needs_blocked), mesh)
+        dist.stacked_consts(net, needs_blocked=backend.needs_blocked),
+        mesh, local_slice=net.local_slice)
     return smapped, consts
 
 
@@ -307,8 +468,11 @@ def init_multihost_state(net: dist.StackedNetwork, groups, mesh: Mesh,
     not process index) and ships only its own rows - so a 2-process x
     4-device run and a 1-process x 8-device run start from bit-identical
     state, which is what the trajectory-equivalence contract rests on.
-    ``neuron_model`` selects the dynamics (DESIGN.md §12); the model's
-    ``aux`` arrays shard like every other (S, ...) leaf.
+    For a locally built net (``net.local_slice``, the procedural O(owned
+    rows) path) the state leaves are computed local-rows-only up front -
+    same trajectory, no full-network staging.  ``neuron_model`` selects
+    the dynamics (DESIGN.md §12); the model's ``aux`` arrays shard like
+    every other (S, ...) leaf.
     """
     full = dist.init_stacked_state(net, list(groups), seed=seed, dtype=dtype,
                                    weight_dtype=weight_dtype, sweep=sweep,
@@ -317,6 +481,6 @@ def init_multihost_state(net: dist.StackedNetwork, groups, mesh: Mesh,
     sharded = shard_stacked(
         {f.name: getattr(full, f.name)
          for f in dataclasses.fields(full) if f.name not in meta},
-        mesh)
+        mesh, local_slice=net.local_slice)
     return dist.DistState(weights_layout=full.weights_layout,
                           neuron_model=full.neuron_model, **sharded)

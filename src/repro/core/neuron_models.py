@@ -201,9 +201,28 @@ class NeuronModel:
     # -- run-time ---------------------------------------------------------
     def step(self, state: snn.NeuronState, table, input_ex, input_in, *,
              synapse_model: str = snn.SynapseModel.CURRENT_EXP,
-             key=None, t=None) -> snn.NeuronState:
-        """One dt of dynamics - the jnp oracle every backend can run."""
+             key=None, t=None, gid=None) -> snn.NeuronState:
+        """One dt of dynamics - the jnp oracle every backend can run.
+
+        ``key``/``t`` feed stochastic draws; ``gid`` (GLOBAL neuron ids,
+        (n,) int32, -1 on padding rows) keys them per neuron so the same
+        network sharded differently draws the same spikes (DESIGN.md §14).
+        Deterministic models ignore all three.
+        """
         raise NotImplementedError
+
+
+def _gid_uniform(key, t, gid):
+    """Per-neuron U(0,1) draws from counter-style streams keyed by GLOBAL
+    neuron id (and step): ``fold_in(fold_in(key, t), gid[i])``.  Because
+    the stream depends only on (key, t, global id) - never on shard shape
+    or local index - 1-shard and N-shard trajectories of stochastic models
+    match bit-exactly (DESIGN.md §14).  Padding rows (gid == -1) draw from
+    their own harmless stream."""
+    k = key if t is None else jax.random.fold_in(key, t)
+    keys = jax.vmap(lambda g: jax.random.fold_in(k, g))(jnp.asarray(gid))
+    return jax.vmap(
+        lambda kk: jax.random.uniform(kk, (), dtype=jnp.float32))(keys)
 
 
 def _require_current(model: NeuronModel, synapse_model: str) -> None:
@@ -245,14 +264,15 @@ class LIFModel(NeuronModel):
                     ref_count=np.zeros(group_id.shape, dtype=np.int32))
 
     def step(self, state, table, input_ex, input_in, *,
-             synapse_model=snn.SynapseModel.CURRENT_EXP, key=None, t=None):
+             synapse_model=snn.SynapseModel.CURRENT_EXP, key=None, t=None,
+             gid=None):
         return snn.lif_step(state, table, input_ex, input_in,
                             synapse_model=synapse_model)
 
     def kernel_step(self, state, table, input_ex, input_in, *,
                     synapse_model=snn.SynapseModel.CURRENT_EXP,
                     nb: int = 128, interpret: bool = True,
-                    key=None, t=None):
+                    key=None, t=None, gid=None):
         if synapse_model not in (snn.SynapseModel.CURRENT_EXP,
                                  snn.SynapseModel.COND_EXP):
             raise ValueError(f"unknown synapse model {synapse_model!r}")
@@ -309,7 +329,8 @@ class IzhikevichModel(NeuronModel):
                     u=b[group_id] * v0)
 
     def step(self, state, table, input_ex, input_in, *,
-             synapse_model=snn.SynapseModel.CURRENT_EXP, key=None, t=None):
+             synapse_model=snn.SynapseModel.CURRENT_EXP, key=None, t=None,
+             gid=None):
         _require_current(self, synapse_model)
         gid = state.group_id
         get = lambda name: jnp.take(
@@ -323,7 +344,7 @@ class IzhikevichModel(NeuronModel):
     def kernel_step(self, state, table, input_ex, input_in, *,
                     synapse_model=snn.SynapseModel.CURRENT_EXP,
                     nb: int = 128, interpret: bool = True,
-                    key=None, t=None):
+                    key=None, t=None, gid=None):
         _require_current(self, synapse_model)
         n = state.v_m.shape[0]
         p, cut = _pad_blocks(n, nb)
@@ -377,7 +398,8 @@ class AdExModel(NeuronModel):
                     w_ad=z)
 
     def step(self, state, table, input_ex, input_in, *,
-             synapse_model=snn.SynapseModel.CURRENT_EXP, key=None, t=None):
+             synapse_model=snn.SynapseModel.CURRENT_EXP, key=None, t=None,
+             gid=None):
         _require_current(self, synapse_model)
         gid = state.group_id
         get = lambda name: jnp.take(
@@ -391,7 +413,7 @@ class AdExModel(NeuronModel):
     def kernel_step(self, state, table, input_ex, input_in, *,
                     synapse_model=snn.SynapseModel.CURRENT_EXP,
                     nb: int = 128, interpret: bool = True,
-                    key=None, t=None):
+                    key=None, t=None, gid=None):
         _require_current(self, synapse_model)
         n = state.v_m.shape[0]
         p, cut = _pad_blocks(n, nb)
@@ -440,14 +462,19 @@ class PoissonModel(NeuronModel):
                     ref_count=np.zeros(group_id.shape, dtype=np.int32))
 
     def step(self, state, table, input_ex, input_in, *,
-             synapse_model=snn.SynapseModel.CURRENT_EXP, key=None, t=None):
+             synapse_model=snn.SynapseModel.CURRENT_EXP, key=None, t=None,
+             gid=None):
         if key is None:
             raise ValueError(
                 f"model {self.name!r} is stochastic: the engine must pass "
                 "a per-step PRNG key to neuron_update (key=)")
-        k = key if t is None else jax.random.fold_in(key, t)
         p = jnp.take(table[:, 0], state.group_id, axis=0)
-        u = jax.random.uniform(k, p.shape, dtype=jnp.float32)
+        if gid is None:
+            # legacy per-shard stream (no global ids available)
+            k = key if t is None else jax.random.fold_in(key, t)
+            u = jax.random.uniform(k, p.shape, dtype=jnp.float32)
+        else:
+            u = _gid_uniform(key, t, gid)
         spike = u < p
         return dataclasses.replace(state, spike=spike)
 
@@ -510,16 +537,19 @@ class PoissonDriveModel(NeuronModel):
         base_groups, _ = self._split(groups)
         return self.base.init_vars(group_id, base_groups)
 
-    def _overlay(self, state, new, table, key, t):
+    def _overlay(self, state, new, table, key, t, gid=None):
         """Emitter groups: freeze the dynamical update, draw the spike."""
         if key is None:
             raise ValueError(
                 f"model {self.name!r} is stochastic: the engine must pass "
                 "a per-step PRNG key to neuron_update (key=)")
-        k = key if t is None else jax.random.fold_in(key, t)
         p = jnp.take(table[:, -1], state.group_id, axis=0)
         emit = p > 0
-        u = jax.random.uniform(k, p.shape, dtype=jnp.float32)
+        if gid is None:
+            k = key if t is None else jax.random.fold_in(key, t)
+            u = jax.random.uniform(k, p.shape, dtype=jnp.float32)
+        else:
+            u = _gid_uniform(key, t, gid)
         keep = lambda old, upd: jnp.where(emit, old, upd)
         return snn.NeuronState(
             v_m=keep(state.v_m, new.v_m),
@@ -532,19 +562,20 @@ class PoissonDriveModel(NeuronModel):
                    for f in self.extra_fields})
 
     def step(self, state, table, input_ex, input_in, *,
-             synapse_model=snn.SynapseModel.CURRENT_EXP, key=None, t=None):
+             synapse_model=snn.SynapseModel.CURRENT_EXP, key=None, t=None,
+             gid=None):
         new = self.base.step(state, table[:, :-1], input_ex, input_in,
                              synapse_model=synapse_model)
-        return self._overlay(state, new, table, key, t)
+        return self._overlay(state, new, table, key, t, gid)
 
     def _kernel_step(self, state, table, input_ex, input_in, *,
                      synapse_model=snn.SynapseModel.CURRENT_EXP,
                      nb: int = 128, interpret: bool = True,
-                     key=None, t=None):
+                     key=None, t=None, gid=None):
         new = self.base.kernel_step(state, table[:, :-1], input_ex,
                                     input_in, synapse_model=synapse_model,
                                     nb=nb, interpret=interpret)
-        return self._overlay(state, new, table, key, t)
+        return self._overlay(state, new, table, key, t, gid)
 
 
 # --------------------------------------------------------------------------

@@ -97,6 +97,11 @@ def build_parser() -> argparse.ArgumentParser:
                     help="intra-host spike wire codec")
     ap.add_argument("--wire-remote", default=None,
                     help="inter-host (boundary) wire codec; default = --wire")
+    ap.add_argument("--connectivity", default=None,
+                    choices=("materialized", "procedural"),
+                    help="override the spec's connectivity mode; "
+                         "'procedural' makes every worker build ONLY its "
+                         "own rows' consts (no full-network broadcast)")
     ap.add_argument("--comm-mode", default="area", choices=("area", "global"))
     ap.add_argument("--no-stdp", action="store_true")
     ap.add_argument("--no-overlap", action="store_true")
@@ -194,17 +199,26 @@ def run_worker(args: argparse.Namespace) -> dict | None:
     if drive_boost is None:
         drive_boost = (3.0 if not args.model
                        and args.scenario == "hpc_benchmark" else 1.0)
+    import dataclasses
     if drive_boost != 1.0:
-        import dataclasses
         pops = [dataclasses.replace(p, ext_rate_hz=p.ext_rate_hz
                                     * drive_boost)
                 for p in spec.populations]
         spec = dataclasses.replace(spec, populations=pops)
+    if args.connectivity:
+        spec = dataclasses.replace(spec, connectivity=args.connectivity)
     backend = backends_mod.get_backend(args.sweep)
     dec = dist.mesh_decompose(spec, n_rows, args.row_width)
-    net = dist.prepare_stacked(spec, dec, n_rows, args.row_width,
-                               with_blocked=backend.needs_blocked)
     mesh = multihost.make_host_mesh(n_rows, args.row_width)
+    if spec.connectivity == "procedural":
+        # O(owned rows): each worker generates only its own shards'
+        # consts; peers exchange nothing but mirror-gid tables
+        net = multihost.prepare_stacked_local(
+            spec, dec, n_rows, args.row_width, mesh,
+            with_blocked=backend.needs_blocked)
+    else:
+        net = dist.prepare_stacked(spec, dec, n_rows, args.row_width,
+                                   with_blocked=backend.needs_blocked)
     cfg = dist.DistributedConfig(
         engine=engine.EngineConfig(dt=0.1,
                                    stdp=None if args.no_stdp else stdp,
@@ -240,7 +254,7 @@ def run_worker(args: argparse.Namespace) -> dict | None:
         model=spec.neuron_model, drive_boost=drive_boost,
         wire=args.wire, wire_remote=args.wire_remote or args.wire,
         comm_mode=args.comm_mode, overlap=not args.no_overlap,
-        stdp=not args.no_stdp,
+        stdp=not args.no_stdp, connectivity=spec.connectivity,
         bits_sha256=sha(bits_np), vm_sha256=sha(vm_np),
         spiked=int(bits_np.sum()), overflow=overflow,
         wire_bytes_intra=split["intra"], wire_bytes_inter=split["inter"],

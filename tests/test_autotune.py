@@ -87,6 +87,129 @@ def test_builder_threads_block_shapes():
     assert pinned.pb == 128 and pinned.eb >= chosen.eb
 
 
+def _measured_payload(entries):
+    """BENCH_*.json-shaped payload from {(sig, pb, eb): us} entries."""
+    return {"records": [
+        {"name": f"shape_tune/{sig}/pb{pb}xeb{eb}", "us_per_call": us}
+        for (sig, pb, eb), us in entries.items()]}
+
+
+def test_degree_signature_deterministic_and_path_consistent():
+    """The signature is a pure function of the degree distribution: stable
+    across calls, identical between the graph-based (materialized) and the
+    analytic (procedural dims pre-pass) degree paths, and sensitive to a
+    changed distribution."""
+    spec, shards = _shards()
+    degs = autotune.degrees_from_graphs(shards)
+    sig = autotune.degree_signature(degs)
+    assert sig == autotune.degree_signature(degs)
+    assert len(sig) == 12
+    # the analytic procedural path keys the SAME signature (fixed indegree
+    # makes the materialized per-row real-edge counts exactly the covering
+    # indegree sums, after degrees_from_graphs drops padding rows)
+    dec = builder.decompose(spec, 1)
+    analytic = [builder.shard_row_degrees(spec, dec, 0)]
+    np.testing.assert_array_equal(degs[0], analytic[0])
+    assert autotune.degree_signature(analytic) == sig
+    # a shifted distribution fingerprints differently
+    assert autotune.degree_signature([degs[0] + 1]) != sig
+
+
+def test_load_measured_timings_parse_and_fallbacks(tmp_path):
+    import json
+    good = {("abc123def456", 128, 1024): 10.5, ("abc123def456", 256, 512): 7.0}
+    payload = _measured_payload(good)
+    # malformed / foreign records are skipped, not fatal
+    payload["records"] += [
+        {"name": "snn_step/flat/steps", "us_per_call": 1.0},
+        {"name": "shape_tune/short", "us_per_call": 1.0},
+        {"name": "shape_tune/abc/pbXxebY", "us_per_call": 1.0},
+        {"name": "shape_tune/abc/pb128xeb512"},  # no timing
+    ]
+    p = tmp_path / "BENCH_t.json"
+    p.write_text(json.dumps(payload))
+    assert autotune.load_measured_timings(str(p)) == good
+    # missing file and non-JSON content both degrade to an empty map
+    assert autotune.load_measured_timings(str(tmp_path / "nope.json")) == {}
+    bad = tmp_path / "bad.json"
+    bad.write_text("not json {")
+    assert autotune.load_measured_timings(str(bad)) == {}
+
+
+def test_measured_timings_break_the_model_tie(tmp_path):
+    """A measured sweep table keyed by this network's signature overrides
+    the padded-slots model among VMEM-feasible candidates; an unknown
+    signature falls back to the model choice."""
+    import json
+    _, shards = _shards()
+    model_choice = autotune_block_shapes(shards)
+    cands = autotune._candidates(shards, autotune.DEFAULT_PB_CANDIDATES,
+                                 autotune.DEFAULT_EB_MULTIPLE,
+                                 autotune.DEFAULT_VMEM_BUDGET)
+    feasible = [c for c in cands if c.feasible]
+    others = [c for c in feasible
+              if (c.pb, c.eb) != model_choice.as_tuple()]
+    assert others, "need a second feasible candidate for the tie-break test"
+    winner = others[0]
+    sig = autotune.degree_signature(autotune.degrees_from_graphs(shards))
+    measured = {(sig, winner.pb, winner.eb): 5.0,
+                (sig, model_choice.pb, model_choice.eb): 50.0}
+
+    got = autotune_block_shapes(shards, measured=measured)
+    assert got.as_tuple() == winner.as_tuple()
+    assert got.feasible
+    # the same table via a BENCH file path
+    p = tmp_path / "BENCH_m.json"
+    p.write_text(json.dumps(_measured_payload(measured)))
+    assert autotune_block_shapes(
+        shards, measured=str(p)).as_tuple() == winner.as_tuple()
+    # resolve_block_shapes("measured:<path>") is the user-facing spelling
+    assert resolve_block_shapes(
+        shards, f"measured:{p}").as_tuple() == winner.as_tuple()
+    # timings recorded for some OTHER network must not leak in
+    foreign = {("0" * 12, winner.pb, winner.eb): 5.0}
+    assert autotune_block_shapes(
+        shards, measured=foreign).as_tuple() == model_choice.as_tuple()
+    # an empty map (missing BENCH file) is the model fallback too
+    assert autotune_block_shapes(
+        shards,
+        measured=str(tmp_path / "gone.json")).as_tuple() \
+        == model_choice.as_tuple()
+
+
+def test_measured_tiebreak_from_degrees_matches_graph_path():
+    """The procedural dims-only entry point picks the same measured winner
+    as the graph-based tuner - the two paths share signature and
+    candidate geometry."""
+    spec, shards = _shards()
+    g = shards[0]
+    dec = builder.decompose(spec, 1)
+    degs = [builder.shard_row_degrees(spec, dec, 0)]
+    kw = dict(n_local=int(g.n_local), n_mirror=int(g.n_mirror),
+              max_delay=int(g.max_delay))
+    base = autotune.autotune_block_shapes_from_degrees(degs, **kw)
+    assert base.as_tuple() == autotune_block_shapes(shards).as_tuple()
+    cands = autotune._candidates(shards, autotune.DEFAULT_PB_CANDIDATES,
+                                 autotune.DEFAULT_EB_MULTIPLE,
+                                 autotune.DEFAULT_VMEM_BUDGET)
+    winner = next(c for c in cands
+                  if c.feasible and (c.pb, c.eb) != base.as_tuple())
+    sig = autotune.degree_signature(degs)
+    measured = {(sig, winner.pb, winner.eb): 1.0}
+    for got in (autotune.autotune_block_shapes_from_degrees(
+                    degs, measured=measured, **kw),
+                autotune_block_shapes(shards, measured=measured)):
+        assert got.as_tuple() == winner.as_tuple()
+    # VMEM still gates: starve the budget and the measured winner (now
+    # infeasible) must not be chosen on timings alone
+    starved = autotune.autotune_block_shapes_from_degrees(
+        degs, measured=measured,
+        vmem_budget=autotune.sweep_vmem_bytes(
+            winner.pb, winner.eb, max_delay=kw["max_delay"],
+            n_mirror=kw["n_mirror"]) - 1, **kw)
+    assert starved.as_tuple() != winner.as_tuple() or not starved.feasible
+
+
 def test_pallas_auto_backend_matches_flat_trajectory():
     """'pallas:auto' resolves through the registry (cached) and keeps the
     §9 numerical contract on a short STDP trajectory."""

@@ -1,0 +1,107 @@
+"""Build-scale smoke (DESIGN.md §14, CI-gated): under a hard address-space
+rlimit on the build phase the materialize-then-route pipeline CANNOT build
+the network - its global edge-list staging blows the budget - while the
+procedural build constructs the same network (then steps it, limit
+restored: XLA's codegen aborts rather than raising under RLIMIT_AS) and
+shard-locally builds one shard of a network >= 10x bigger still under the
+same budget.
+
+Heavy (subprocess builds a ~1.1M-edge net three ways), so it only runs
+when ``REPRO_BUILD_SCALE`` is set - CI gives it a dedicated step.
+"""
+
+import json
+import os
+import subprocess
+import sys
+import textwrap
+
+import pytest
+
+ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+SMOKE_CODE = textwrap.dedent("""
+    import dataclasses, json, resource
+    import numpy as np
+    import jax
+    from repro.core import builder, engine, models, snn
+
+    SCALE = 0.3
+
+    def vm_peak_mb():
+        with open("/proc/self/status") as f:
+            for line in f:
+                if line.startswith("VmPeak:"):
+                    return int(line.split()[1]) // 1024
+        return 0
+
+    spec, _ = models.hpc_benchmark(scale=SCALE, stdp=True)
+    # constant-current drive so the short external_drive=False run fires
+    groups = [dataclasses.replace(p, i_e=800.0) for p in spec.groups]
+    spec = dataclasses.replace(spec, groups=groups,
+                               connectivity="procedural")
+    dec = builder.decompose(spec, 1)
+    e1 = int(builder.shard_edge_counts(spec, dec)[0])
+
+    # the >=10x network (fixed-indegree edges scale ~ scale^2), decomposed
+    # into 16 shards the way a real deployment would hold it
+    spec10, _ = models.hpc_benchmark(scale=SCALE * 10 ** 0.5, stdp=True)
+    spec10 = dataclasses.replace(spec10, connectivity="procedural")
+    dec10 = builder.decompose(spec10, 16)
+    e10 = int(builder.shard_edge_counts(spec10, dec10).sum())
+    assert e10 >= 10 * e1, (e10, e1)
+
+    # build-phase budget: ~105 B/edge of headroom.  The materialized
+    # pipeline peaks well above it (~133 B/edge measured: int64/f64
+    # generation arrays, concat + lexsort staging); the procedural
+    # build's finalized consts + one row chunk stay under (~82 B/edge
+    # measured).  The limit is restored before the jax step - XLA's LLVM
+    # codegen hard-aborts (no MemoryError) when an mmap fails, so only
+    # the numpy build phase can run under a meaningful RLIMIT_AS.
+    old = resource.getrlimit(resource.RLIMIT_AS)
+    budget = vm_peak_mb() * 2 ** 20 + 105 * e1
+    resource.setrlimit(resource.RLIMIT_AS, (budget, old[1]))
+
+    mat_failed = False
+    try:
+        builder.build_shards(spec, dec, with_blocked=False,
+                             force_materialized=True)
+    except MemoryError:
+        mat_failed = True
+
+    shards = builder.build_shards(spec, dec, with_blocked=False)
+
+    # shard-local O(owned rows): one shard of the 10x network, same budget
+    raw10 = builder.procedural_shard_raw(spec10, dec10, 0)
+    [g10] = builder.finalize_shards(spec10, dec10, [raw10],
+                                    uniform_pad=False, with_blocked=False)
+
+    resource.setrlimit(resource.RLIMIT_AS, old)
+    g = shards[0].device_arrays()
+    del shards
+    table = snn.make_param_table(list(spec.groups), dt=0.1)
+    cfg = engine.EngineConfig(dt=0.1, external_drive=False)
+    st = engine.init_state(g, list(spec.groups), jax.random.key(0))
+    _, bits = jax.jit(lambda s: engine.run(s, g, table, cfg, 100))(st)
+    spiked = int(np.asarray(bits).sum())
+    print(json.dumps(dict(materialized_failed=mat_failed, e1=e1, e10=e10,
+                          spiked=spiked, shard10_edges=int(g10.n_edges),
+                          budget_mb=budget // 2 ** 20)))
+""")
+
+
+@pytest.mark.skipif(not os.environ.get("REPRO_BUILD_SCALE"),
+                    reason="heavy build-scale smoke; set REPRO_BUILD_SCALE=1")
+@pytest.mark.skipif(sys.platform != "linux",
+                    reason="needs RLIMIT_AS + /proc/self/status")
+def test_procedural_build_beyond_materialized_memory_limit():
+    env = dict(os.environ, PYTHONPATH=os.path.join(ROOT, "src"))
+    out = subprocess.run([sys.executable, "-c", SMOKE_CODE], env=env,
+                         capture_output=True, text=True, timeout=900)
+    assert out.returncode == 0, out.stderr[-4000:]
+    res = json.loads(out.stdout.strip().splitlines()[-1])
+    assert res["materialized_failed"], \
+        f"materialized build fit the budget - raise the bar: {res}"
+    assert res["spiked"] > 0, f"vacuous: stepped net was silent: {res}"
+    assert res["e10"] >= 10 * res["e1"]
+    assert res["shard10_edges"] > 0

@@ -200,7 +200,8 @@ def test_multihost_step_matches_distributed_step_single_process():
 # multi-process trajectory equivalence (the ISSUE's acceptance criterion)
 # --------------------------------------------------------------------------
 
-def _launch(out, processes, devices, steps, sweep, wire, wire_remote):
+def _launch(out, processes, devices, steps, sweep, wire, wire_remote,
+            connectivity=None):
     argv = ["--processes", str(processes),
             "--devices-per-process", str(devices),
             "--row-width", "2", "--steps", str(steps), "--scale", "0.02",
@@ -208,6 +209,8 @@ def _launch(out, processes, devices, steps, sweep, wire, wire_remote):
             "--timeout", "600"]
     if wire_remote:
         argv += ["--wire-remote", wire_remote]
+    if connectivity:
+        argv += ["--connectivity", connectivity]
     return mh_launch.run_launcher(mh_launch.build_parser().parse_args(argv))
 
 
@@ -239,6 +242,76 @@ def test_multihost_trajectory_equivalence(tmp_path, sweep, wire,
         "voltage trajectory diverged across process counts"
     assert one["overflow"] == two["overflow"] == 0
     assert one["n_rows"] == two["n_rows"]  # same global decomposition
+
+
+@pytest.mark.slow
+@pytest.mark.skipif(os.name != "posix",
+                    reason="local multi-process launch needs POSIX")
+def test_multihost_procedural_local_build_equivalence(tmp_path):
+    """O(owned rows) shard-local build: with --connectivity procedural every
+    worker generates ONLY its own rows' consts (mirror-gid tables are the
+    only build-time exchange), yet a 2-process x 4-device mesh still
+    produces bit-identical spike AND voltage trajectories to the
+    single-process 8-device mesh."""
+    recs = {}
+    for procs, devs in ((1, 8), (2, 4)):
+        out = tmp_path / f"mh_proc_{procs}.json"
+        recs[procs] = _launch(out, procs, devs, 100, "flat", "packed", None,
+                              connectivity="procedural")
+    one, two = recs[1], recs[2]
+    assert one["connectivity"] == two["connectivity"] == "procedural"
+    assert one["spiked"] > 30, "vacuous test - nothing spiked"
+    assert one["bits_sha256"] == two["bits_sha256"], \
+        "procedural local build diverged across process counts"
+    assert one["vm_sha256"] == two["vm_sha256"]
+    assert one["overflow"] == two["overflow"] == 0
+
+
+# --------------------------------------------------------------------------
+# shard-local procedural build == global build (single-process pin)
+# --------------------------------------------------------------------------
+
+LOCAL_BUILD_CODE = textwrap.dedent("""
+    import dataclasses, json
+    import numpy as np
+    from repro.core import distributed as dist
+    from repro.core import multihost
+    from repro.core.models import brunel
+
+    spec, _ = brunel(scale=0.02)
+    spec = dataclasses.replace(spec, connectivity="procedural")
+    dec = dist.mesh_decompose(spec, 4, 2)
+    mesh = multihost.make_host_mesh(4, 2)
+    mismatch = []
+    for wb in (True, False):
+        ref = dist.prepare_stacked(spec, dec, 4, 2, with_blocked=wb)
+        loc = multihost.prepare_stacked_local(spec, dec, 4, 2, mesh,
+                                              with_blocked=wb)
+        if loc.local_slice != (0, dec.n_devices):
+            mismatch.append(("local_slice", wb))
+        for k in set(ref.graph) | set(loc.graph):
+            a = np.asarray(ref.graph[k]); b = np.asarray(loc.graph[k])
+            if a.dtype != b.dtype or not np.array_equal(a, b):
+                mismatch.append((k, wb))
+        for k in ("boundary_slots", "mirror_is_intra", "mirror_row_gather",
+                  "mirror_remote_gather", "mirror_src_flat"):
+            if not np.array_equal(np.asarray(getattr(ref, k)),
+                                  np.asarray(getattr(loc, k))):
+                mismatch.append((k, wb))
+        for k in ("n_shards", "n_local", "n_mirror", "b_pad",
+                  "blocked_meta"):
+            if getattr(ref, k) != getattr(loc, k):
+                mismatch.append((k, wb))
+    print(json.dumps(mismatch))
+""")
+
+
+def test_prepare_stacked_local_matches_global():
+    """A single process owning the whole mesh must assemble, from the
+    shard-local protocol (analytic dims + gid-table allgather), exactly the
+    StackedNetwork the global prepare_stacked builds - consts, boundary
+    tables, and mirror metadata bit-for-bit."""
+    assert json.loads(run_sub(LOCAL_BUILD_CODE)) == []
 
 
 # --------------------------------------------------------------------------

@@ -437,25 +437,44 @@ DIST_MODEL_CODE = textwrap.dedent("""
             results[f"{model}-{sweep}"] = bool((glob == ref).all())
         results[f"{model}-spiked"] = int(ref.sum())
 
-    # poisson: stochastic emitters are per-shard-keyed (like ext_rate
-    # drive), so the pin is distributed-vs-distributed determinism
-    spec, _ = models.model_demo("poisson", scale=0.02)
+    # stochastic models: the drive key is folded from the seed ALONE and
+    # per-neuron streams fold in (t, GLOBAL id), so an N-shard run is
+    # bit-identical to the single-shard trajectory - the same pin the
+    # deterministic models get (DESIGN.md §14 decomposition-invariant
+    # drive; covers the standalone emitter AND the composite drive)
+    stoch = {"poisson": models.model_demo("poisson", scale=0.02)[0],
+             "lif+poisson": models.brunel(scale=0.02,
+                                          poisson_input=True)[0]}
     mesh = jax.make_mesh((2, 2), ("data", "model"))
-    dec = dist.mesh_decompose(spec, 2, 2)
-    net = dist.prepare_stacked(spec, dec, 2, 2, with_blocked=False)
-    dcfg = dist.DistributedConfig(engine=engine.EngineConfig(
-        dt=0.1, external_drive=False, neuron_model="poisson"))
-    step, _ = dist.make_distributed_step(net, mesh, list(spec.groups), dcfg)
-    runs = []
-    for _ in range(2):
-        state = dist.init_stacked_state(net, list(spec.groups),
-                                        neuron_model="poisson")
+    for model, spec in stoch.items():
+        table = neuron_models.get_model(model).make_param_table(
+            list(spec.groups), dt=0.1)
+        dec1 = builder.decompose(spec, 1)
+        g1 = builder.build_shards(spec, dec1)[0].device_arrays()
+        cfg1 = engine.EngineConfig(dt=0.1, external_drive=False,
+                                   neuron_model=model)
+        st1 = engine.init_state(g1, list(spec.groups), jax.random.key(0),
+                                neuron_model=model)
+        _, ref = jax.jit(lambda s: engine.run(s, g1, table, cfg1, N))(st1)
+        ref = np.asarray(ref)[:, :spec.n_neurons].astype(bool)
+        dec = dist.mesh_decompose(spec, 2, 2)
+        net = dist.prepare_stacked(spec, dec, 2, 2, with_blocked=False)
+        dcfg = dist.DistributedConfig(engine=engine.EngineConfig(
+            dt=0.1, external_drive=False, neuron_model=model))
+        step, _ = dist.make_distributed_step(net, mesh, list(spec.groups),
+                                             dcfg)
+        state = dist.init_stacked_state(net, list(spec.groups), seed=0,
+                                        neuron_model=model)
         run = jax.jit(lambda s: jax.lax.scan(
             lambda s, _: step(s), s, None, length=N))
         _, bits = run(state)
-        runs.append(np.asarray(bits))
-    results["poisson-deterministic"] = bool((runs[0] == runs[1]).all())
-    results["poisson-spiked"] = int(runs[0].sum())
+        bits = np.asarray(bits)
+        glob = np.zeros((N, spec.n_neurons), bool)
+        for si, part in enumerate(dec.parts):
+            glob[:, part] = bits[:, si, :part.size]
+        key = model.replace("+", "_")
+        results[f"{key}-match"] = bool((glob == ref).all())
+        results[f"{key}-spiked"] = int(ref.sum())
     print(json.dumps(results))
 """)
 
@@ -463,9 +482,10 @@ DIST_MODEL_CODE = textwrap.dedent("""
 @pytest.mark.slow
 def test_distributed_two_rows_per_model():
     """Satellite: a distributed 2-row (2x2 mesh) run per model is
-    bit-identical to the single-shard trajectory for the deterministic
-    models (flat AND pallas backends); the stochastic poisson model is
-    pinned deterministic per (seed, decomposition)."""
+    bit-identical to the single-shard trajectory - for the deterministic
+    models (flat AND pallas backends) AND for the stochastic ones
+    (poisson, lif+poisson), whose drive key is decomposition-invariant:
+    folded from the seed alone, per-neuron streams fold in global id."""
     out = run_sub(DIST_MODEL_CODE)
     res = json.loads(out.strip().splitlines()[-1])
     for model in ("lif", "izhikevich", "adex"):
@@ -473,5 +493,7 @@ def test_distributed_two_rows_per_model():
         for sweep in ("flat", "pallas"):
             assert res[f"{model}-{sweep}"], \
                 f"{model}/{sweep} diverged from single-shard"
-    assert res["poisson-spiked"] > 30
-    assert res["poisson-deterministic"]
+    for model in ("poisson", "lif_poisson"):
+        assert res[f"{model}-spiked"] > 30, f"vacuous: {model} silent"
+        assert res[f"{model}-match"], \
+            f"stochastic {model} diverged from single-shard"

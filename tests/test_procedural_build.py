@@ -1,0 +1,281 @@
+"""Procedural connectivity (DESIGN.md §14): the per-row generator contract.
+
+The tentpole's correctness story is three pins:
+
+* the per-row Philox streams are a pure function of
+  ``(seed, projection, global_post_id)`` - so edges are identical across
+  shard counts, shard build order, and row-chunk sizes;
+* the rule parameters (``src_frac``, ``allow_autapse``, delay ranges,
+  weight-sign clamp) hold row-locally;
+* the shard-local two-pass build is bit-identical to routing the same
+  procedural edges through the legacy materialize-then-slice pipeline
+  (``force_materialized=True`` - the oracle), all the way through a
+  120-step trajectory and a spec+seed+state checkpoint round-trip.
+"""
+
+import dataclasses
+
+import numpy as np
+import pytest
+
+from repro.core import builder, snn
+from repro.core.builder import (NetworkSpec, Population, Projection,
+                                shard_edge_counts, shard_row_degrees)
+from repro.core.decomposition import AreaSpec
+
+
+def _spec(seed=3, connectivity="procedural", ne=24, ni=8):
+    """Small 2-population net exercising every generator knob: src_frac
+    subset, autapse rejection, a degenerate delay range, and a negative
+    (sign-clamped) weight distribution."""
+    area = AreaSpec("a", ne + ni, positions=np.zeros((ne + ni, 3)))
+    exc = snn.LIFParams(i_e=800.0, t_ref=1.0)
+    inh = snn.LIFParams(i_e=800.0, t_ref=1.0, tau_m=8.0)
+    pops = [Population("E", 0, 0, ne), Population("I", 0, 1, ni)]
+    projections = [
+        # recurrent, autapse-rejected, spread delays
+        Projection(0, 0, 5, 45.0, 5.0, 2, 5, channel=0, plastic=True),
+        # src_frac subset: only the first quarter of E projects to I
+        Projection(0, 1, 3, 45.0, 5.0, 1, 3, channel=0, src_frac=0.25),
+        # inhibitory (sign-clamped), degenerate delay range
+        Projection(1, 0, 4, -200.0, 10.0, 3, 3, channel=1),
+        Projection(1, 1, 2, -200.0, 10.0, 1, 2, channel=1),
+    ]
+    return NetworkSpec(areas=[area], groups=[exc, inh], populations=pops,
+                       projections=projections, max_delay=8, seed=seed,
+                       connectivity=connectivity)
+
+
+def _global_edges(spec, dec, devs):
+    """Reassemble (pre, post, w, d, ch) globally from per-shard raws,
+    canonically sorted - shard-count-independent iff the generator is."""
+    cols = [[], [], [], [], []]
+    for dev in devs:
+        raw = builder.procedural_shard_raw(spec, dec, dev)
+        for c, v in zip(cols, (raw["mirror_gids"][raw["pre_m"]],
+                               raw["owned"][raw["post_l"]], raw["w"],
+                               raw["d"], raw["ch"])):
+            c.append(v)
+    pre, post, w, d, ch = (np.concatenate(c) for c in cols)
+    order = np.lexsort((w, pre, d, post))
+    return np.stack([pre[order], post[order], d[order], ch[order]]), w[order]
+
+
+# --------------------------------------------------------------------------
+# per-row determinism: shard count, build order, chunk size
+# --------------------------------------------------------------------------
+
+def test_rows_identical_across_shard_counts_and_build_order():
+    spec = _spec()
+    ref = None
+    for n_sh in (1, 2, 4):
+        dec = builder.decompose(spec, n_sh)
+        # build shards in scrambled order - each row's stream is keyed by
+        # its GLOBAL id, so order must not matter
+        devs = list(reversed(range(n_sh)))
+        got = _global_edges(spec, dec, devs)
+        if ref is None:
+            ref = got
+        else:
+            assert np.array_equal(ref[0], got[0]), f"{n_sh} shards"
+            assert np.array_equal(ref[1], got[1]), f"{n_sh} shards"
+
+
+def test_rows_identical_across_row_chunk_sizes():
+    spec = _spec()
+    dec = builder.decompose(spec, 2)
+    a = builder.procedural_shard_raw(spec, dec, 0, row_chunk=1)
+    b = builder.procedural_shard_raw(spec, dec, 0, row_chunk=4096)
+    for k in ("owned", "mirror_gids", "pre_m", "post_l", "w", "d", "ch",
+              "pl"):
+        assert np.array_equal(a[k], b[k]), k
+
+
+def test_analytic_counts_match_generated_dims():
+    spec = _spec()
+    for n_sh in (1, 3):
+        dec = builder.decompose(spec, n_sh)
+        e_all = shard_edge_counts(spec, dec)
+        for dev in range(n_sh):
+            d = builder.procedural_shard_raw(spec, dec, dev, dims_only=True)
+            assert d["e"] == int(e_all[dev])
+            assert np.array_equal(d["row_degree"],
+                                  shard_row_degrees(spec, dec, dev))
+
+
+# --------------------------------------------------------------------------
+# rule-parameter contract per row
+# --------------------------------------------------------------------------
+
+def test_src_frac_autapse_delay_and_sign_contract():
+    spec = _spec()
+    off = spec.pop_offsets()
+    for pi, pr in enumerate(spec.projections):
+        pre, post, w, d = builder._generate_projection_edges_procedural(
+            spec, pi)
+        src_n = spec.populations[pr.src_pop].n
+        n_src = max(1, int(round(src_n * pr.src_frac)))
+        lo = int(off[pr.src_pop])
+        assert pre.min() >= lo and pre.max() < lo + n_src, \
+            f"projection {pi}: sources escaped the src_frac subset"
+        assert d.min() >= pr.delay_min and d.max() <= pr.delay_max, \
+            f"projection {pi}: delay outside [{pr.delay_min},{pr.delay_max}]"
+        if pr.delay_min == pr.delay_max:
+            assert (d == pr.delay_min).all()
+        if not pr.allow_autapse and pr.src_pop == pr.dst_pop:
+            assert (pre != post).all(), f"projection {pi}: autapse"
+        if pr.weight_std > 0:
+            assert ((w <= 0).all() if pr.weight_mean < 0 else
+                    (w >= 0).all()), f"projection {pi}: weight flipped sign"
+
+
+def test_allow_autapse_changes_the_draws_not_the_contract():
+    spec = _spec()
+    loop = dataclasses.replace(
+        spec, projections=[dataclasses.replace(spec.projections[0],
+                                               allow_autapse=True)])
+    pre, post, _, _ = builder._generate_projection_edges_procedural(loop, 0)
+    # with rejection off and k=5 over 24 sources, SOME self-edge appears
+    assert (pre == post).any(), "no autapse ever drawn - vacuous rejection"
+
+
+def test_generator_validates_impossible_rules():
+    spec = _spec()
+    bad_k = dataclasses.replace(
+        spec, projections=[dataclasses.replace(
+            spec.projections[0], indegree=24)])  # == population size
+    with pytest.raises(ValueError, match="autapse"):
+        builder.build_shards(bad_k, builder.decompose(bad_k, 1))
+    bad_d = dataclasses.replace(
+        spec, projections=[dataclasses.replace(
+            spec.projections[0], delay_max=9)])  # > max_delay
+    with pytest.raises(ValueError, match="max_delay"):
+        builder.build_shards(bad_d, builder.decompose(bad_d, 1))
+
+
+# --------------------------------------------------------------------------
+# oracle pin: shard-local build == materialized routing, bit for bit
+# --------------------------------------------------------------------------
+
+GRAPH_FIELDS = ("pre_idx", "post_idx", "delay", "channel", "plastic",
+                "weight_init", "bucket_ptr", "mirror_src_shard",
+                "mirror_src_idx", "group_id", "ext_rate", "ext_weight",
+                "global_id")
+BLOCKED_FIELDS = ("pre_idx", "post_rel", "delay", "channel", "weight",
+                  "plastic", "edge_perm")
+
+
+def assert_shards_equal(a, b):
+    assert (a.n_local, a.n_mirror, a.max_delay) == \
+           (b.n_local, b.n_mirror, b.max_delay)
+    for f in GRAPH_FIELDS:
+        x, y = getattr(a, f), getattr(b, f)
+        if x is None or y is None:
+            assert x is None and y is None, f
+            continue
+        x, y = np.asarray(x), np.asarray(y)
+        assert x.dtype == y.dtype and np.array_equal(x, y), f
+    if a.blocked is None or b.blocked is None:
+        assert a.blocked is None and b.blocked is None
+        return
+    assert (a.blocked.nb, a.blocked.eb, a.blocked.pb) == \
+           (b.blocked.nb, b.blocked.eb, b.blocked.pb)
+    for f in BLOCKED_FIELDS:
+        assert np.array_equal(np.asarray(getattr(a.blocked, f)),
+                              np.asarray(getattr(b.blocked, f))), \
+            f"blocked.{f}"
+
+
+@pytest.mark.parametrize("n_sh", [1, 4])
+def test_procedural_build_matches_materialized_oracle(n_sh):
+    spec = _spec()
+    dec = builder.decompose(spec, n_sh)
+    got = builder.build_shards(spec, dec)
+    ref = builder.build_shards(spec, dec, force_materialized=True)
+    for g, r in zip(got, ref):
+        assert_shards_equal(g, r)
+
+
+def test_materialized_spec_rejects_procedural_entrypoints():
+    spec = _spec(connectivity="materialized")
+    with pytest.raises(ValueError, match="procedural"):
+        builder.procedural_shard_raw(spec, builder.decompose(spec, 1), 0)
+
+
+# --------------------------------------------------------------------------
+# trajectory + checkpoint round-trip (spec + seed + state IS the network)
+# --------------------------------------------------------------------------
+
+def _run(spec, shards, steps=120):
+    import jax
+    from repro.core import engine
+    g = shards[0].device_arrays()
+    table = snn.make_param_table(list(spec.groups), dt=0.1)
+    cfg = engine.EngineConfig(dt=0.1, external_drive=False)
+    st = engine.init_state(g, list(spec.groups), jax.random.key(0))
+    final, bits = jax.jit(
+        lambda s: engine.run(s, g, table, cfg, steps))(st)
+    return final, np.asarray(bits)
+
+
+def test_procedural_trajectory_matches_oracle_120_steps():
+    import jax
+    spec = _spec()
+    dec = builder.decompose(spec, 1)
+    fin_p, bits_p = _run(spec, builder.build_shards(spec, dec))
+    fin_m, bits_m = _run(spec, builder.build_shards(spec, dec,
+                                                    force_materialized=True))
+    assert bits_p.sum() > 30, "vacuous: nothing spiked"
+    assert np.array_equal(bits_p, bits_m)
+    assert np.array_equal(np.asarray(fin_p.neurons.v_m),
+                          np.asarray(fin_m.neurons.v_m))
+    del jax
+
+
+def test_procedural_checkpoint_roundtrip(tmp_path):
+    import jax
+    from repro.core import engine
+    from repro.checkpoint.manager import (CheckpointManager,
+                                          network_metadata, restore_spec)
+
+    spec = _spec(seed=11)
+    dec = builder.decompose(spec, 1)
+    shards = builder.build_shards(spec, dec)
+    final, bits = _run(spec, shards)
+
+    mgr = CheckpointManager(str(tmp_path), keep=2)
+    mgr.save(120, final, metadata=network_metadata(
+        spec, seed=0, extra={"steps": 120}))
+
+    # a fresh process restores the FULL network from spec + seed + state:
+    # metadata first (no arrays), topology regenerated, state loaded into it
+    md = mgr.load_metadata()
+    spec2, seed2 = restore_spec(md)
+    assert (seed2, md["steps"]) == (0, 120)
+    assert builder.spec_to_dict(spec2) == builder.spec_to_dict(spec)
+    shards2 = builder.build_shards(spec2, builder.decompose(spec2, 1))
+    for g, r in zip(shards2, shards):
+        assert_shards_equal(g, r)
+
+    g2 = shards2[0].device_arrays()
+    target = engine.init_state(g2, list(spec2.groups),
+                               jax.random.key(seed2))
+    restored, md2 = mgr.restore(target)
+    assert md2["steps"] == 120
+
+    def as_np(x):  # typed PRNG keys compare via their key data
+        if hasattr(x, "dtype") and jax.dtypes.issubdtype(
+                x.dtype, jax.dtypes.prng_key):
+            x = jax.random.key_data(x)
+        return np.asarray(x)
+
+    for want, got in zip(jax.tree.leaves(final), jax.tree.leaves(restored)):
+        assert np.array_equal(as_np(want), as_np(got))
+
+    # ...and the restored state CONTINUES bit-identically to the original
+    table = snn.make_param_table(list(spec2.groups), dt=0.1)
+    cfg = engine.EngineConfig(dt=0.1, external_drive=False)
+    run = jax.jit(lambda s: engine.run(s, g2, table, cfg, 40))
+    _, cont_a = run(final)
+    _, cont_b = run(restored)
+    assert np.array_equal(np.asarray(cont_a), np.asarray(cont_b))

@@ -455,6 +455,47 @@ def bench_multiprocess(out, *, processes: int, devices_per_process: int,
                      overflow=rec["overflow"]))
 
 
+def bench_checkpoint(out, *, quick=False):
+    """Checkpoint save/restore overhead (fault-tolerant runtime,
+    DESIGN.md §15): a blocking save is D2H + fsync'd atomic commit, a
+    restore is read + device_put + prng re-wrap.  ``ckpt_bytes`` /
+    ``ckpt_leaves`` are structural (exact across machines - any drift
+    means the state schema changed); ``us_per_call`` is the measured
+    per-save overhead a supervised run pays every ``--save-every`` steps.
+    """
+    import tempfile
+
+    from repro.checkpoint.manager import CheckpointManager, network_metadata
+
+    scale = 0.02 if quick else 0.05
+    reps = 3 if quick else 10
+    spec, stdp, tag = _scenario_net(scale)
+    dec = builder.decompose(spec, 1)
+    g = builder.build_shards(spec, dec)[0].device_arrays()
+    st = engine.init_state(g, list(spec.groups), jax.random.key(0))
+    md = network_metadata(spec, seed=0, extra={"step": 0})
+    with tempfile.TemporaryDirectory() as tmp:
+        mgr = CheckpointManager(tmp, keep=2)
+        mgr.save(0, st, metadata=md)          # warm: dirs, fs caches
+        t0 = time.perf_counter()
+        for i in range(reps):
+            mgr.save(i + 1, st, metadata=md)
+        save_us = (time.perf_counter() - t0) / reps * 1e6
+        d = os.path.join(tmp, f"step_{reps:09d}")
+        ckpt_bytes = sum(os.path.getsize(os.path.join(d, n))
+                         for n in os.listdir(d) if n.endswith(".npy"))
+        ckpt_leaves = len(jax.tree.leaves(st))
+        t0 = time.perf_counter()
+        for _ in range(reps):
+            restored, _ = mgr.restore(st)
+        jax.block_until_ready(jax.tree.leaves(restored)[0])
+        rest_us = (time.perf_counter() - t0) / reps * 1e6
+    shared = dict(ckpt_bytes=ckpt_bytes, ckpt_leaves=ckpt_leaves,
+                  model=spec.neuron_model)
+    out(f"snn_ckpt/save/{tag}/scale{scale}", save_us, shared)
+    out(f"snn_ckpt/restore/{tag}/scale{scale}", rest_us, shared)
+
+
 def bench_mapping_comparison(out, *, quick=False):
     """Area vs Random mapping: mirrors + spike traffic (paper Fig. 8-10)."""
     scales = (0.004,) if quick else (0.004, 0.008)
@@ -576,7 +617,11 @@ def main(out, backend: str | None = None, *, wires=DEFAULT_WIRES,
          comm_modes=DEFAULT_COMM_MODES, remote_wire=None,
          processes: int | None = None, devices_per_process: int = 2,
          quick: bool = False, profile: bool = False, model: str = "lif",
-         scenario: str | None = None):
+         scenario: str | None = None, ckpt: bool = False):
+    if ckpt:
+        # checkpoint save/restore overhead only (fault-tolerance axis)
+        bench_checkpoint(out, quick=quick)
+        return
     if profile:
         # per-phase breakdown mode (sweep / neuron_update / stdp /
         # exchange) - the hot-path drill-down, instead of the scaling axes,
@@ -638,6 +683,9 @@ if __name__ == "__main__":
                          "launcher (skips the in-process axes)")
     ap.add_argument("--devices-per-process", type=int, default=2,
                     help="forced host devices per process for --processes")
+    ap.add_argument("--ckpt", action="store_true",
+                    help="checkpoint save/restore overhead only "
+                         "(fault-tolerant runtime axis, DESIGN.md §15)")
     ap.add_argument("--quick", action="store_true",
                     help="tiny config: smallest scales, few reps (CI smoke)")
     ap.add_argument("--profile", action="store_true",
@@ -680,7 +728,7 @@ if __name__ == "__main__":
          processes=args.processes,
          devices_per_process=args.devices_per_process,
          quick=args.quick, profile=args.profile,
-         model=args.model, scenario=args.scenario)
+         model=args.model, scenario=args.scenario, ckpt=args.ckpt)
     if args.json:
         os.makedirs(os.path.dirname(args.json) or ".", exist_ok=True)
         with open(args.json, "w") as f:

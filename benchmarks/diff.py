@@ -32,7 +32,7 @@ import sys
 EXACT_FIELDS = ("wire_bytes_step", "wire_bytes_intra", "wire_bytes_inter",
                 "comm_bytes_step", "remote_mirrors", "capacity", "nb",
                 "eb", "pb", "edges", "active_fraction", "overflow",
-                "n_active")
+                "n_active", "ckpt_bytes", "ckpt_leaves")
 
 
 def _records(path):

@@ -64,6 +64,9 @@ def _bench_json(path: str, scale: str) -> None:
     # committed records ARE the autotuner's measured tie-breaker
     # (block_shapes="measured:BENCH_full.json")
     bench_snn.bench_shape_tune(out, quick=quick)
+    # checkpoint save/restore overhead (fault-tolerant runtime,
+    # DESIGN.md §15); ckpt_bytes/ckpt_leaves are structural guards
+    bench_snn.bench_checkpoint(out, quick=quick)
 
     payload = {
         "meta": {

@@ -15,7 +15,17 @@ Guarantees targeted at 1000-node operation:
   never corrupts the previous checkpoint, and LATEST is updated last.
 * **Async save** - ``save(..., blocking=False)`` snapshots device arrays
   (device_get) synchronously, then writes on a background thread so the
-  train loop loses only the D2H copy time.
+  train loop loses only the D2H copy time.  A background write that FAILS
+  never advances ``LATEST`` (the commit sequence orders it last) and the
+  error is captured and re-raised by the next :meth:`wait` / :meth:`save`
+  - never silently swallowed by the daemon thread.
+* **Crash consistency** - readers never trust a single artifact:
+  ``latest_step`` verifies the manifest behind ``LATEST`` and falls back
+  to scanning committed ``step_*`` dirs; ``restore``/``load_host`` with no
+  explicit step walk backwards past corrupted checkpoints (truncated
+  ``.npy``, missing manifest, garbage json) to the newest fully readable
+  one.  An EXPLICIT ``step=`` never falls back - asking for a specific
+  checkpoint that is unreadable raises :class:`CorruptCheckpointError`.
 * **Elastic restore** - arrays are stored unsharded (per-leaf full value);
   ``restore`` re-``device_put``s with *whatever shardings the new mesh
   wants*, so restarting on a different device count / mesh shape is the
@@ -31,6 +41,7 @@ from __future__ import annotations
 import dataclasses
 import json
 import os
+import re
 import shutil
 import threading
 import time
@@ -39,7 +50,13 @@ from typing import Any
 import jax
 import numpy as np
 
-__all__ = ["CheckpointManager", "network_metadata", "restore_spec"]
+__all__ = ["CheckpointManager", "CorruptCheckpointError",
+           "network_metadata", "restore_spec"]
+
+
+class CorruptCheckpointError(RuntimeError):
+    """A checkpoint directory exists but cannot be read back (missing or
+    truncated manifest, unreadable ``.npy``, ...)."""
 
 
 # --------------------------------------------------------------------------
@@ -81,10 +98,15 @@ def _tree_paths(tree):
     return [(jax.tree_util.keystr(p), leaf) for p, leaf in leaves]
 
 
+# dict-key segments of a jax keystr: "['a']['b']" -> ["a", "b"]
+_KEYSTR_SEG = re.compile(r"\['([^']*)'\]")
+
+
 @dataclasses.dataclass
 class _Pending:
     thread: threading.Thread
     step: int
+    error: BaseException | None = None
 
 
 class CheckpointManager:
@@ -98,7 +120,7 @@ class CheckpointManager:
     def save(self, step: int, state: Any, *, metadata: dict | None = None,
              blocking: bool = True) -> None:
         """Snapshot ``state`` (any pytree of arrays) at ``step``."""
-        self.wait()  # one in-flight save at a time
+        self.wait()  # one in-flight save at a time (re-raises its failure)
         named = _tree_paths(state)
 
         def to_host(v):
@@ -137,6 +159,8 @@ class CheckpointManager:
             os.rename(tmp, final)
             # LATEST must itself commit atomically (readers may race the
             # async writer): write-then-rename, never truncate in place.
+            # Ordering it LAST is what lets a failed write above leave
+            # LATEST pointing at the previous good checkpoint.
             latest_tmp = os.path.join(self.dir, "LATEST.tmp")
             with open(latest_tmp, "w") as f:
                 f.write(str(step))
@@ -148,22 +172,136 @@ class CheckpointManager:
         if blocking:
             write()
         else:
-            th = threading.Thread(target=write, daemon=True)
-            th.start()
-            self._pending = _Pending(thread=th, step=step)
+            pending = _Pending(thread=None, step=step)  # type: ignore
+
+            def guarded():
+                try:
+                    write()
+                except BaseException as e:  # surfaced by the next wait()
+                    pending.error = e
+
+            pending.thread = threading.Thread(target=guarded, daemon=True)
+            self._pending = pending
+            pending.thread.start()
 
     def wait(self) -> None:
+        """Join any in-flight async save and RE-RAISE its failure (once).
+
+        A failed background write never advanced ``LATEST``, so after the
+        raise the manager still points at the last good checkpoint; the
+        caller decides whether to retry the save or restore.
+        """
+        p = self._pending
+        if p is None:
+            return
+        p.thread.join()
+        self._pending = None
+        if p.error is not None:
+            raise RuntimeError(
+                f"async checkpoint save at step {p.step} failed "
+                f"(LATEST still points at the previous committed step)"
+            ) from p.error
+
+    def _drain(self) -> None:
+        """Settle the writer WITHOUT consuming a captured failure.
+
+        Restore paths must not turn a failed (uncommitted) save into a
+        restore error - the failure stays pending for the next
+        :meth:`wait`/:meth:`save` to surface.
+        """
         if self._pending is not None:
             self._pending.thread.join()
-            self._pending = None
 
     # --------------------------------------------------------------- restore
+    def _step_dir(self, step: int) -> str:
+        return os.path.join(self.dir, f"step_{step:09d}")
+
+    def _committed_steps(self) -> list[int]:
+        """Step numbers with a committed (non-``.tmp``) directory, sorted."""
+        out = []
+        for n in os.listdir(self.dir):
+            if n.startswith("step_") and not n.endswith(".tmp"):
+                try:
+                    out.append(int(n.split("_")[1]))
+                except ValueError:
+                    continue
+        return sorted(out)
+
+    def _manifest_ok(self, step: int) -> bool:
+        try:
+            with open(os.path.join(self._step_dir(step),
+                                   "manifest.json")) as f:
+                json.load(f)
+            return True
+        except (OSError, ValueError):
+            return False
+
     def latest_step(self) -> int | None:
+        """Newest committed checkpoint step, or None.
+
+        ``LATEST`` is a hint, not an authority: if it is unreadable, or the
+        step directory it names is missing or has an unreadable/truncated
+        manifest (a crash between commit and GC, an operator ``rm``), fall
+        back to scanning the committed ``step_*`` dirs for the newest one
+        whose manifest parses - the restore path must survive exactly the
+        failures checkpointing exists for.
+        """
+        cand = None
         p = os.path.join(self.dir, "LATEST")
-        if not os.path.exists(p):
-            return None
-        with open(p) as f:
-            return int(f.read().strip())
+        if os.path.exists(p):
+            try:
+                with open(p) as f:
+                    cand = int(f.read().strip())
+            except (OSError, ValueError):
+                cand = None
+        if cand is not None and self._manifest_ok(cand):
+            return cand
+        for s in reversed(self._committed_steps()):
+            if self._manifest_ok(s):
+                return s
+        return None
+
+    def _read_step(self, step: int, *, with_arrays: bool = True):
+        """(manifest, arrays|None) for one step; CorruptCheckpointError on
+        ANY read/parse failure so callers can fall back to an older step."""
+        d = self._step_dir(step)
+        try:
+            with open(os.path.join(d, "manifest.json")) as f:
+                meta = json.load(f)
+            arrs = None
+            if with_arrays:
+                arrs = [np.load(os.path.join(d, rec["file"]),
+                                allow_pickle=False)
+                        for rec in meta["leaves"]]
+        except (OSError, EOFError, KeyError, ValueError) as e:
+            raise CorruptCheckpointError(
+                f"checkpoint step {step} in {self.dir} is unreadable: "
+                f"{e}") from e
+        return meta, arrs
+
+    def _resolve(self, step: int | None, *, with_arrays: bool = True):
+        """(step, manifest, arrays).  Explicit ``step`` reads exactly that
+        checkpoint (corruption raises); ``step=None`` walks backwards from
+        the newest committed step past corrupted ones."""
+        if step is not None:
+            meta, arrs = self._read_step(step, with_arrays=with_arrays)
+            return step, meta, arrs
+        tried: list[int] = []
+        cand = self.latest_step()
+        committed = self._committed_steps()
+        while cand is not None:
+            try:
+                meta, arrs = self._read_step(cand, with_arrays=with_arrays)
+                return cand, meta, arrs
+            except CorruptCheckpointError:
+                tried.append(cand)
+                older = [s for s in committed if s < cand]
+                cand = older[-1] if older else None
+        if tried:
+            raise CorruptCheckpointError(
+                f"no readable checkpoint in {self.dir}; tried steps "
+                f"{tried}")
+        raise FileNotFoundError(f"no checkpoint in {self.dir}")
 
     def load_metadata(self, step: int | None = None) -> dict:
         """Read a checkpoint's metadata WITHOUT loading any arrays.
@@ -172,13 +310,36 @@ class CheckpointManager:
         before it can rebuild consts and allocate the target state tree,
         so metadata must be readable first.
         """
-        self.wait()
-        step = step if step is not None else self.latest_step()
-        if step is None:
-            raise FileNotFoundError(f"no checkpoint in {self.dir}")
-        d = os.path.join(self.dir, f"step_{step:09d}")
-        with open(os.path.join(d, "manifest.json")) as f:
-            return json.load(f)["metadata"]
+        self._drain()
+        _, meta, _ = self._resolve(step, with_arrays=False)
+        return meta["metadata"]
+
+    def load_host(self, step: int | None = None
+                  ) -> tuple[int, dict, dict]:
+        """Load a checkpoint as a nested host-side dict (no device_put).
+
+        Returns ``(step, tree, metadata)`` where ``tree`` reconstructs the
+        saved dict nesting from the manifest's key paths; PRNG leaves come
+        back as raw key data.  This is the restart path for a state that
+        will be RE-SHAPED before placement (elastic shrink-restart:
+        :func:`repro.runtime.elastic.shrink_remap_state`), where no target
+        tree of matching structure exists yet.  ``step=None`` falls back
+        past corrupted checkpoints like :meth:`restore`.
+        """
+        self._drain()
+        step, meta, arrs = self._resolve(step, with_arrays=True)
+        tree: dict = {}
+        for rec, arr in zip(meta["leaves"], arrs):
+            segs = _KEYSTR_SEG.findall(rec["key"])
+            if not segs:
+                raise CorruptCheckpointError(
+                    f"step {step}: leaf key {rec['key']!r} is not a dict "
+                    "path - load_host needs a dict-saved state")
+            node = tree
+            for s in segs[:-1]:
+                node = node.setdefault(s, {})
+            node[segs[-1]] = arr
+        return step, tree, meta["metadata"]
 
     def restore(self, target_tree: Any, step: int | None = None,
                 *, shardings: Any = None) -> tuple[Any, dict]:
@@ -186,14 +347,12 @@ class CheckpointManager:
 
         ``shardings`` (optional, same structure) re-shards every leaf for
         the *current* mesh - elastic restart.  Returns (state, metadata).
+        ``step=None`` restores the newest READABLE checkpoint (walking
+        past corrupted ones); a shape mismatch against ``target_tree`` is
+        a caller error and raises ValueError without falling back.
         """
-        self.wait()
-        step = step if step is not None else self.latest_step()
-        if step is None:
-            raise FileNotFoundError(f"no checkpoint in {self.dir}")
-        d = os.path.join(self.dir, f"step_{step:09d}")
-        with open(os.path.join(d, "manifest.json")) as f:
-            meta = json.load(f)
+        self._drain()
+        step, meta, arrs = self._resolve(step, with_arrays=True)
         leaves, treedef = jax.tree.flatten(target_tree)
         if len(leaves) != len(meta["leaves"]):
             raise ValueError(
@@ -202,8 +361,8 @@ class CheckpointManager:
         sh_leaves = (jax.tree.flatten(shardings)[0] if shardings is not None
                      else [None] * len(leaves))
         out = []
-        for tgt, rec, sh in zip(leaves, meta["leaves"], sh_leaves):
-            arr = np.load(os.path.join(d, rec["file"]))
+        for tgt, rec, arr, sh in zip(leaves, meta["leaves"], arrs,
+                                     sh_leaves):
             if rec.get("prng"):
                 out.append(jax.random.wrap_key_data(jax.device_put(arr)))
                 continue
@@ -218,9 +377,6 @@ class CheckpointManager:
 
     # ------------------------------------------------------------------- gc
     def _gc(self) -> None:
-        steps = sorted(
-            int(n.split("_")[1]) for n in os.listdir(self.dir)
-            if n.startswith("step_") and not n.endswith(".tmp"))
+        steps = self._committed_steps()
         for s in steps[:-self.keep]:
-            shutil.rmtree(os.path.join(self.dir, f"step_{s:09d}"),
-                          ignore_errors=True)
+            shutil.rmtree(self._step_dir(s), ignore_errors=True)

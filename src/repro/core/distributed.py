@@ -73,7 +73,8 @@ __all__ = ["mesh_decompose", "StackedNetwork", "prepare_stacked",
            "DistributedConfig", "make_distributed_step", "init_stacked_state",
            "wire_bytes_per_step", "wire_bytes_for_dims", "wire_bytes_split",
            "stacked_consts", "check_net_backend", "procedural_stack_plan",
-           "resolve_stack_pads", "procedural_shard_graphs"]
+           "resolve_stack_pads", "procedural_shard_graphs",
+           "advance_key_data"]
 
 
 # --------------------------------------------------------------------------
@@ -673,6 +674,25 @@ def init_stacked_state(net: StackedNetwork, groups, seed: int = 0,
         weights_layout=weights_layout,
         neuron_model=model.name,
     )
+
+
+def advance_key_data(key_data, n_steps: int):
+    """Advance (S, 2) raw per-shard key data by ``n_steps`` step-loop
+    splits.
+
+    The distributed step evolves each shard's stream as ``key, sub =
+    split(key)`` once per step, so the stream after ``n_steps`` is
+    ``split(key)[0]`` applied ``n_steps`` times.  Restart tooling that
+    re-derives keys for a NEW shard count (elastic shrink) uses this to
+    land on exactly the stream an uninterrupted run would hold.
+    """
+    keys = jax.random.wrap_key_data(jnp.asarray(key_data))
+
+    def body(_, ks):
+        return jax.vmap(lambda k: jax.random.split(k)[0])(ks)
+
+    keys = jax.lax.fori_loop(0, int(n_steps), body, keys)
+    return jax.random.key_data(keys)
 
 
 def _exchange_issue(bits, g, cfg: DistributedConfig,

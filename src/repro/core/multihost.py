@@ -57,7 +57,9 @@ from repro.core import snn
 __all__ = ["initialize", "detect_cluster_env", "HostTopology",
            "make_host_mesh", "host_topology", "local_shard_slice",
            "shard_stacked", "replicate_to_host", "make_multihost_step",
-           "init_multihost_state", "prepare_stacked_local"]
+           "init_multihost_state", "prepare_stacked_local",
+           "plan_elastic_mesh", "state_from_fields",
+           "snapshot_host_state"]
 
 #: default coordinator port when only a nodelist is known (SLURM);
 #: override with REPRO_COORD_PORT
@@ -205,6 +207,26 @@ def make_host_mesh(n_rows: int, row_width: int,
                 "Area-Processes rows align to hosts (intra-row gathers "
                 "must stay intra-host)")
     return Mesh(grid, axis_names)
+
+
+def plan_elastic_mesh(row_width: int,
+                      axis_names: tuple[str, ...] = ("data", "model")
+                      ) -> Mesh:
+    """Host-aligned mesh for WHATEVER devices this incarnation has.
+
+    The elastic-restart entry point: instead of a fixed (n_rows,
+    row_width) the caller states only the row width, and the elastic row
+    plan (:func:`repro.runtime.elastic.plan_mesh`) re-runs for the
+    current world size - so a gang restarted on fewer processes lands on
+    the correspondingly smaller Area-Processes decomposition with zero
+    extra plumbing.  Degrades the row width (halving) only when fewer
+    devices than one row survive.
+    """
+    from repro.runtime.elastic import plan_mesh
+    plan = plan_mesh(jax.device_count(), model_width=row_width,
+                     prefer_pods=False)
+    n_rows, width = plan.shape
+    return make_host_mesh(n_rows, width, axis_names)
 
 
 def host_topology(mesh: Mesh) -> HostTopology:
@@ -478,9 +500,50 @@ def init_multihost_state(net: dist.StackedNetwork, groups, mesh: Mesh,
                                    weight_dtype=weight_dtype, sweep=sweep,
                                    neuron_model=neuron_model)
     meta = {"weights_layout", "neuron_model"}   # static markers, not leaves
-    sharded = shard_stacked(
+    return state_from_fields(
         {f.name: getattr(full, f.name)
          for f in dataclasses.fields(full) if f.name not in meta},
-        mesh, local_slice=net.local_slice)
-    return dist.DistState(weights_layout=full.weights_layout,
-                          neuron_model=full.neuron_model, **sharded)
+        mesh, local_slice=net.local_slice,
+        weights_layout=full.weights_layout,
+        neuron_model=full.neuron_model)
+
+
+def state_from_fields(fields: dict, mesh: Mesh, *,
+                      local_slice: tuple[int, int] | None = None,
+                      weights_layout: str = "flat",
+                      neuron_model: str = "lif") -> dist.DistState:
+    """Shard a host-side DistState field dict onto the mesh.
+
+    The one place (S, ...) state arrays become global arrays: fresh init
+    (:func:`init_multihost_state`), same-topology checkpoint restore
+    (slice the :func:`snapshot_host_state` dict to the owned rows) and
+    elastic shrink-restart (:func:`repro.runtime.elastic.
+    shrink_remap_state` output) all feed through here, so placement rules
+    can never diverge between the three.  With ``local_slice`` the arrays
+    hold only this process's rows (shipped verbatim); otherwise each
+    process contributes its slice of the full value.
+    """
+    sharded = shard_stacked(fields, mesh, local_slice=local_slice)
+    return dist.DistState(weights_layout=weights_layout,
+                          neuron_model=neuron_model, **sharded)
+
+
+def snapshot_host_state(state: dist.DistState, mesh: Mesh) -> dict:
+    """Full host-side field dict of a (possibly multi-process) DistState.
+
+    One replicating collective per leaf, so EVERY process must call this
+    at the same point in its step loop (the SimulationSupervisor's
+    ``snapshot_fn`` contract) and every process gets the full (S, ...)
+    value - which is what makes the written checkpoint mesh-agnostic and
+    hence restorable onto a DIFFERENT process count.  Static markers
+    (weights_layout, neuron_model) are NOT captured: they are re-derived
+    from the restoring run's config, which must request the same layout.
+    """
+    meta = {"weights_layout", "neuron_model"}
+    out = {}
+    for f in dataclasses.fields(state):
+        if f.name in meta:
+            continue
+        v = getattr(state, f.name)
+        out[f.name] = jax.tree.map(lambda a: replicate_to_host(a, mesh), v)
+    return out

@@ -109,16 +109,73 @@ def build_parser() -> argparse.ArgumentParser:
                     help="also time a per-step loop after the trajectory run")
     ap.add_argument("--out", default="experiments/multihost.json")
     ap.add_argument("--timeout", type=float, default=900.0)
+    # --- fault-tolerant supervised runtime (DESIGN.md §15) ---------------
+    ap.add_argument("--save-every", type=int, default=None,
+                    help="checkpoint every N steps and run under gang "
+                         "supervision: dead/hung workers are detected, the "
+                         "gang is torn down and relaunched from the latest "
+                         "committed checkpoint (enables the fault-tolerant "
+                         "supervised runtime)")
+    ap.add_argument("--ckpt-dir", default=None,
+                    help="checkpoint directory (default: <out>.ckpt)")
+    ap.add_argument("--keep-ckpts", type=int, default=3,
+                    help="checkpoints retained by the manager's GC")
+    ap.add_argument("--fault-inject", default=None,
+                    help="deterministic fault specs "
+                         "kind@step[:factor][#rank], comma-separated; "
+                         "kinds: kill|hang|slow|ckpt-corrupt (e.g. "
+                         "'kill@70#1'); $REPRO_FAULT_INJECT works too")
+    ap.add_argument("--heartbeat-timeout", type=float, default=300.0,
+                    help="seconds without a worker heartbeat before the "
+                         "gang is declared hung and restarted")
+    ap.add_argument("--max-restarts", type=int, default=3,
+                    help="gang restarts before the supervisor aborts")
+    ap.add_argument("--backoff", type=float, default=0.25,
+                    help="initial gang-restart backoff seconds (doubles "
+                         "per restart)")
+    ap.add_argument("--backoff-cap", type=float, default=30.0,
+                    help="ceiling on the exponential restart backoff")
+    ap.add_argument("--elastic", action="store_true",
+                    help="on worker loss, restart the gang on the "
+                         "SURVIVING process count (elastic shrink-restart "
+                         "from the same procedural checkpoint)")
     # worker-only (set by the launcher when spawning children)
     ap.add_argument("--process-id", type=int, default=None,
                     help=argparse.SUPPRESS)
     ap.add_argument("--coordinator", default=None, help=argparse.SUPPRESS)
+    ap.add_argument("--heartbeat-dir", default=None, help=argparse.SUPPRESS)
+    ap.add_argument("--incarnation", type=int, default=0,
+                    help=argparse.SUPPRESS)
     return ap
 
 
 # --------------------------------------------------------------------------
 # launcher role
 # --------------------------------------------------------------------------
+
+def _child_env(args) -> dict:
+    src = os.path.join(os.path.dirname(__file__), "..", "..")
+    return dict(
+        os.environ,
+        XLA_FLAGS="--xla_force_host_platform_device_count="
+                  f"{args.devices_per_process}",
+        PYTHONPATH=os.pathsep.join(
+            p for p in (os.path.abspath(src),
+                        os.environ.get("PYTHONPATH")) if p),
+    )
+
+
+def _spawn_gang(args, coordinator: str, env: dict) -> list:
+    base = [sys.executable, "-m", "repro.launch.multihost",
+            "--coordinator", coordinator]
+    for k, v in vars(args).items():
+        if k in ("process_id", "coordinator") or v is None or v is False:
+            continue
+        flag = "--" + k.replace("_", "-")
+        base += [flag] if v is True else [flag, str(v)]
+    return [subprocess.Popen(base + ["--process-id", str(i)], env=env)
+            for i in range(args.processes)]
+
 
 def run_launcher(args: argparse.Namespace) -> dict:
     """Spawn the worker processes, wait, return process 0's result dict."""
@@ -127,26 +184,10 @@ def run_launcher(args: argparse.Namespace) -> dict:
             f"--row-width {args.row_width} must divide "
             f"--devices-per-process {args.devices_per_process} so mesh rows "
             "align to hosts")
-    coordinator = f"localhost:{_free_port()}"
-    src = os.path.join(os.path.dirname(__file__), "..", "..")
-    env = dict(
-        os.environ,
-        XLA_FLAGS="--xla_force_host_platform_device_count="
-                  f"{args.devices_per_process}",
-        PYTHONPATH=os.pathsep.join(
-            p for p in (os.path.abspath(src),
-                        os.environ.get("PYTHONPATH")) if p),
-    )
     os.makedirs(os.path.dirname(args.out) or ".", exist_ok=True)
-    base = [sys.executable, "-m", "repro.launch.multihost",
-            "--coordinator", coordinator]
-    for k, v in vars(args).items():
-        if k in ("process_id", "coordinator") or v is None or v is False:
-            continue
-        flag = "--" + k.replace("_", "-")
-        base += [flag] if v is True else [flag, str(v)]
-    procs = [subprocess.Popen(base + ["--process-id", str(i)], env=env)
-             for i in range(args.processes)]
+    if args.save_every:
+        return _run_launcher_supervised(args)
+    procs = _spawn_gang(args, f"localhost:{_free_port()}", _child_env(args))
     # poll ALL workers: one crashing (e.g. a lost coordinator race) must
     # fail the launch immediately, not after its peers hit the gloo/
     # --timeout ceiling waiting for it
@@ -172,24 +213,128 @@ def run_launcher(args: argparse.Namespace) -> dict:
         return json.load(f)
 
 
+def _run_gang(args, deadline: float) -> list[tuple[int, object]]:
+    """One gang incarnation: spawn, watch exits AND heartbeats.
+
+    Returns [] on success or [(rank, why), ...] on failure, with every
+    worker reaped - the caller decides restart vs abort.  Heartbeat files
+    (written per step by the workers' SimulationSupervisor into this
+    incarnation's private --heartbeat-dir) catch the failure mode exit
+    codes cannot: a HUNG worker that never dies.
+    """
+    from repro.runtime.supervisor import HeartbeatFile
+    procs = _spawn_gang(args, f"localhost:{_free_port()}", _child_env(args))
+    spawn_t = time.time()
+    pending = dict(enumerate(procs))
+    failed: list[tuple[int, object]] = []
+    while pending and not failed and time.time() < deadline:
+        for i, p in list(pending.items()):
+            rc = p.poll()
+            if rc is not None:
+                del pending[i]
+                if rc != 0:
+                    failed.append((i, rc))
+        if pending and not failed and args.heartbeat_timeout:
+            now = time.time()
+            ages = HeartbeatFile.ages(args.heartbeat_dir, now)
+            for i in pending:
+                # a worker that never beat is aged from gang spawn time
+                if ages.get(i, now - spawn_t) > args.heartbeat_timeout:
+                    failed.append((i, "hung"))
+        if pending and not failed:
+            time.sleep(0.2)
+    if pending and not failed:   # overall deadline hit
+        failed = [(i, "timeout") for i in pending]
+    # tear down the REMAINING gang: a half-dead gang cannot make progress
+    # (the collectives block), so recovery is all-or-nothing
+    for i, p in pending.items():
+        p.kill()
+        p.wait()
+    return failed
+
+
+def _run_launcher_supervised(args) -> dict:
+    """Gang supervision: relaunch from the latest committed checkpoint.
+
+    Detects dead (exit code) and hung (heartbeat timeout) workers, tears
+    the gang down, backs off per RestartPolicy (real capped-exponential
+    delays) and relaunches; workers resume from the newest readable
+    checkpoint on their own.  With ``--elastic`` a lost worker shrinks the
+    next incarnation to the surviving process count - the workers re-run
+    the Area-Processes decomposition for the smaller mesh and remap the
+    checkpoint onto it (repro.runtime.elastic.shrink_remap_state).  The
+    result record gains a ``supervision`` block: restart events, per-tier
+    retry counts and the actual backoff delays.
+    """
+    from repro.runtime import elastic
+    from repro.runtime.fault import RestartPolicy
+    args.ckpt_dir = args.ckpt_dir or args.out + ".ckpt"
+    os.makedirs(args.ckpt_dir, exist_ok=True)
+    policy = RestartPolicy(max_restarts=args.max_restarts,
+                           backoff_s=args.backoff, backoff_mult=2.0,
+                           backoff_cap_s=args.backoff_cap)
+    events: list[str] = []
+    delays: list[float] = []
+    tiers = {"same": 0, "shrink": 0}
+    deadline = time.time() + args.timeout
+    incarnation = 0
+    while True:
+        args.incarnation = incarnation
+        # per-incarnation heartbeat dir: a dead gang's last beats must not
+        # read as liveness for the next one
+        args.heartbeat_dir = os.path.join(args.ckpt_dir,
+                                          f"hb_{incarnation:03d}")
+        failed = _run_gang(args, deadline)
+        if not failed:
+            break
+        events.append(
+            f"fail@inc{incarnation}:"
+            + ",".join(f"{r}={c}" for r, c in sorted(failed)))
+        if time.time() >= deadline:
+            raise SystemExit(
+                f"supervised launch timed out; events={events}")
+        action, delay = policy.next_action()
+        if action == "abort":
+            raise SystemExit(
+                f"gang exceeded max restarts ({policy.max_restarts}); "
+                f"events={events}")
+        delays.append(delay)
+        events.append(f"backoff:{delay:.6g}")
+        time.sleep(delay)
+        lost = {r for r, _ in failed}
+        if args.elastic and args.processes > 1:
+            new_p = max(args.processes - len(lost), 1)
+            plan = elastic.plan_mesh(new_p * args.devices_per_process,
+                                     model_width=args.row_width,
+                                     prefer_pods=False)
+            events.append(f"shrink:{args.processes}->{new_p}"
+                          f"(mesh {plan.shape[0]}x{plan.shape[1]})")
+            args.processes = new_p
+            tiers["shrink"] += 1
+        else:
+            tiers["same"] += 1
+        incarnation += 1
+    with open(args.out) as f:
+        rec = json.load(f)
+    rec["supervision"] = dict(
+        restarts=policy.restarts, incarnations=incarnation + 1,
+        tiers=tiers, events=events, delays=delays,
+        processes_final=args.processes, elastic=bool(args.elastic))
+    with open(args.out, "w") as f:
+        json.dump(rec, f, indent=1)
+    return rec
+
+
 # --------------------------------------------------------------------------
 # worker role
 # --------------------------------------------------------------------------
 
-def run_worker(args: argparse.Namespace) -> dict | None:
-    # imports deferred so the LAUNCHER process never touches jax (the
-    # children must see XLA_FLAGS before their first jax import)
-    import jax
-    import numpy as np
+def _build_spec(args):
+    """Deterministic (spec, stdp, drive_boost) every rank agrees on."""
+    import dataclasses
 
-    from repro.core import backends as backends_mod
-    from repro.core import engine, models, multihost
-    from repro.core import distributed as dist
+    from repro.core import models
 
-    multihost.initialize(coordinator_address=args.coordinator,
-                         num_processes=args.processes,
-                         process_id=args.process_id)
-    n_rows = jax.device_count() // args.row_width
     if args.model:
         spec, stdp = models.model_demo(args.model, scale=args.scale,
                                        stdp=True)
@@ -199,7 +344,6 @@ def run_worker(args: argparse.Namespace) -> dict | None:
     if drive_boost is None:
         drive_boost = (3.0 if not args.model
                        and args.scenario == "hpc_benchmark" else 1.0)
-    import dataclasses
     if drive_boost != 1.0:
         pops = [dataclasses.replace(p, ext_rate_hz=p.ext_rate_hz
                                     * drive_boost)
@@ -207,6 +351,26 @@ def run_worker(args: argparse.Namespace) -> dict | None:
         spec = dataclasses.replace(spec, populations=pops)
     if args.connectivity:
         spec = dataclasses.replace(spec, connectivity=args.connectivity)
+    return spec, stdp, drive_boost
+
+
+def run_worker(args: argparse.Namespace) -> dict | None:
+    if args.save_every:
+        return _run_worker_supervised(args)
+    # imports deferred so the LAUNCHER process never touches jax (the
+    # children must see XLA_FLAGS before their first jax import)
+    import jax
+    import numpy as np
+
+    from repro.core import backends as backends_mod
+    from repro.core import engine, multihost
+    from repro.core import distributed as dist
+
+    multihost.initialize(coordinator_address=args.coordinator,
+                         num_processes=args.processes,
+                         process_id=args.process_id)
+    n_rows = jax.device_count() // args.row_width
+    spec, stdp, drive_boost = _build_spec(args)
     backend = backends_mod.get_backend(args.sweep)
     dec = dist.mesh_decompose(spec, n_rows, args.row_width)
     mesh = multihost.make_host_mesh(n_rows, args.row_width)
@@ -278,6 +442,217 @@ def run_worker(args: argparse.Namespace) -> dict | None:
         print(json.dumps(rec))
         return rec
     return None
+
+
+def _run_worker_supervised(args: argparse.Namespace) -> dict | None:
+    """Checkpointed, fault-injected worker under gang supervision.
+
+    Differences from the plain worker:
+
+    * mesh comes from :func:`repro.core.multihost.plan_elastic_mesh`
+      (whatever THIS incarnation's world holds), so a shrunken gang lands
+      on the smaller Area-Processes decomposition automatically;
+    * the trajectory runs as a per-step jitted python loop under
+      :class:`repro.runtime.supervisor.SimulationSupervisor` - heartbeat
+      per step, fault injection per step, async checkpoint (full
+      mesh-agnostic host snapshot + network_metadata) every
+      ``--save-every`` steps;
+    * on restart the worker resumes from the newest readable checkpoint:
+      same topology -> overlay the snapshot's owned rows onto a fresh
+      baseline; different topology -> ``elastic.shrink_remap_state``;
+    * rank 0 flushes the spike-trajectory prefix atomically right before
+      each checkpoint commit, so a resumed run can still report the FULL
+      trajectory hash;
+    * hashes are computed over GLOBAL-order arrays (``hash_order:
+      "global"``) - comparable across process counts, which is what the
+      shrink-restart bit-exactness contract is pinned against.
+    """
+    import dataclasses
+
+    import jax
+    import numpy as np
+
+    from repro.checkpoint.manager import CheckpointManager, network_metadata
+    from repro.core import backends as backends_mod
+    from repro.core import engine, multihost
+    from repro.core import distributed as dist
+    from repro.runtime import elastic, inject
+    from repro.runtime.supervisor import HeartbeatFile, SimulationSupervisor
+
+    multihost.initialize(coordinator_address=args.coordinator,
+                         num_processes=args.processes,
+                         process_id=args.process_id)
+    rank = jax.process_index()
+    spec, stdp, drive_boost = _build_spec(args)
+    backend = backends_mod.get_backend(args.sweep)
+    mesh = multihost.plan_elastic_mesh(args.row_width)
+    n_rows, row_width = np.asarray(mesh.devices, dtype=object).shape
+    dec = dist.mesh_decompose(spec, n_rows, row_width)
+    if spec.connectivity == "procedural":
+        net = multihost.prepare_stacked_local(
+            spec, dec, n_rows, row_width, mesh,
+            with_blocked=backend.needs_blocked)
+    else:
+        net = dist.prepare_stacked(spec, dec, n_rows, row_width,
+                                   with_blocked=backend.needs_blocked)
+    cfg = dist.DistributedConfig(
+        engine=engine.EngineConfig(dt=0.1,
+                                   stdp=None if args.no_stdp else stdp,
+                                   sweep=args.sweep,
+                                   neuron_model=spec.neuron_model),
+        comm_mode=args.comm_mode, overlap=not args.no_overlap,
+        spike_wire=args.wire, spike_wire_remote=args.wire_remote)
+    step, consts = multihost.make_multihost_step(net, mesh,
+                                                 list(spec.groups), cfg)
+
+    ckpt_dir = args.ckpt_dir or args.out + ".ckpt"
+    mgr = CheckpointManager(ckpt_dir, keep=args.keep_ckpts)
+    lo, hi = ((0, net.n_shards) if net.local_slice is None
+              else net.local_slice)
+    owner, li = dec.owner, dec.local_index()
+    meta_fields = ("weights_layout", "neuron_model")
+
+    # fresh baseline: restores OVERLAY onto it, because None/empty-dict
+    # fields (drive_key, a model's empty aux) leave no checkpoint leaves
+    base = dist.init_stacked_state(net, list(spec.groups), seed=args.seed,
+                                   sweep=args.sweep,
+                                   neuron_model=spec.neuron_model)
+    carried = {"wire_overflow": 0, "gate_overflow": 0}
+    resumed_from = None
+    start_step = 0
+    latest = mgr.latest_step()
+    if latest is None:
+        fields = {f.name: getattr(base, f.name)
+                  for f in dataclasses.fields(base)
+                  if f.name not in meta_fields}
+    else:
+        got, host, md = mgr.load_host()
+        if md.get("sweep", args.sweep) != args.sweep:
+            raise SystemExit(
+                f"checkpoint at step {got} was written by sweep="
+                f"{md['sweep']}, cannot resume with {args.sweep}")
+        old_rows = int(md.get("n_rows", n_rows))
+        old_width = int(md.get("row_width", row_width))
+        if (old_rows, old_width) == (n_rows, row_width):
+            fields = {}
+            for f in dataclasses.fields(base):
+                if f.name in meta_fields:
+                    continue
+                v = getattr(base, f.name)
+                hv = host.get(f.name)
+                if isinstance(v, dict):
+                    fields[f.name] = {
+                        k: (np.asarray(hv[k])[lo:hi]
+                            if hv is not None and k in hv else np.array(a))
+                        for k, a in v.items()}
+                elif v is None or hv is None:
+                    fields[f.name] = v
+                else:
+                    fields[f.name] = np.asarray(hv)[lo:hi]
+        else:
+            fields, carried = elastic.shrink_remap_state(
+                spec, args.seed, host, step=got,
+                old_n_rows=old_rows, old_row_width=old_width,
+                new_dec=dec, new_net=net, groups=list(spec.groups),
+                sweep=args.sweep, neuron_model=spec.neuron_model,
+                stdp_active=not args.no_stdp)
+        start_step = resumed_from = got
+    state = multihost.state_from_fields(
+        fields, mesh, local_slice=net.local_slice,
+        weights_layout=base.weights_layout, neuron_model=base.neuron_model)
+
+    # global-order spike trajectory, one (N,) uint8 row per step; the
+    # committed prefix rides next to the checkpoints (atomic replace, not
+    # GC'd) so a restarted incarnation reloads exactly the rows matching
+    # its restored step
+    traj_path = lambda s: os.path.join(ckpt_dir, f"traj_{s:09d}.npy")
+    bits_rows: list[np.ndarray] = []
+    if resumed_from:
+        prefix = np.load(traj_path(resumed_from))
+        if prefix.shape[0] != resumed_from:
+            raise SystemExit(
+                f"trajectory prefix {traj_path(resumed_from)} holds "
+                f"{prefix.shape[0]} rows, checkpoint says {resumed_from}")
+        bits_rows = [np.asarray(r, np.uint8) for r in prefix]
+
+    hb = (HeartbeatFile(args.heartbeat_dir, rank)
+          if args.heartbeat_dir else None)
+    injector = inject.FaultInjector.from_args(
+        args.fault_inject, rank=rank, mode="process",
+        state_dir=os.path.join(ckpt_dir, "faults"), ckpt_dir=ckpt_dir)
+
+    def metadata_fn(s, _state):
+        return network_metadata(spec, seed=args.seed, extra=dict(
+            step=s, n_rows=n_rows, row_width=row_width, sweep=args.sweep,
+            neuron_model=spec.neuron_model, stdp=not args.no_stdp,
+            connectivity=spec.connectivity))
+
+    def flush_traj(s, _state):
+        if rank != 0:
+            return
+        tmp = traj_path(s) + ".tmp"
+        with open(tmp, "wb") as f:   # file object: no np.save .npy-append
+            np.save(f, np.stack(bits_rows[:s]).astype(np.uint8))
+        os.replace(tmp, traj_path(s))
+
+    jstep = jax.jit(step)
+
+    def step_fn(s, _i):
+        return jstep(s, consts)
+
+    def on_step(sstep, _state, bits):
+        # replicate_to_host is a collective: every rank appends in lockstep
+        b = np.asarray(multihost.replicate_to_host(bits, mesh), np.uint8)
+        bits_rows.append(b[owner, li])
+
+    sup = SimulationSupervisor(
+        mgr if rank == 0 else None, save_every=args.save_every,
+        heartbeat=hb, injector=injector,
+        snapshot_fn=lambda s: multihost.snapshot_host_state(s, mesh),
+        metadata_fn=metadata_fn, pre_save=flush_traj, restore_fn=None)
+    t0 = time.time()
+    final, _ = sup.run(state, step_fn, args.steps, start_step=start_step,
+                       on_step=on_step)
+    elapsed = time.time() - t0
+
+    bits_all = np.stack(bits_rows).astype(np.uint8)      # (steps, N)
+    vm_g = np.asarray(multihost.replicate_to_host(final.v_m, mesh))[
+        owner, li]                                       # (N,) global order
+    overflow = carried["wire_overflow"] + int(
+        multihost.replicate_to_host(final.wire_overflow, mesh).sum())
+    gate = carried["gate_overflow"] + int(
+        multihost.replicate_to_host(final.gate_overflow, mesh).sum())
+    if rank != 0:
+        return None
+    sha = lambda a: hashlib.sha256(
+        np.ascontiguousarray(a).tobytes()).hexdigest()
+    split = dist.wire_bytes_split(
+        args.comm_mode, args.wire, args.wire_remote, n_shards=net.n_shards,
+        row_width=net.row_width, n_local=net.n_local, b_pad=net.b_pad)
+    rec = dict(
+        processes=args.processes, devices=jax.device_count(),
+        n_rows=n_rows, row_width=row_width, steps=args.steps,
+        scale=args.scale, seed=args.seed, sweep=args.sweep,
+        scenario=None if args.model else args.scenario,
+        model=spec.neuron_model, drive_boost=drive_boost,
+        wire=args.wire, wire_remote=args.wire_remote or args.wire,
+        comm_mode=args.comm_mode, overlap=not args.no_overlap,
+        stdp=not args.no_stdp, connectivity=spec.connectivity,
+        bits_sha256=sha(bits_all), vm_sha256=sha(vm_g),
+        spiked=int(bits_all.sum()), overflow=overflow,
+        gate_overflow=gate,
+        wire_bytes_intra=split["intra"], wire_bytes_inter=split["inter"],
+        elapsed_s=round(elapsed, 2),
+        # supervised-runtime extras
+        hash_order="global", supervised=True, save_every=args.save_every,
+        resumed_from=resumed_from, incarnation=args.incarnation,
+        ckpt_events=sup.events,
+    )
+    os.makedirs(os.path.dirname(args.out) or ".", exist_ok=True)
+    with open(args.out, "w") as f:
+        json.dump(rec, f, indent=1)
+    print(json.dumps(rec))
+    return rec
 
 
 def _cluster_env():

@@ -74,6 +74,9 @@ class RestartPolicy:
     max_restarts: int = 5
     backoff_s: float = 1.0
     backoff_mult: float = 2.0
+    #: ceiling on the exponential backoff delay; tests pin a small cap,
+    #: production keeps real exponential backoff (None = uncapped)
+    backoff_cap_s: float | None = 30.0
     restarts: int = 0
 
     def next_action(self) -> tuple[str, float]:
@@ -81,6 +84,8 @@ class RestartPolicy:
         if self.restarts >= self.max_restarts:
             return "abort", 0.0
         delay = self.backoff_s * (self.backoff_mult ** self.restarts)
+        if self.backoff_cap_s is not None:
+            delay = min(delay, self.backoff_cap_s)
         self.restarts += 1
         return "restore", delay
 
@@ -124,7 +129,11 @@ class TrainSupervisor:
                     self.ckpt.wait()
                     raise RuntimeError(
                         f"exceeded max restarts at step {step}") from e
-                time.sleep(min(delay, 0.05))  # bounded for tests
+                # the policy's backoff_cap_s bounds the delay; sleep the
+                # REAL capped delay and record it so telemetry shows what
+                # actually happened, not what the schedule promised
+                self.events.append(f"backoff@{step}:{delay:.6g}")
+                time.sleep(delay)
                 last = self.ckpt.latest_step()
                 if last is not None:
                     state, _ = self.ckpt.restore(state)

@@ -1,5 +1,6 @@
 """Checkpointing (atomic, async, elastic) + fault-tolerance runtime."""
 
+import json
 import os
 import time
 
@@ -8,7 +9,8 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
-from repro.checkpoint.manager import CheckpointManager
+from repro.checkpoint.manager import (CheckpointManager,
+                                      CorruptCheckpointError)
 from repro.runtime.elastic import plan_mesh
 from repro.runtime.fault import (HeartbeatMonitor, RestartPolicy,
                                  TrainSupervisor)
@@ -102,6 +104,134 @@ def test_supervisor_aborts_after_max_restarts(tmp_path):
     with pytest.raises(RuntimeError, match="exceeded max restarts"):
         sup.run({"x": jnp.asarray(0.0)}, lambda s, i: s, 10,
                 fail_injector=injector)
+
+
+def _truncate_largest_npy(step_dir):
+    arrs = sorted(n for n in os.listdir(step_dir) if n.endswith(".npy"))
+    target = os.path.join(
+        step_dir,
+        max(arrs, key=lambda n: os.path.getsize(os.path.join(step_dir, n))))
+    with open(target, "r+b") as f:
+        f.truncate(os.path.getsize(target) // 2)
+
+
+def test_async_save_failure_raises_and_keeps_latest(tmp_path, monkeypatch):
+    """A failed background write must surface at wait() and must NOT
+    advance LATEST past the previous committed checkpoint."""
+    mgr = CheckpointManager(str(tmp_path))
+    mgr.save(1, state_tree(1.0))
+    import repro.checkpoint.manager as mgr_mod
+    real_save = np.save
+
+    def boom(*a, **k):
+        raise OSError("disk full")
+
+    monkeypatch.setattr(mgr_mod.np, "save", boom)
+    mgr.save(2, state_tree(2.0), blocking=False)
+    with pytest.raises(RuntimeError, match="async checkpoint save at step 2"):
+        mgr.wait()
+    mgr.wait()  # raised exactly once
+    monkeypatch.setattr(mgr_mod.np, "save", real_save)
+    assert mgr.latest_step() == 1
+    restored, _ = mgr.restore(state_tree())
+    assert float(restored["step"]) == 1
+    # the manager stays usable: the next save commits normally
+    mgr.save(3, state_tree(3.0))
+    assert mgr.latest_step() == 3
+
+
+def test_latest_step_scan_fallback(tmp_path):
+    """LATEST is a hint: dangling pointer or truncated manifest must fall
+    back to the newest committed step that actually reads."""
+    mgr = CheckpointManager(str(tmp_path))
+    mgr.save(1, state_tree(1.0))
+    mgr.save(2, state_tree(2.0))
+    with open(tmp_path / "LATEST", "w") as f:   # points at a missing dir
+        f.write("99\n")
+    assert mgr.latest_step() == 2
+    with open(tmp_path / "step_000000002" / "manifest.json", "w") as f:
+        f.write('{"truncated')                   # garbage manifest
+    assert mgr.latest_step() == 1
+    os.unlink(tmp_path / "LATEST")               # no LATEST at all
+    assert mgr.latest_step() == 1
+
+
+def test_restore_falls_back_past_corrupt_npy(tmp_path):
+    mgr = CheckpointManager(str(tmp_path))
+    mgr.save(1, state_tree(1.0))
+    mgr.save(2, state_tree(2.0))
+    _truncate_largest_npy(str(tmp_path / "step_000000002"))
+    restored, _ = mgr.restore(state_tree())
+    assert float(restored["step"]) == 1
+
+
+def test_restore_falls_back_past_missing_manifest(tmp_path):
+    mgr = CheckpointManager(str(tmp_path))
+    mgr.save(1, state_tree(1.0))
+    mgr.save(2, state_tree(2.0))
+    os.unlink(tmp_path / "step_000000002" / "manifest.json")
+    step, tree, _ = mgr.load_host()
+    assert step == 1
+    np.testing.assert_array_equal(tree["params"]["w"], np.full((4, 3), 1.0))
+
+
+def test_restore_explicit_corrupt_step_raises(tmp_path):
+    """An EXPLICIT step= must not silently fall back."""
+    mgr = CheckpointManager(str(tmp_path))
+    mgr.save(1, state_tree(1.0))
+    mgr.save(2, state_tree(2.0))
+    _truncate_largest_npy(str(tmp_path / "step_000000002"))
+    with pytest.raises(CorruptCheckpointError):
+        mgr.restore(state_tree(), step=2)
+    with pytest.raises(CorruptCheckpointError):
+        mgr.load_host(step=2)
+
+
+def test_restore_all_corrupt_raises(tmp_path):
+    mgr = CheckpointManager(str(tmp_path))
+    mgr.save(1, state_tree(1.0))
+    _truncate_largest_npy(str(tmp_path / "step_000000001"))
+    with pytest.raises(CorruptCheckpointError, match="tried"):
+        mgr.restore(state_tree())
+
+
+def test_restore_ignores_stale_tmp_dir(tmp_path):
+    mgr = CheckpointManager(str(tmp_path))
+    mgr.save(4, state_tree(4.0))
+    os.makedirs(tmp_path / "step_000000008.tmp")
+    with open(tmp_path / "step_000000008.tmp" / "manifest.json", "w") as f:
+        json.dump({"leaves": []}, f)
+    assert mgr.latest_step() == 4
+    restored, _ = mgr.restore(state_tree())
+    assert float(restored["step"]) == 4
+
+
+def test_restart_policy_backoff_cap():
+    pol = RestartPolicy(max_restarts=5, backoff_s=1.0, backoff_mult=10.0,
+                        backoff_cap_s=2.5)
+    delays = [pol.next_action()[1] for _ in range(3)]
+    assert delays == [1.0, 2.5, 2.5]
+    uncapped = RestartPolicy(max_restarts=5, backoff_s=1.0,
+                             backoff_mult=10.0, backoff_cap_s=None)
+    assert [uncapped.next_action()[1] for _ in range(3)] == [1.0, 10.0, 100.0]
+
+
+def test_train_supervisor_records_real_backoff(tmp_path):
+    mgr = CheckpointManager(str(tmp_path))
+    fails = {7: True}
+
+    def injector(step):
+        if fails.pop(step, False):
+            raise RuntimeError("boom")
+
+    sup = TrainSupervisor(mgr, save_every=5,
+                          policy=RestartPolicy(max_restarts=2,
+                                               backoff_s=0.001,
+                                               backoff_cap_s=0.002))
+    sup.run({"x": jnp.asarray(0.0)},
+            lambda s, i: {"x": s["x"] + 1.0}, 10, fail_injector=injector)
+    backoffs = [e for e in sup.events if e.startswith("backoff@")]
+    assert backoffs == ["backoff@7:0.001"]
 
 
 def test_heartbeat_straggler_detection():

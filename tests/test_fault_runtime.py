@@ -1,0 +1,374 @@
+"""Fault-tolerant simulation runtime (DESIGN.md §15).
+
+Covers the supervised step loop end to end: fault-spec grammar and
+fire-once claims (repro.runtime.inject), heartbeat files, in-process
+bit-exact resume through SimulationSupervisor, elastic shrink-restart
+state remapping (repro.runtime.elastic.shrink_remap_state), and - slow,
+POSIX-only - the real gang-supervised launcher with injected worker kills.
+"""
+
+import json
+import os
+import textwrap
+import time
+
+import numpy as np
+import pytest
+
+import repro.launch.multihost as mh_launch
+from repro.runtime.inject import (ENV_VAR, FaultInjector, FaultSpec,
+                                  SimulatedFault, parse_specs)
+from repro.runtime.supervisor import HeartbeatFile, SimulationSupervisor
+
+from test_distributed_snn import run_sub
+
+
+# --------------------------------------------------------------------------
+# fault-spec grammar + fire-once claims (jax-free)
+# --------------------------------------------------------------------------
+
+def test_fault_spec_grammar():
+    assert FaultSpec.parse("kill@70") == FaultSpec("kill", 70)
+    assert FaultSpec.parse("kill@70#1") == FaultSpec("kill", 70, rank=1)
+    assert FaultSpec.parse("slow@10:5") == FaultSpec("slow", 10, factor=5.0)
+    assert FaultSpec.parse("hang@40#2") == FaultSpec("hang", 40, rank=2)
+    assert (FaultSpec.parse(" ckpt-corrupt@35 ")
+            == FaultSpec("ckpt-corrupt", 35))
+    specs = parse_specs("kill@70#1, slow@10:2; hang@40")
+    assert [s.kind for s in specs] == ["kill", "slow", "hang"]
+    assert parse_specs(None) == () and parse_specs("") == ()
+    with pytest.raises(ValueError, match="unknown kind"):
+        FaultSpec.parse("explode@3")
+    with pytest.raises(ValueError, match="kind@step"):
+        FaultSpec.parse("kill70")
+
+
+def test_injector_rank_filter_and_fire_once():
+    inj = FaultInjector(parse_specs("kill@5#1"), rank=0, mode="raise")
+    inj.fire(5)                       # wrong rank: nothing happens
+    inj = FaultInjector(parse_specs("kill@5"), rank=0, mode="raise")
+    inj.fire(4)
+    with pytest.raises(SimulatedFault):
+        inj.fire(5)
+    inj.fire(5)                       # in-memory claim: fires exactly once
+
+
+def test_injector_fire_once_across_instances(tmp_path):
+    """The gang case: a RESTARTED incarnation (new injector instance on a
+    shared state_dir) must not replay an already-fired fault."""
+    sd = str(tmp_path / "faults")
+    first = FaultInjector(parse_specs("kill@5"), mode="raise", state_dir=sd)
+    with pytest.raises(SimulatedFault):
+        first.fire(5)
+    second = FaultInjector(parse_specs("kill@5"), mode="raise", state_dir=sd)
+    second.fire(5)                    # marker file claims it
+    assert os.path.exists(os.path.join(sd, "kill@5x1#0.fired"))
+
+
+def test_injector_env_fallback(monkeypatch):
+    monkeypatch.setenv(ENV_VAR, "slow@3:2")
+    inj = FaultInjector.from_args(None, slow_unit_s=0.0)
+    assert inj is not None and inj.specs[0].kind == "slow"
+    monkeypatch.delenv(ENV_VAR)
+    assert FaultInjector.from_args(None) is None
+
+
+def test_injector_slow_returns_control():
+    inj = FaultInjector(parse_specs("slow@2:3"), mode="raise",
+                        slow_unit_s=0.01)
+    t0 = time.monotonic()
+    inj.fire(2)
+    assert time.monotonic() - t0 >= 0.03
+
+
+def test_injector_ckpt_corrupt(tmp_path):
+    """ckpt-corrupt truncates the newest committed step's largest array;
+    the manager's restore must then fall back to the previous step."""
+    import jax.numpy as jnp
+
+    from repro.checkpoint.manager import CheckpointManager
+    tree = lambda v: {"w": jnp.full((64,), v), "s": jnp.asarray(int(v))}
+    mgr = CheckpointManager(str(tmp_path))
+    mgr.save(1, tree(1.0))
+    mgr.save(2, tree(2.0))
+    inj = FaultInjector(parse_specs("ckpt-corrupt@0"), mode="raise",
+                        ckpt_dir=str(tmp_path))
+    inj.fire(0)
+    restored, _ = mgr.restore(tree(0.0))
+    assert float(restored["s"]) == 1
+
+
+# --------------------------------------------------------------------------
+# heartbeat files
+# --------------------------------------------------------------------------
+
+def test_heartbeat_file_beat_and_ages(tmp_path):
+    d = str(tmp_path / "hb")
+    hb0, hb2 = HeartbeatFile(d, 0), HeartbeatFile(d, 2)
+    hb0.beat()
+    hb2.beat()
+    ages = HeartbeatFile.ages(d)
+    assert set(ages) == {0, 2}
+    assert all(0 <= a < 5.0 for a in ages.values())
+    assert HeartbeatFile.ages(str(tmp_path / "missing")) == {}
+    # a worker that beat long ago reads as stale
+    past = time.time() - 100.0
+    os.utime(hb2.path, (past, past))
+    assert HeartbeatFile.ages(d)[2] > 90.0
+
+
+# --------------------------------------------------------------------------
+# in-process supervised engine run: bit-exact resume after an injected kill
+# --------------------------------------------------------------------------
+
+def _lif_engine(scale=0.004):
+    import jax
+
+    from repro.core import builder, engine, models
+    import repro.core.neuron_models as nmodels
+
+    spec, _ = models.model_demo("lif", scale=scale)
+    dec = builder.decompose(spec, 1)
+    g = builder.build_shards(spec, dec)[0].device_arrays()
+    table = nmodels.get_model("lif").make_param_table(list(spec.groups),
+                                                     dt=0.1)
+    cfg = engine.EngineConfig(dt=0.1, external_drive=False)
+    step = engine.make_step_fn(g, table, cfg)
+    s0 = engine.init_state(g, list(spec.groups), jax.random.key(0))
+    return s0, step
+
+
+def test_simulation_supervisor_bit_exact_resume(tmp_path):
+    """Injected kill at step 33 -> restore from the step-30 checkpoint ->
+    the full 60-step spike + voltage trajectory matches an uninterrupted
+    run bit for bit."""
+    from repro.checkpoint.manager import CheckpointManager
+    from repro.runtime.fault import RestartPolicy
+
+    s0, step = _lif_engine()
+    ref_bits, s = [], s0
+    for _ in range(60):
+        s, b = step(s)
+        ref_bits.append(np.asarray(b, np.uint8))
+    ref_vm = np.asarray(s.neurons.v_m)
+
+    mgr = CheckpointManager(str(tmp_path))
+    bits: list[np.ndarray] = []
+    inj = FaultInjector(parse_specs("kill@33"), mode="raise")
+
+    def restore_fn(_state):
+        # restore() drains any in-flight async save first, so its OWN
+        # metadata step - not a racy earlier latest_step() - is the truth
+        restored, md = mgr.restore(s0)
+        latest = int(md["step"])
+        del bits[latest:]
+        return restored, latest
+
+    sup = SimulationSupervisor(
+        mgr, save_every=10,
+        policy=RestartPolicy(max_restarts=3, backoff_s=0.001),
+        injector=inj, restore_fn=restore_fn)
+    final, end = sup.run(
+        s0, lambda st, i: step(st), 60,
+        on_step=lambda i, st, b: bits.append(np.asarray(b, np.uint8)))
+    assert end == 60
+    assert any(e.startswith("fail@33") for e in sup.events)
+    assert any(e == "restore@30" for e in sup.events)
+    assert sup.delays and sup.delays[0] == pytest.approx(0.001)
+    np.testing.assert_array_equal(np.stack(bits), np.stack(ref_bits))
+    np.testing.assert_array_equal(np.asarray(final.neurons.v_m), ref_vm)
+
+
+def test_simulation_supervisor_abort_path(tmp_path):
+    from repro.checkpoint.manager import CheckpointManager
+    from repro.runtime.fault import RestartPolicy
+
+    mgr = CheckpointManager(str(tmp_path))
+
+    def bad_step(state, i):
+        raise RuntimeError("always failing")
+
+    sup = SimulationSupervisor(
+        mgr, save_every=10,
+        policy=RestartPolicy(max_restarts=2, backoff_s=0.001,
+                             backoff_cap_s=0.002),
+        restore_fn=lambda s: (s, 0))
+    with pytest.raises(RuntimeError, match="exceeded max restarts"):
+        sup.run({"x": np.zeros(3)}, bad_step, 5)
+    assert len(sup.delays) == 2
+    assert sup.delays == [0.001, 0.002]      # capped exponential, recorded
+
+
+def test_simulation_supervisor_gang_mode_propagates(tmp_path):
+    """Without restore_fn a failure must escape (the process dies and the
+    gang launcher restarts it) - never be swallowed."""
+    sup = SimulationSupervisor(None, save_every=0, restore_fn=None)
+    with pytest.raises(SimulatedFault):
+        sup.run({}, lambda s, i: (_ for _ in ()).throw(SimulatedFault("x")),
+                5)
+
+
+# --------------------------------------------------------------------------
+# elastic shrink-restart remap: bit-exact across decompositions (slow)
+# --------------------------------------------------------------------------
+
+SHRINK_CODE = textwrap.dedent("""
+    import dataclasses
+    import numpy as np
+    import jax
+
+    from repro.core import engine, models, multihost
+    from repro.core import distributed as dist
+    from repro.runtime.elastic import shrink_remap_state
+
+    spec, _ = models.model_demo("lif", scale=0.02)
+    spec = dataclasses.replace(spec, connectivity="procedural")
+    groups = list(spec.groups)
+    N = spec.n_neurons
+
+    def setup(n_rows, row_width):
+        dec = dist.mesh_decompose(spec, n_rows, row_width)
+        mesh = multihost.make_host_mesh(n_rows, row_width)
+        net = dist.prepare_stacked(spec, dec, n_rows, row_width)
+        cfg = dist.DistributedConfig(engine=engine.EngineConfig(dt=0.1))
+        step, consts = multihost.make_multihost_step(net, mesh, groups, cfg)
+        return dec, mesh, net, step, consts
+
+    def run(step, consts, state, n):
+        jrun = jax.jit(lambda s, c: jax.lax.scan(
+            lambda s, _: step(s, c), s, None, length=n))
+        return jrun(state, consts)
+
+    def glob_bits(bits, mesh, dec):
+        b = np.asarray(multihost.replicate_to_host(bits, mesh), np.uint8)
+        return b[..., dec.owner, dec.local_index()]
+
+    # OLD topology: 4 rows x 2 -> all 8 forced devices
+    dec4, mesh4, net4, step4, consts4 = setup(4, 2)
+    st = multihost.init_multihost_state(net4, groups, mesh4, seed=0)
+    # uninterrupted 120-step reference
+    ref_final, ref_bits = run(step4, consts4, st, 120)
+    ref = glob_bits(ref_bits, mesh4, dec4)
+    ref_vm = np.asarray(multihost.replicate_to_host(
+        ref_final.v_m, mesh4))[dec4.owner, dec4.local_index()]
+
+    # first 60 steps, then a full host snapshot (what a checkpoint holds)
+    mid, _ = run(step4, consts4, st, 60)
+    host = multihost.snapshot_host_state(mid, mesh4)
+
+    # NEW topology: 2 rows x 2 (half the devices "survived")
+    dec2, mesh2, net2, step2, consts2 = setup(2, 2)
+    fields, carried = shrink_remap_state(
+        spec, 0, host, step=60, old_n_rows=4, old_row_width=2,
+        new_dec=dec2, new_net=net2, groups=groups)
+    st2 = multihost.state_from_fields(fields, mesh2,
+                                      local_slice=net2.local_slice)
+    fin2, bits2 = run(step2, consts2, st2, 60)
+    got = glob_bits(bits2, mesh2, dec2)
+    got_vm = np.asarray(multihost.replicate_to_host(
+        fin2.v_m, mesh2))[dec2.owner, dec2.local_index()]
+
+    assert ref[60:].sum() > 0, "vacuous: no spikes in the compared window"
+    np.testing.assert_array_equal(got, ref[60:])
+    np.testing.assert_array_equal(got_vm, ref_vm)
+    assert carried == {"wire_overflow": 0, "gate_overflow": 0}
+    print("SHRINK_OK", int(ref.sum()))
+""")
+
+
+@pytest.mark.slow
+def test_shrink_remap_state_bit_exact():
+    """A snapshot written under a (4, 2) decomposition, remapped onto
+    (2, 2) by shrink_remap_state, continues the trajectory bit-exactly."""
+    out = run_sub(SHRINK_CODE)
+    assert "SHRINK_OK" in out
+
+
+def test_shrink_remap_rejects_stdp_and_materialized():
+    from repro.core import models
+    import dataclasses
+
+    from repro.runtime.elastic import shrink_remap_state
+
+    spec, _ = models.model_demo("lif", scale=0.004)
+    spec_p = dataclasses.replace(spec, connectivity="procedural")
+    with pytest.raises(ValueError, match="stdp"):
+        shrink_remap_state(spec_p, 0, {}, step=0, old_n_rows=2,
+                           old_row_width=2, new_dec=None, new_net=None,
+                           groups=[], stdp_active=True)
+    with pytest.raises(ValueError, match="procedural"):
+        shrink_remap_state(spec, 0, {}, step=0, old_n_rows=2,
+                           old_row_width=2, new_dec=None, new_net=None,
+                           groups=[], stdp_active=False)
+
+
+# --------------------------------------------------------------------------
+# gang-supervised launcher: kill a worker, restart, bit-exact (slow, POSIX)
+# --------------------------------------------------------------------------
+
+def _launch_supervised(out, processes, fault=None, elastic=False,
+                       steps=120, save_every=30):
+    argv = ["--processes", str(processes), "--devices-per-process", "2",
+            "--row-width", "2", "--steps", str(steps), "--scale", "0.02",
+            "--model", "lif", "--no-stdp", "--connectivity", "procedural",
+            "--save-every", str(save_every), "--backoff", "0.05",
+            "--out", str(out), "--timeout", "600"]
+    if fault:
+        argv += ["--fault-inject", fault]
+    if elastic:
+        argv += ["--elastic"]
+    return mh_launch.run_launcher(mh_launch.build_parser().parse_args(argv))
+
+
+@pytest.mark.slow
+@pytest.mark.skipif(os.name != "posix",
+                    reason="local multi-process launch needs POSIX")
+def test_gang_supervised_restart_bit_exact(tmp_path):
+    """One baseline + two fault legs, all compared by GLOBAL-order hash:
+
+    * kill rank 1 at step 70 -> gang restart on the SAME topology resumes
+      from the step-60 checkpoint, final trajectory identical;
+    * kill + --elastic -> the gang shrinks 2 -> 1 process, the checkpoint
+      is remapped onto the smaller Area-Processes decomposition, and the
+      trajectory is STILL identical (the paper's decomposition-invariance
+      made executable).
+    """
+    base = _launch_supervised(tmp_path / "base.json", 2)
+    assert base["supervised"] and base["hash_order"] == "global"
+    assert base["spiked"] > 30, "vacuous test - nothing spiked"
+    assert base["supervision"]["restarts"] == 0
+
+    kill = _launch_supervised(tmp_path / "kill.json", 2, fault="kill@70#1")
+    assert kill["bits_sha256"] == base["bits_sha256"]
+    assert kill["vm_sha256"] == base["vm_sha256"]
+    assert kill["resumed_from"] == 60
+    assert kill["supervision"]["restarts"] == 1
+    assert kill["supervision"]["tiers"]["same"] == 1
+    assert kill["supervision"]["delays"], "backoff delays not recorded"
+
+    shr = _launch_supervised(tmp_path / "shrink.json", 2,
+                             fault="kill@70#1", elastic=True)
+    assert shr["bits_sha256"] == base["bits_sha256"]
+    assert shr["vm_sha256"] == base["vm_sha256"]
+    assert shr["processes"] == 1 and shr["n_rows"] == 1
+    assert shr["supervision"]["processes_final"] == 1
+    assert shr["supervision"]["tiers"]["shrink"] == 1
+    assert any(e.startswith("shrink:2->1")
+               for e in shr["supervision"]["events"])
+
+
+@pytest.mark.slow
+@pytest.mark.skipif(os.name != "posix",
+                    reason="local multi-process launch needs POSIX")
+def test_gang_supervisor_aborts_after_max_restarts(tmp_path):
+    """A fault at EVERY incarnation's resume step exhausts the restart
+    budget; the launcher must abort with the policy's message, not spin."""
+    argv = ["--processes", "1", "--devices-per-process", "2",
+            "--row-width", "2", "--steps", "40", "--scale", "0.02",
+            "--model", "lif", "--no-stdp", "--connectivity", "procedural",
+            "--save-every", "10", "--backoff", "0.05", "--max-restarts", "1",
+            # two kills: the restarted incarnation dies again -> abort
+            "--fault-inject", "kill@15,kill@25",
+            "--out", str(tmp_path / "abort.json"), "--timeout", "600"]
+    with pytest.raises(SystemExit, match="exceeded max restarts"):
+        mh_launch.run_launcher(mh_launch.build_parser().parse_args(argv))

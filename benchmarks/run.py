@@ -67,6 +67,14 @@ def _bench_json(path: str, scale: str) -> None:
     # checkpoint save/restore overhead (fault-tolerant runtime,
     # DESIGN.md §15); ckpt_bytes/ckpt_leaves are structural guards
     bench_snn.bench_checkpoint(out, quick=quick)
+    # measured gate-capacity records (pallas:sparse worklist provisioning
+    # from data: gate_rate="measured:BENCH_full.json"); the deterministic
+    # overflow_rate/occupancy fields are exact invariants
+    bench_snn.bench_gate_tune(out, quick=quick)
+    # multi-tenant serving throughput: N resident sessions in ONE vmapped
+    # slot batch vs N sequential one-shot runs (DESIGN.md §16);
+    # diff.py holds the batched speedup_vs_sequential above its floor
+    bench_snn.bench_sessions(out, quick=quick)
 
     payload = {
         "meta": {

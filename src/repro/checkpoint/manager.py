@@ -51,7 +51,7 @@ import jax
 import numpy as np
 
 __all__ = ["CheckpointManager", "CorruptCheckpointError",
-           "network_metadata", "restore_spec"]
+           "network_metadata", "restore_spec", "session_metadata"]
 
 
 class CorruptCheckpointError(RuntimeError):
@@ -74,6 +74,20 @@ def network_metadata(spec, *, seed: int, extra: dict | None = None) -> dict:
     from repro.core.builder import spec_to_dict
     md = dict(extra or {})
     md["network"] = {"spec": spec_to_dict(spec), "seed": int(seed)}
+    return md
+
+
+def session_metadata(spec, *, seed: int, session_id: int, step: int,
+                     extra: dict | None = None) -> dict:
+    """:func:`network_metadata` plus the serving-session identity.
+
+    A resident session (repro.serve.snn, DESIGN.md §16) is exactly
+    spec + seed + state; eviction commits its state with this metadata so
+    the restore side knows WHICH session the snapshot belongs to and at
+    what step to resume its host-side bookkeeping.
+    """
+    md = network_metadata(spec, seed=seed, extra=extra)
+    md["session"] = {"id": int(session_id), "step": int(step)}
     return md
 
 

@@ -43,7 +43,8 @@ __all__ = ["BlockShapes", "sweep_vmem_bytes", "autotune_block_shapes",
            "DEFAULT_GATE_MIN_CAPACITY", "gate_capacity",
            "gated_sweep_vmem_bytes", "recommend_gate_rate",
            "eb_from_degrees", "degrees_from_graphs", "degree_signature",
-           "load_measured_timings", "autotune_block_shapes_from_degrees",
+           "load_measured_timings", "load_measured_gate",
+           "measured_gate_capacity", "autotune_block_shapes_from_degrees",
            "resolve_block_shapes_from_degrees"]
 
 #: lane-aligned post-block candidates (the one-hot matmul wants PB >= 128)
@@ -104,8 +105,9 @@ def gated_sweep_vmem_bytes(pb: int, eb: int, *, capacity: int) -> int:
     return edges + onehot + outputs + worklist
 
 
-def gate_capacity(nb: int, n_edges: int, rate: float, *,
-                  min_capacity: int = DEFAULT_GATE_MIN_CAPACITY) -> int:
+def gate_capacity(nb: int, n_edges: int, rate, *,
+                  min_capacity: int = DEFAULT_GATE_MIN_CAPACITY,
+                  signature: str | None = None) -> int:
     """Worklist capacity (in post blocks) for a per-step firing fraction.
 
     The same headroom policy as the ``sparse:<rate>`` wire
@@ -118,13 +120,90 @@ def gate_capacity(nb: int, n_edges: int, rate: float, *,
     never saturate).  Like the wire, no hidden headroom is applied here -
     :func:`recommend_gate_rate` adds the 2x when provisioning from
     measurement.
+
+    ``rate`` may also be ``"measured:<path>"``: the capacity then comes
+    from the BENCH file's ``gate_tune/<signature>/cap{K}`` records
+    (smallest measured K with zero overflow - see
+    :func:`measured_gate_capacity`) for ``signature``'s degree
+    distribution, falling back to the byte model at
+    :data:`DEFAULT_GATE_RATE` when the file has no data for it.
     """
+    if isinstance(rate, str):
+        if not rate.startswith("measured:"):
+            raise ValueError(
+                f"gate rate spec must be a float or 'measured:<path>', "
+                f"got {rate!r}")
+        cap = measured_gate_capacity(
+            load_measured_gate(rate.split(":", 1)[1]), signature,
+            nb=nb, min_capacity=min_capacity)
+        if cap is not None:
+            return cap
+        rate = DEFAULT_GATE_RATE   # no measurement for this network
     if not 0.0 < rate <= 1.0:
         raise ValueError(f"gate rate must be in (0, 1], got {rate!r}")
     k = max(float(n_edges) / max(nb, 1), 1.0)
     p_active = 1.0 - (1.0 - rate) ** k
     cap = max(int(np.ceil(nb * p_active)), min_capacity)
     return min(cap, nb)
+
+
+def load_measured_gate(path: str) -> dict:
+    """Measured gate-saturation data from a BENCH_*.json file.
+
+    Reads ``gate_tune/<signature>/cap{K}`` records (emitted by
+    ``benchmarks.bench_snn.bench_gate_tune``) into a
+    ``{(signature, capacity): (overflow_rate, occupancy)}`` map -
+    ``overflow_rate`` is the measured fraction of steps whose active-block
+    count exceeded ``capacity``, ``occupancy`` the mean active count over
+    capacity.  Missing files / malformed records yield an empty map (the
+    caller falls back to the firing-rate byte model).
+    """
+    import json
+    import os
+    out: dict = {}
+    if not os.path.exists(path):
+        return out
+    try:
+        with open(path) as f:
+            payload = json.load(f)
+        recs = payload["records"] if isinstance(payload, dict) else payload
+    except (json.JSONDecodeError, KeyError, TypeError):
+        return out
+    for r in recs:
+        name = r.get("name", "")
+        if not name.startswith("gate_tune/"):
+            continue
+        try:
+            _, sig, cap_s = name.split("/")
+            out[(sig, int(cap_s[3:]))] = (float(r["overflow_rate"]),
+                                          float(r["occupancy"]))
+        except (ValueError, KeyError):
+            continue
+    return out
+
+
+def measured_gate_capacity(measured: dict, signature: str | None, *,
+                           nb: int,
+                           min_capacity: int = DEFAULT_GATE_MIN_CAPACITY
+                           ) -> int | None:
+    """Pick a worklist capacity from measured gate_tune data.
+
+    The SMALLEST measured capacity whose overflow rate is zero (saturation
+    falls back to the dense pass, so overflow is pure waste - zero measured
+    overflow is the provisioning target); when every measured capacity
+    overflowed, the least-overflowing (largest on ties).  Clipped to
+    ``[min_capacity, nb]``; None when the map has nothing for
+    ``signature`` (caller falls back to the model).
+    """
+    if not measured or signature is None:
+        return None
+    caps = [(cap, ovf) for (sig, cap), (ovf, _) in measured.items()
+            if sig == signature]
+    if not caps:
+        return None
+    clean = [cap for cap, ovf in caps if ovf == 0.0]
+    cap = min(clean) if clean else max(caps, key=lambda c: (-c[1], c[0]))[0]
+    return min(max(cap, min_capacity), nb)
 
 
 def recommend_gate_rate(frac_peak: float, *, headroom: float = 2.0) -> float:

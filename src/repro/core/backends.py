@@ -692,24 +692,42 @@ class SparsePallasBackend(PallasBackend):
     gated = True
 
     def __init__(self, interpret: bool | None = None, block_shapes=None,
-                 gate_rate: float = autotune_mod.DEFAULT_GATE_RATE,
+                 gate_rate=autotune_mod.DEFAULT_GATE_RATE,
                  min_capacity: int = autotune_mod.DEFAULT_GATE_MIN_CAPACITY):
         super().__init__(interpret=interpret, block_shapes=block_shapes)
-        if not 0.0 < gate_rate <= 1.0:
-            raise ValueError(
-                f"gate rate must be in (0, 1], got {gate_rate!r}")
-        self.gate_rate = float(gate_rate)
+        if isinstance(gate_rate, str):
+            # "measured:<path>": capacity picked from the BENCH file's
+            # gate_tune/ records for this layout's degree signature
+            # (autotune.measured_gate_capacity), model fallback otherwise
+            if not gate_rate.startswith("measured:"):
+                raise ValueError(
+                    f"gate rate must be a float in (0, 1] or "
+                    f"'measured:<path>', got {gate_rate!r}")
+            self.gate_rate = gate_rate
+            self.name = f"pallas:sparse:{gate_rate}"
+        else:
+            if not 0.0 < gate_rate <= 1.0:
+                raise ValueError(
+                    f"gate rate must be in (0, 1], got {gate_rate!r}")
+            self.gate_rate = float(gate_rate)
+            if self.gate_rate != autotune_mod.DEFAULT_GATE_RATE:
+                self.name = f"pallas:sparse:{self.gate_rate:g}"
         self.min_capacity = int(min_capacity)
-        if self.gate_rate != autotune_mod.DEFAULT_GATE_RATE:
-            self.name = f"pallas:sparse:{self.gate_rate:g}"
 
     # -- gate policy ------------------------------------------------------
     def gate_capacity(self, layout: EdgeLayout) -> int:
         """Static worklist capacity (in post blocks) for this layout."""
         bg = _require_blocked(layout)
+        sig = None
+        if isinstance(self.gate_rate, str):
+            # the signature is computed from the LAYOUT's degree arrays
+            # (padding rows included) - bench_gate_tune keys its records
+            # the same way, so emitter and consumer always agree
+            sig = autotune_mod.degree_signature(
+                autotune_mod.degrees_from_graphs([layout]))
         return autotune_mod.gate_capacity(
             bg.nb, layout.n_edges, self.gate_rate,
-            min_capacity=self.min_capacity)
+            min_capacity=self.min_capacity, signature=sig)
 
     def _blocked_arrivals(self, layout: EdgeLayout, ring, t, fresh):
         """(NB, EB) f32 per-edge arrivals - the pre-pass.
@@ -891,6 +909,12 @@ def _resolve_variant(name: str) -> SweepBackend | None:
         return PallasBackend(block_shapes="auto")
     if mode.startswith("sparse:"):
         text = mode.split(":", 1)[1]
+        if text.startswith("measured:"):
+            hit = _VARIANT_CACHE.get(name)
+            if hit is None:
+                hit = _VARIANT_CACHE[name] = SparsePallasBackend(
+                    gate_rate=text)
+            return hit
         try:
             rate = float(text)
         except ValueError:

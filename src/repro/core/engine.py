@@ -59,6 +59,7 @@ owner-sorted ``post_idx`` rows it exclusively owns - the vector analogue of
 from __future__ import annotations
 
 import dataclasses
+import functools
 from typing import Any
 
 import jax
@@ -72,7 +73,9 @@ from repro.core import stdp as stdp_mod
 
 __all__ = ["ShardGraph", "EngineConfig", "EngineState", "init_state",
            "engine_step", "run", "synaptic_sweep",
-           "state_with_weights_layout"]
+           "state_with_weights_layout", "StepContext", "make_step_context",
+           "make_step_fn", "make_session_step_fn", "stack_states",
+           "slot_state", "set_slot_state", "masked_select"]
 
 
 @dataclasses.dataclass(frozen=True)
@@ -374,17 +377,150 @@ def engine_step(state: EngineState, graph: ShardGraph, table: jax.Array,
     return new_state, spike_bits
 
 
+@dataclasses.dataclass(frozen=True)
+class StepContext:
+    """The shared, read-only half of a simulation: ``(graph, table, cfg)``
+    plus their pre-resolved backend/layout/model.
+
+    The per-instance half is the :class:`EngineState` pytree alone - the
+    separation that makes the state vmappable over an instance axis
+    (:func:`make_session_step_fn`): MANY independent instances of the same
+    network share ONE context (consts, compiled step) while memory scales
+    with per-instance state, not topology (DESIGN.md §16).
+    """
+
+    graph: ShardGraph
+    table: Any
+    cfg: EngineConfig
+    backend: Any
+    layout: Any
+    model: Any
+
+    def step(self, state: EngineState):
+        """One dt of one instance: ``(state) -> (state, spike_bits)``."""
+        return engine_step(state, self.graph, self.table, self.cfg,
+                           backend=self.backend, layout=self.layout,
+                           model=self.model)
+
+    def init_state(self, groups, key: jax.Array, *,
+                   dtype=jnp.float32) -> EngineState:
+        """Fresh per-instance state in this context's NATIVE weight layout
+        (no per-step conversion inside vmapped slot batches)."""
+        return init_state(self.graph, groups, key, dtype=dtype,
+                          sweep=self.cfg.sweep,
+                          neuron_model=self.cfg.neuron_model)
+
+
+def make_step_context(graph: ShardGraph, table: jax.Array,
+                      cfg: EngineConfig) -> StepContext:
+    """Resolve ``(graph, table, cfg)`` into a reusable :class:`StepContext`
+    (backend prepared once, layout device-resident, model looked up)."""
+    backend = backends_mod.get_backend(cfg.sweep)
+    return StepContext(graph=graph, table=table, cfg=cfg, backend=backend,
+                       layout=backend.prepare(graph),
+                       model=neuron_models_mod.get_model(cfg.neuron_model))
+
+
 def make_step_fn(graph: ShardGraph, table: jax.Array, cfg: EngineConfig):
     """Jit-compiled single-step closure (graph/table/cfg baked in)."""
-    backend = backends_mod.get_backend(cfg.sweep)
-    layout = backend.prepare(graph)
-    model = neuron_models_mod.get_model(cfg.neuron_model)
+    ctx = make_step_context(graph, table, cfg)
+    return jax.jit(ctx.step)
 
-    @jax.jit
-    def step(state: EngineState):
-        return engine_step(state, graph, table, cfg, backend=backend,
-                           layout=layout, model=model)
-    return step
+
+# --------------------------------------------------------------------------
+# multi-tenant instance axis (DESIGN.md §16)
+# --------------------------------------------------------------------------
+
+def _is_key(x) -> bool:
+    return (hasattr(x, "dtype")
+            and jax.dtypes.issubdtype(x.dtype, jax.dtypes.prng_key))
+
+
+def masked_select(active: jax.Array, new, old):
+    """Per-slot ``lax.select`` over two same-structure state pytrees:
+    slot ``i`` takes ``new``'s leaves where ``active[i]``, else keeps
+    ``old``'s bit-for-bit (the serve/engine.py done-mask discipline lifted
+    to whole engine states).  Typed PRNG key leaves select through their
+    key data."""
+    def sel(n, o):
+        if _is_key(n):
+            nd = jax.random.key_data(n)
+            od = jax.random.key_data(o)
+            m = active.reshape((-1,) + (1,) * (nd.ndim - 1))
+            return jax.random.wrap_key_data(jnp.where(m, nd, od))
+        m = active.reshape((-1,) + (1,) * (jnp.ndim(n) - 1))
+        return jnp.where(m, n, o)
+    return jax.tree.map(sel, new, old)
+
+
+def stack_states(states: "list[EngineState]") -> EngineState:
+    """Stack per-instance states into one slot-batched state (leading
+    instance axis on every leaf; static markers must agree)."""
+    metas = {(s.weights_layout, s.neuron_model) for s in states}
+    if len(metas) != 1:
+        raise ValueError(
+            f"cannot stack states with mixed static markers {sorted(metas)}"
+            " - all slots must share weights_layout and neuron_model")
+    return jax.tree.map(lambda *ls: jnp.stack(ls), *states)
+
+
+def slot_state(batch: EngineState, slot: int) -> EngineState:
+    """Extract slot ``slot``'s per-instance state from a slot batch."""
+    return jax.tree.map(lambda l: l[slot], batch)
+
+
+def set_slot_state(batch: EngineState, slot: int,
+                   state: EngineState) -> EngineState:
+    """Functionally write one instance state into slot ``slot``."""
+    def put(b, s):
+        if _is_key(b):
+            return jax.random.wrap_key_data(
+                jax.random.key_data(b).at[slot].set(
+                    jax.random.key_data(s)))
+        return b.at[slot].set(s)
+    return jax.tree.map(put, batch, state)
+
+
+def make_session_step_fn(graph: ShardGraph, table: jax.Array,
+                         cfg: EngineConfig, max_sessions: int):
+    """ONE jitted ``vmap(engine_step)`` over a fixed slot batch of
+    ``max_sessions`` :class:`EngineState`\\ s - the resident multi-tenant
+    step (DESIGN.md §16).
+
+    Returns ``step(batch, active, n_steps=1) -> (batch, bits)`` where
+    ``batch`` carries a leading instance axis of size ``max_sessions`` on
+    every leaf, ``active`` is a ``(max_sessions,)`` bool mask, and ``bits``
+    is ``(n_steps, max_sessions, n_local)`` spike bits (False on inactive
+    slots).  Inactive slots are stepped-and-discarded through
+    :func:`masked_select`, so their state - ``t``, key stream, weights,
+    ``gate_overflow`` telemetry - stays bit-for-bit frozen while active
+    slots advance; a session stepped inside any admission pattern computes
+    exactly the trajectory of a solo run.  Stochastic models keep per-slot
+    key streams (each slot's ``key``/``drive_key`` rides its own lane of
+    the vmap); ``gate_overflow``/wire telemetry stays per-slot for the
+    same reason.
+    """
+    if max_sessions < 1:
+        raise ValueError(f"max_sessions must be >= 1, got {max_sessions}")
+    ctx = make_step_context(graph, table, cfg)
+    vstep = jax.vmap(ctx.step)
+
+    @functools.partial(jax.jit, static_argnames=("n_steps",))
+    def step(batch: EngineState, active: jax.Array, n_steps: int = 1):
+        if active.shape != (max_sessions,):
+            raise ValueError(
+                f"active mask must be ({max_sessions},), got "
+                f"{active.shape}")
+
+        def body(b, _):
+            new, bits = vstep(b)
+            merged = masked_select(active, new, b)
+            bits = jnp.where(active[:, None], bits.astype(bool), False)
+            return merged, bits
+
+        return jax.lax.scan(body, batch, None, length=n_steps)
+
+    return step, ctx
 
 
 def run(state: EngineState, graph: ShardGraph, table: jax.Array,

@@ -59,7 +59,7 @@ from repro.core.stdp import STDPParams
 
 __all__ = ["hpc_benchmark", "marmoset", "brunel", "microcircuit",
            "model_demo", "get_scenario", "available_scenarios",
-           "HPC_STDP", "firing_rate_hz"]
+           "resolve_scenario", "scenario_id", "HPC_STDP", "firing_rate_hz"]
 
 # dt = 0.1 ms everywhere (NEST default for these models)
 DT_MS = 0.1
@@ -444,6 +444,43 @@ def get_scenario(name: str, **kwargs) -> tuple[NetworkSpec,
         raise ValueError(f"unknown scenario {name!r}; available: "
                          f"{available_scenarios()}")
     return _SCENARIOS[name](**kwargs)
+
+
+def scenario_id(spec: NetworkSpec) -> str:
+    """Short stable fingerprint of a network's FULL identity.
+
+    Hashes the canonical ``spec_to_dict`` form (the same serialization
+    checkpoints embed via ``network_metadata``), so two specs share an id
+    iff they describe the same network - the key the session engine uses
+    to enforce that every resident instance shares one consts set
+    (DESIGN.md §16)."""
+    import hashlib
+    import json
+
+    from repro.core.builder import spec_to_dict
+    raw = json.dumps(spec_to_dict(spec), sort_keys=True)
+    return hashlib.sha256(raw.encode()).hexdigest()[:12]
+
+
+def resolve_scenario(scenario, **kwargs) -> tuple[NetworkSpec,
+                                                  STDPParams | None, str]:
+    """Scenario -> ``(spec, stdp, scenario_id)`` - the session plumbing.
+
+    ``scenario`` is a zoo name (kwargs pass through to the factory: scale,
+    g, eta, seed, ...) or an already-built :class:`NetworkSpec` (kwargs
+    then only admit ``stdp=``).  Either way the returned id fingerprints
+    the resolved spec, so callers can compare workload identity without
+    caring how the spec was spelled."""
+    if isinstance(scenario, NetworkSpec):
+        stdp = kwargs.pop("stdp", None)
+        if kwargs:
+            raise TypeError(
+                f"unexpected kwargs {sorted(kwargs)} with an explicit "
+                "NetworkSpec (only stdp= applies)")
+        spec = scenario
+    else:
+        spec, stdp = get_scenario(scenario, **kwargs)
+    return spec, stdp, scenario_id(spec)
 
 
 def firing_rate_hz(spikes, n_real: int | None = None) -> float:

@@ -145,11 +145,18 @@ class SimulationSupervisor:
     # ------------------------------------------------------------------ loop
     def run(self, state, step_fn: Callable, n_steps: int, *,
             start_step: int = 0,
-            on_step: Callable[[int, Any, Any], None] | None = None):
+            on_step: Callable[[int, Any, Any], None] | None = None,
+            final_save: bool = False):
         """-> (final_state, final_step).  Bit-exact contract: a supervised
         run that failed and resumed from a checkpoint produces the same
         trajectory as an uninterrupted run (the replayed steps recompute
-        identical values from the restored state)."""
+        identical values from the restored state).
+
+        ``final_save`` commits once more at loop exit when ``n_steps`` is
+        not on the ``save_every`` grid - callers whose commit point doubles
+        as an external consistency boundary (the session engine: every
+        resident session's last step must be on disk when the run returns)
+        set it so the tail steps are never lost."""
         step = start_step
         if self.heartbeat is not None:
             self.heartbeat.beat()
@@ -179,6 +186,9 @@ class SimulationSupervisor:
                 time.sleep(delay)
                 state, step = self.restore_fn(state)
                 self.events.append(f"restore@{step}")
+        if final_save and not (self.save_every
+                               and step % self.save_every == 0):
+            self._save(step, state)
         self._settle()
         return state, step
 

@@ -51,6 +51,15 @@ class BatchServer:
         self.extra = extra_inputs or {}
         self._prefill = jax.jit(model.prefill)
         self._decode = jax.jit(model.decode)
+        # The pristine zero cache is allocated ONCE and reused across
+        # serve() waves: prefill/decode are functional (they return an
+        # updated cache, never mutate the argument), so every wave can
+        # start from this same buffer set - saving a slots x max_len
+        # allocation + zero-fill per wave.
+        self._cache0 = model.init_cache(
+            self.slots, self.max_len,
+            dtype=(jnp.dtype(model.cfg.dtype)
+                   if model.cfg.dtype != "bfloat16" else jnp.bfloat16))
 
     def _pad_batch(self, requests: Sequence[Sequence[int]]):
         assert len(requests) <= self.slots
@@ -67,10 +76,7 @@ class BatchServer:
         """Greedy-decode a wave of requests; returns per-request outputs."""
         stats = ServeStats()
         tokens, lens = self._pad_batch(requests)
-        cache = self.model.init_cache(self.slots, self.max_len,
-                                      dtype=jnp.dtype(self.model.cfg.dtype)
-                                      if self.model.cfg.dtype != "bfloat16"
-                                      else jnp.bfloat16)
+        cache = self._cache0
         batch = {"tokens": tokens, **self.extra}
         t0 = time.perf_counter()
         logits, cache = self._prefill(self.params, batch, cache)
@@ -100,9 +106,13 @@ class BatchServer:
                         stats.tokens_out += 1
             if done[:len(requests)].all():
                 break
+            # no per-token block_until_ready: the np.asarray(tok) host pull
+            # at the top of the next iteration is the only sync the loop
+            # needs, so decode dispatch stays pipelined with the host-side
+            # eos bookkeeping
             logits, cache = self._decode(self.params, cache, tok, pos)
-            logits = jax.block_until_ready(logits)
             tok = jnp.argmax(logits, axis=-1).astype(jnp.int32)
             pos = pos + 1
+        jax.block_until_ready(tok)   # settle the wave once for timing
         stats.decode_s = time.perf_counter() - t0
         return [outs[i] for i in range(len(requests))], stats

@@ -1,0 +1,467 @@
+"""Resident multi-tenant SNN serving: the session engine (DESIGN.md §16).
+
+The indegree-decomposition consts are a pure read-only function of the
+topology, so MANY independent simulation instances of the same scenario
+can share ONE compiled step function and ONE consts set - memory scales
+with per-instance :class:`~repro.core.engine.EngineState`, not topology.
+:class:`SessionEngine` turns that observation into infrastructure:
+
+* **one scenario, many sessions** - the engine binds to a single network
+  identity (``models.scenario_id``) on the first ``create``; every session
+  is just ``(seed, state)`` riding one slot of the fixed vmapped batch of
+  :func:`repro.core.engine.make_session_step_fn`.
+* **slot allocation with an active mask** - idle slots stay bit-for-bit
+  frozen under :func:`~repro.core.engine.masked_select` (the
+  ``serve/engine.py`` done-mask discipline), so a session stepped inside
+  ANY admission pattern computes exactly its solo trajectory.
+* **wave admission with a bounded queue** - when every slot is resident,
+  ``create`` parks new sessions in a FIFO queue (zero device cost) and
+  promotes them in waves as slots free; a full queue returns a
+  :class:`~repro.serve.sessions.Backpressure` VALUE, never raises.
+* **LRU eviction through the checkpoint manager** - a session is exactly
+  spec + seed + state (PR 7's ``network_metadata`` contract), so evicting
+  one is a blocking ``CheckpointManager.save`` of its flat-layout state
+  and restoring it is the PR 4/8 bit-exact round-trip into a fresh slot.
+* **supervised residency** - :meth:`run_supervised` drives the whole slot
+  batch under :class:`repro.runtime.supervisor.SimulationSupervisor`; a
+  crash restores EVERY resident session from its last committed snapshot
+  and replays bit-exactly.
+
+Cost model: ``step(sid, n)`` pays one full-batch vmapped step per dt (the
+masked slots compute and discard) - the throughput path is
+:meth:`step_wave`, which advances every requested session in the same
+batched step so aggregate steps/sec scales with residency.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.checkpoint.manager import CheckpointManager, session_metadata
+from repro.core import builder, engine, models
+from repro.core import neuron_models as neuron_models_mod
+from repro.core.stdp import STDPParams
+from repro.runtime.supervisor import SimulationSupervisor
+from repro.serve.sessions import (EVICTED, RESIDENT, Backpressure,
+                                  SessionTable)
+
+__all__ = ["SessionEngine"]
+
+
+class SessionEngine:
+    """Persistent multi-tenant front door over the single-shard engine.
+
+    Parameters
+    ----------
+    max_sessions:
+        slot count of the vmapped batch - the resident capacity.  Device
+        memory is ``max_sessions x`` one EngineState (consts shared).
+    sweep:
+        execution backend for the shared step ("flat" | "bucketed" |
+        "pallas" | "pallas:sparse" | ...).
+    queue_limit:
+        bounded admission queue length (default ``2 * max_sessions``).
+    ckpt_dir:
+        root for per-session checkpoint dirs
+        (``<ckpt_dir>/session_<sid:05d>``).  Required for LRU eviction and
+        :meth:`run_supervised`; without it a full engine queues and then
+        backpressures instead of evicting.
+    spike_window:
+        per-session host-side spike retention in steps (the
+        ``spikes(sid, window)`` stream buffer).
+    """
+
+    def __init__(self, *, max_sessions: int = 8, sweep: str = "flat",
+                 dt: float = 0.1, queue_limit: int | None = None,
+                 ckpt_dir: str | None = None, spike_window: int = 512,
+                 keep: int = 2, dtype=jnp.float32):
+        self.max_sessions = int(max_sessions)
+        self.sweep = sweep
+        self.dt = float(dt)
+        self.ckpt_dir = ckpt_dir
+        self.keep = int(keep)
+        self.dtype = dtype
+        self.table = SessionTable(
+            self.max_sessions,
+            queue_limit=(2 * self.max_sessions if queue_limit is None
+                         else queue_limit),
+            spike_window=spike_window)
+        # bound on first create()
+        self.spec = None
+        self.stdp: STDPParams | None = None
+        self.scenario_id: str | None = None
+        self.graph = None
+        self.param_table = None
+        self.cfg: engine.EngineConfig | None = None
+        self.ctx: engine.StepContext | None = None
+        self._step_fn = None
+        self._batch: engine.EngineState | None = None
+        self._active = np.zeros(self.max_sessions, dtype=bool)
+        self._mgrs: dict[int, CheckpointManager] = {}
+        self._committed_sup_step = 0
+
+    # ------------------------------------------------------------------ bind
+    def _bind(self, spec, stdp: STDPParams | None, scen_id: str) -> None:
+        """First ``create``: build consts once, jit ONE vmapped step."""
+        dec = builder.decompose(spec, 1)
+        graph = builder.build_shards(spec, dec)[0].device_arrays()
+        nmodel = neuron_models_mod.get_model(spec.neuron_model)
+        table = jnp.asarray(
+            nmodel.make_param_table(list(spec.groups), dt=self.dt))
+        cfg = engine.EngineConfig(dt=self.dt, stdp=stdp, sweep=self.sweep,
+                                  neuron_model=spec.neuron_model)
+        self._step_fn, self.ctx = engine.make_session_step_fn(
+            graph, table, cfg, self.max_sessions)
+        self.spec, self.stdp, self.scenario_id = spec, stdp, scen_id
+        self.graph, self.param_table, self.cfg = graph, table, cfg
+        # placeholder batch: every slot starts inactive on a seed-0 state
+        # (never stepped - the mask keeps it frozen until a session lands).
+        # The blank template is cached: init_state depends on the seed ONLY
+        # through key/drive_key, so _materialize can clone it per session
+        # instead of re-running the full init.
+        self._blank = self.ctx.init_state(list(spec.groups),
+                                          jax.random.key(0),
+                                          dtype=self.dtype)
+        self._batch = engine.stack_states(
+            [self._blank] * self.max_sessions)
+
+    def _check_bound(self, scen_id: str, stdp) -> None:
+        if self.scenario_id is None:
+            return
+        if scen_id != self.scenario_id or stdp != self.stdp:
+            raise ValueError(
+                "a SessionEngine serves ONE scenario (consts sharing is "
+                f"the point): bound to {self.scenario_id}, got {scen_id}. "
+                "Spin up another engine for a different network.")
+
+    # ------------------------------------------------------------ session api
+    def create(self, scenario="brunel", seed: int = 0,
+               **scenario_kwargs) -> "int | Backpressure":
+        """Open a session -> session id, or :class:`Backpressure` when
+        neither a slot (free or evictable) nor queue space exists.
+
+        ``scenario`` is a zoo name (kwargs forwarded, e.g.
+        ``create("brunel", seed=3, scale=0.02)``) or a ``NetworkSpec``.
+        Every session of one engine must resolve to the SAME scenario
+        identity; the seed is what makes sessions distinct.
+        """
+        spec, stdp, scen_id = models.resolve_scenario(scenario,
+                                                      **scenario_kwargs)
+        self._check_bound(scen_id, stdp)
+        if self.scenario_id is None:
+            self._bind(spec, stdp, scen_id)
+        rec = self.table.new_session(seed)
+        # admission only claims a FREE slot - evicting a resident to seat a
+        # brand-new session would thrash; the queue absorbs the burst and
+        # eviction happens on demand when a parked session is stepped
+        slot = self.table.free_slot()
+        if slot is not None:
+            self._materialize(rec, slot)
+            return rec.sid
+        if self.table.enqueue(rec.sid):
+            return rec.sid
+        bp = self.table.backpressure(
+            f"admission refused: {self.max_sessions} slots resident, "
+            f"queue at limit {self.table.queue_limit}")
+        del self.table.sessions[rec.sid]   # admission failed: no record
+        return bp
+
+    def step(self, sid: int, n: int = 1) -> "np.ndarray | Backpressure":
+        """Advance ONE session ``n`` dt -> its spike bits
+        ``(n, n_local) bool`` (other residents stay frozen under the
+        mask).  Backpressure when the session cannot be made resident."""
+        slot = self._ensure_resident(sid)
+        if isinstance(slot, Backpressure):
+            return slot
+        mask = np.zeros(self.max_sessions, dtype=bool)
+        mask[slot] = True
+        bits = self._advance(mask, n)
+        return bits[:, slot, :]
+
+    def step_wave(self, sids=None, n: int = 1
+                  ) -> "dict[int, np.ndarray] | Backpressure":
+        """Advance a wave of sessions TOGETHER (one batched step per dt) ->
+        ``{sid: (n, n_local) bool}``.  ``sids=None`` steps every resident
+        session; an explicit list is made resident first (members of the
+        wave are never evicted to place each other)."""
+        if sids is None:
+            sids = [s for s, r in self.table.sessions.items()
+                    if r.status == RESIDENT]
+        if not sids:
+            return {}
+        pinned = set(sids)
+        for sid in sids:
+            got = self._ensure_resident(sid, exclude=pinned)
+            if isinstance(got, Backpressure):
+                return got
+        mask = np.zeros(self.max_sessions, dtype=bool)
+        slots = {sid: self.table.get(sid).slot for sid in sids}
+        for slot in slots.values():
+            mask[slot] = True
+        bits = self._advance(mask, n)
+        return {sid: bits[:, slot, :] for sid, slot in slots.items()}
+
+    def spikes(self, sid: int, window: int | None = None
+               ) -> tuple[int, np.ndarray]:
+        """Stream the session's recorded spikes: ``(first_step, bits
+        (w, n_local) bool)`` for the last ``window`` recorded steps (all
+        retained when None).  Works in every non-closed state - the log is
+        host-side and survives eviction."""
+        return self.table.get(sid).spike_log.window_bits(window)
+
+    def snapshot(self, sid: int) -> tuple[engine.EngineState, dict]:
+        """``(flat-layout EngineState, checkpoint metadata)`` of the
+        session as of its last completed step - the exact pytree + identity
+        an eviction would commit."""
+        rec = self.table.get(sid)
+        if rec.status == RESIDENT:
+            state = self._extract_flat(rec.slot)
+        elif rec.status == EVICTED:
+            state, _ = self._mgr(sid).restore(
+                self._flat_target(rec.seed),
+                rec.committed_step if rec.committed_step >= 0 else None)
+        else:  # queued: never materialized -> its (deterministic) t=0 state
+            state = self._flat_target(rec.seed)
+        return state, session_metadata(self.spec, seed=rec.seed,
+                                       session_id=sid, step=rec.step,
+                                       extra={"scenario_id":
+                                              self.scenario_id})
+
+    def close(self, sid: int) -> None:
+        """Terminal: free the slot (if resident) and promote queued
+        sessions into whatever capacity opened up (wave admission)."""
+        rec = self.table.get(sid)
+        if rec.slot is not None:
+            self._active[rec.slot] = False
+        self.table.close(sid)
+        self._pump()
+
+    # ------------------------------------------------------------- telemetry
+    def session_info(self, sid: int) -> dict:
+        rec = self.table.get(sid)
+        info = dict(sid=sid, seed=rec.seed, status=rec.status,
+                    slot=rec.slot, step=rec.step,
+                    committed_step=rec.committed_step,
+                    recorded_steps=rec.spike_log.recorded_steps)
+        if rec.status == RESIDENT:
+            # per-slot telemetry rides the slot batch (gate saturation etc.)
+            info["gate_overflow"] = int(np.asarray(
+                engine.slot_state(self._batch, rec.slot).gate_overflow))
+        return info
+
+    def stats(self) -> dict:
+        out = self.table.counts()
+        out["slots"] = self.max_sessions
+        out["queue_limit"] = self.table.queue_limit
+        out["scenario_id"] = self.scenario_id
+        return out
+
+    # ---------------------------------------------------------- resident set
+    def _materialize(self, rec, slot: int) -> None:
+        """Fresh (never-stepped) session -> slot: the cached blank template
+        with this session's key leaves swapped in (bit-identical to a full
+        ``init_state(groups, key(seed))`` - every other leaf is a pure
+        function of the graph)."""
+        key = jax.random.key(rec.seed)
+        state = dataclasses.replace(
+            self._blank, key=key,
+            drive_key=(jax.random.fold_in(key, engine.DRIVE_SALT)
+                       if self._blank.drive_key is not None else None))
+        self._batch = engine.set_slot_state(self._batch, slot, state)
+        self._active[slot] = True
+        self.table.place(rec.sid, slot)
+
+    def _ensure_resident(self, sid: int,
+                         exclude: set[int] = frozenset()
+                         ) -> "int | Backpressure":
+        rec = self.table.get(sid)
+        if rec.status == RESIDENT:
+            self.table.touch(sid)
+            return rec.slot
+        slot = self._acquire_slot(exclude=exclude | {sid})
+        if slot is None:
+            return self.table.backpressure(
+                f"session {sid} cannot be placed: no free slot and no "
+                "evictable resident"
+                + ("" if self.ckpt_dir else " (no ckpt_dir: eviction off)"))
+        if rec.status == EVICTED:
+            self._restore_into(rec, slot)
+        else:                      # queued -> first materialization
+            self._materialize(rec, slot)
+        return slot
+
+    def _acquire_slot(self, exclude: set[int]) -> int | None:
+        slot = self.table.free_slot()
+        if slot is not None:
+            return slot
+        if self.ckpt_dir is None:
+            return None
+        victim = self.table.lru_resident(exclude)
+        if victim is None:
+            return None
+        return self._evict(victim)
+
+    def _evict(self, sid: int) -> int:
+        """Blocking commit of the victim's flat state, then free its slot.
+        Eviction IS a checkpoint: spec + seed + state round-trips through
+        the PR 4/8-pinned manager path."""
+        rec = self.table.get(sid)
+        state = self._extract_flat(rec.slot)
+        self._mgr(sid).save(
+            rec.step, state,
+            metadata=session_metadata(self.spec, seed=rec.seed,
+                                      session_id=sid, step=rec.step,
+                                      extra={"scenario_id":
+                                             self.scenario_id}),
+            blocking=True)
+        rec.committed_step = rec.step
+        slot = self.table.displace(sid, status=EVICTED)
+        self._active[slot] = False
+        return slot
+
+    def _restore_into(self, rec, slot: int) -> None:
+        state, md = self._mgr(rec.sid).restore(
+            self._flat_target(rec.seed),
+            rec.committed_step if rec.committed_step >= 0 else None)
+        rec.step = int(md["session"]["step"])
+        native = engine.state_with_weights_layout(
+            state, self.graph, self.ctx.backend.weights_layout,
+            backend=self.ctx.backend)
+        self._batch = engine.set_slot_state(self._batch, slot, native)
+        self._active[slot] = True
+        self.table.place(rec.sid, slot)
+
+    def _pump(self) -> None:
+        """Wave admission: promote queued sessions FIFO into free slots."""
+        while True:
+            sid = self.table.next_queued()
+            if sid is None:
+                return
+            slot = self.table.free_slot()
+            if slot is None:
+                return
+            self._materialize(self.table.get(sid), slot)
+
+    # ------------------------------------------------------------- internals
+    def _advance(self, mask: np.ndarray, n: int) -> np.ndarray:
+        """Run ``n`` masked batched steps; record + return host bits
+        ``(n, max_sessions, n_local)``."""
+        self._batch, bits = self._step_fn(self._batch, jnp.asarray(mask), n)
+        host = np.asarray(bits)
+        for slot in np.flatnonzero(mask):
+            sid = self.table.slots[slot]
+            rec = self.table.get(sid)
+            rec.spike_log.append(rec.step, host[:, slot, :])
+            rec.step += n
+            rec.last_used = self.table._tick()
+        return host
+
+    def _extract_flat(self, slot: int) -> engine.EngineState:
+        return engine.state_with_weights_layout(
+            engine.slot_state(self._batch, slot), self.graph, "flat",
+            backend=self.ctx.backend)
+
+    def _flat_target(self, seed: int) -> engine.EngineState:
+        """Flat-layout state skeleton matching the committed tree."""
+        return engine.init_state(self.graph, list(self.spec.groups),
+                                 jax.random.key(seed), dtype=self.dtype,
+                                 neuron_model=self.cfg.neuron_model)
+
+    def _mgr(self, sid: int) -> CheckpointManager:
+        if self.ckpt_dir is None:
+            raise RuntimeError(
+                "this SessionEngine has no ckpt_dir: eviction and "
+                "supervised running need per-session checkpoints")
+        mgr = self._mgrs.get(sid)
+        if mgr is None:
+            mgr = CheckpointManager(
+                os.path.join(self.ckpt_dir, f"session_{sid:05d}"),
+                keep=self.keep)
+            self._mgrs[sid] = mgr
+        return mgr
+
+    # ------------------------------------------------------------ supervision
+    def _commit_all(self, sup_step: int) -> None:
+        """Blocking snapshot of EVERY resident session at its own step -
+        the supervised run's commit point."""
+        for sid, rec in self.table.sessions.items():
+            if rec.status != RESIDENT:
+                continue
+            state = self._extract_flat(rec.slot)
+            self._mgr(sid).save(
+                rec.step, state,
+                metadata=session_metadata(self.spec, seed=rec.seed,
+                                          session_id=sid, step=rec.step,
+                                          extra={"scenario_id":
+                                                 self.scenario_id}),
+                blocking=True)
+            rec.committed_step = rec.step
+        self._committed_sup_step = sup_step
+
+    def _restore_resident(self, _state):
+        """Supervisor ``restore_fn``: reload every resident session from
+        its last committed snapshot (never-committed ones rewind to their
+        deterministic t=0 state) and truncate spike logs past the commit -
+        the replayed steps re-record identical bits."""
+        for sid, rec in self.table.sessions.items():
+            if rec.status != RESIDENT:
+                continue
+            if rec.committed_step >= 0:
+                state, md = self._mgr(sid).restore(
+                    self._flat_target(rec.seed), rec.committed_step)
+                rec.step = int(md["session"]["step"])
+            else:
+                state = self._flat_target(rec.seed)
+                rec.step = 0
+            native = engine.state_with_weights_layout(
+                state, self.graph, self.ctx.backend.weights_layout,
+                backend=self.ctx.backend)
+            self._batch = engine.set_slot_state(self._batch, rec.slot,
+                                                native)
+            rec.spike_log.truncate(rec.step)
+        return self._batch, self._committed_sup_step
+
+    def run_supervised(self, n_steps: int, *, save_every: int = 20,
+                       policy=None, injector=None, heartbeat=None,
+                       on_step=None) -> "SimulationSupervisor":
+        """Drive every resident session ``n_steps`` dt under
+        :class:`SimulationSupervisor` (Layer 3 of DESIGN.md §16).
+
+        The supervisor's commit point (`save_every`, plus a final commit)
+        is a blocking save of ALL resident sessions; an injected or real
+        crash restores the whole resident set from the last commit and
+        replays bit-exactly.  Returns the supervisor (its ``events`` /
+        ``delays`` are the fault-handling telemetry).
+        """
+        if self._batch is None:
+            raise RuntimeError("no sessions: create() before supervising")
+        if self.ckpt_dir is None:
+            raise RuntimeError(
+                "run_supervised needs ckpt_dir (the commit target)")
+        self._committed_sup_step = 0
+        mask = jnp.asarray(self._active.copy())
+        resident = [(sid, rec.slot) for sid, rec in
+                    self.table.sessions.items() if rec.status == RESIDENT]
+
+        def step_fn(batch, step):
+            self._batch, bits = self._step_fn(batch, mask, 1)
+            host = np.asarray(bits)
+            for sid, slot in resident:
+                rec = self.table.get(sid)
+                rec.spike_log.append(rec.step, host[:, slot, :])
+                rec.step += 1
+            return self._batch, bits
+
+        sup = SimulationSupervisor(
+            None, save_every=save_every, policy=policy, injector=injector,
+            heartbeat=heartbeat,
+            pre_save=lambda step, _state: self._commit_all(step),
+            restore_fn=self._restore_resident)
+        self._batch, _ = sup.run(self._batch, step_fn, n_steps,
+                                 on_step=on_step, final_save=True)
+        return sup

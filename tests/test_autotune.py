@@ -247,3 +247,68 @@ def test_pallas_auto_backend_matches_flat_trajectory():
     assert s_f.sum() > 0, "vacuous - nothing spiked"
     assert (s_f == s_a).all()
     np.testing.assert_allclose(w_f, w_a, atol=1e-4)
+
+
+def _gate_payload(entries):
+    """BENCH_*.json-shaped payload from {(sig, cap): (ovf, occ)}."""
+    return {"records": [
+        {"name": f"gate_tune/{sig}/cap{cap}", "us_per_call": 1.0,
+         "overflow_rate": ovf, "occupancy": occ}
+        for (sig, cap), (ovf, occ) in entries.items()]}
+
+
+def test_load_measured_gate_parse_and_fallbacks(tmp_path):
+    import json
+
+    good = {("aa" * 6, 4): (0.1, 0.9), ("aa" * 6, 8): (0.0, 0.45)}
+    p = tmp_path / "bench.json"
+    p.write_text(json.dumps(_gate_payload(good)))
+    assert autotune.load_measured_gate(str(p)) == good
+    # tolerant of a missing file and of malformed records
+    assert autotune.load_measured_gate(str(tmp_path / "nope.json")) == {}
+    bad = tmp_path / "bad.json"
+    bad.write_text(json.dumps({"records": [
+        {"name": "gate_tune/zz/capX", "overflow_rate": 0.0},
+        {"name": "gate_tune/short"}, {"name": "other/thing"}]}))
+    assert autotune.load_measured_gate(str(bad)) == {}
+
+
+def test_measured_gate_capacity_selection(tmp_path):
+    """Smallest zero-overflow capacity wins; all-overflowing data falls
+    back to the least-overflowing candidate; unknown signatures return
+    None so gate_capacity can use the byte model."""
+    sig = "bb" * 6
+    m = {(sig, 4): (0.2, 1.1), (sig, 8): (0.0, 0.6), (sig, 16): (0.0, 0.3)}
+    assert autotune.measured_gate_capacity(m, sig, nb=64,
+                                           min_capacity=2) == 8
+    # min_capacity / nb clipping still applies to the measured pick
+    assert autotune.measured_gate_capacity(m, sig, nb=6,
+                                           min_capacity=2) == 6
+    assert autotune.measured_gate_capacity(m, sig, nb=64,
+                                           min_capacity=12) == 12
+    only_ovf = {(sig, 4): (0.3, 1.2), (sig, 8): (0.1, 0.8)}
+    assert autotune.measured_gate_capacity(only_ovf, sig, nb=64,
+                                           min_capacity=2) == 8
+    assert autotune.measured_gate_capacity(m, "cc" * 6, nb=64,
+                                           min_capacity=2) is None
+
+
+def test_gate_capacity_measured_spelling(tmp_path):
+    """gate_capacity(rate="measured:<path>") uses the record for a known
+    signature and the DEFAULT_GATE_RATE model otherwise; bad spellings
+    fail loudly."""
+    import json
+
+    sig = "dd" * 6
+    p = tmp_path / "bench.json"
+    p.write_text(json.dumps(_gate_payload({(sig, 8): (0.0, 0.5)})))
+    spec = f"measured:{p}"
+    assert autotune.gate_capacity(64, 10_000, spec, min_capacity=2,
+                                  signature=sig) == 8
+    # unmeasured signature -> the byte-model answer for the same geometry
+    want = autotune.gate_capacity(64, 10_000, autotune.DEFAULT_GATE_RATE,
+                                  min_capacity=2)
+    assert autotune.gate_capacity(64, 10_000, spec, min_capacity=2,
+                                  signature="ee" * 6) == want
+    with pytest.raises(ValueError):
+        autotune.gate_capacity(64, 10_000, "nonsense:path")

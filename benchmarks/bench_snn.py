@@ -624,6 +624,12 @@ def bench_gate_tune(out, *, quick=False):
     DATA instead of the firing-rate byte model.  The simulation is
     deterministic (fixed seed), so overflow_rate/occupancy are exact
     perf-trajectory invariants.
+
+    Two networks are measured: the hpc verification net (the profile
+    network every other tuned axis keys on) and the area-localized
+    marmoset net at quick geometry - the paper's benchmark topology,
+    whose exponential-distance connectivity gives the gate a very
+    different indegree signature than the uniform hpc net.
     """
     from repro.core import autotune
 
@@ -631,46 +637,119 @@ def bench_gate_tune(out, *, quick=False):
     # steps at dt=0.1): measure the gate over a post-warmup window or
     # every record degenerates to peak_active=0
     scale, n_steps, warm = (0.05, 500, 250) if quick else (0.1, 700, 300)
-    spec, stdp, tag = _scenario_net(scale)
-    dec = builder.decompose(spec, 1)
-    g = builder.build_shards(spec, dec)[0].device_arrays()
+    m_scale = 0.001 if quick else 0.002
+    nets = [_scenario_net(scale) + (scale, "area"),
+            models.get_scenario("marmoset", scale=m_scale, n_areas=4)
+            + ("marmoset", m_scale, "random")]
+    for spec, stdp, tag, net_scale, method in nets:
+        # the marmoset net keeps its multi-area structure but lands on
+        # ONE shard here (random mapping; area mapping needs >= 1 device
+        # per area) - the gate only sees the merged indegree profile
+        dec = builder.decompose(spec, 1, method=method)
+        g = builder.build_shards(spec, dec)[0].device_arrays()
+        nmodel = neuron_models_mod.get_model(spec.neuron_model)
+        table = jnp.asarray(
+            nmodel.make_param_table(list(spec.groups), dt=0.1))
+        cfg = engine.EngineConfig(dt=0.1, stdp=stdp, sweep="flat",
+                                  neuron_model=spec.neuron_model)
+        sp = backends_mod.get_backend("pallas:sparse")
+        lay = sp.prepare(g)
+        # signature over the LAYOUT's degrees - exactly what the
+        # measured-spec backend computes at gate_capacity time, so
+        # records always match
+        sig = autotune.degree_signature(
+            autotune.degrees_from_graphs([lay]))
+        nb = lay.blocked.nb
+        step = engine.make_step_fn(g, table, cfg)
+        n_active_fn = jax.jit(lambda r, t: sp.gate_stats(lay, r, t)[1])
+        st = engine.init_state(g, list(spec.groups), jax.random.key(0),
+                               sweep="flat")
+        n_act = []
+        t0 = time.perf_counter()
+        for _ in range(n_steps):
+            st, _ = step(st)
+            n_act.append(int(n_active_fn(st.ring, st.t)))
+        us = (time.perf_counter() - t0) * 1e6 / n_steps
+        n_act = np.asarray(n_act)[warm:]
+        peak = int(n_act.max())
+        model_cap = autotune.gate_capacity(nb, lay.n_edges,
+                                           autotune.DEFAULT_GATE_RATE)
+        # candidate ladder around the observed peak (plus the model's
+        # pick): below-peak points measure the overflow cost curve,
+        # at/above-peak points are the zero-overflow provisioning
+        # candidates
+        caps = sorted({max(peak // 2, 1), max(peak, 1),
+                       min(max(int(np.ceil(peak * 1.25)), peak + 1), nb),
+                       model_cap})
+        for cap in caps:
+            out(f"gate_tune/{sig}/cap{cap}", us,
+                dict(capacity=cap, nb=nb,
+                     overflow_rate=round(float((n_act > cap).mean()), 4),
+                     occupancy=round(float(n_act.mean() / max(cap, 1)),
+                                     4),
+                     peak_active=peak, n_steps=n_steps, warmup=warm,
+                     scenario=tag, scale=net_scale))
+
+
+def bench_surrogate(out, *, quick=False):
+    """Differentiable-mode cost axes (DESIGN.md §17).
+
+    Two questions the training subsystem's overhead story rests on:
+
+    * **Step overhead** - surrogate mode's forward trajectory is
+      bit-identical to inference, so any step-time gap is the float
+      spike ring + custom-JVP dispatch, not different dynamics
+      (``snn_surrogate/step/{inference,surrogate}``).
+    * **Remat win** - compiled peak TEMP memory of a reverse-mode
+      rollout gradient at T=200, naive scan vs chunked
+      ``jax.checkpoint`` (``repro.diff.rollout``); the ``us_per_call``
+      is the compiled grad's wall time, so the memory/compute trade
+      rides along.  ``benchmarks/diff.py`` guards checkpointed < naive
+      from the fresh run alone.
+    """
+    import dataclasses as dataclasses_mod
+
+    from repro.diff import rollout as rollout_mod
+
+    scale = 0.02 if quick else 0.05
+    reps = 30 if quick else 100
+    spec, _ = models.get_scenario("brunel", scale=scale)
+    g = builder.build_shards(spec, builder.decompose(spec, 1))[0] \
+        .device_arrays()
     nmodel = neuron_models_mod.get_model(spec.neuron_model)
     table = jnp.asarray(nmodel.make_param_table(list(spec.groups), dt=0.1))
-    cfg = engine.EngineConfig(dt=0.1, stdp=stdp, sweep="flat",
+    st0 = engine.init_state(g, list(spec.groups), jax.random.key(0))
+    for mode, spike in (("inference", None),
+                        ("surrogate", "fast_sigmoid")):
+        cfg = engine.EngineConfig(dt=0.1, surrogate=spike,
+                                  neuron_model=spec.neuron_model)
+        step = engine.make_step_fn(g, table, cfg)
+        us = _time(step, (st0,), reps)
+        out(f"snn_surrogate/step/{mode}", us,
+            dict(n_neurons=g.n_local, edges=g.n_edges, scale=scale,
+                 surrogate=spike or "none"))
+
+    n_steps = 200
+    cfg = engine.EngineConfig(dt=0.1, surrogate="fast_sigmoid",
                               neuron_model=spec.neuron_model)
-    sp = backends_mod.get_backend("pallas:sparse")
-    lay = sp.prepare(g)
-    # signature over the LAYOUT's degrees - exactly what the measured-spec
-    # backend computes at gate_capacity time, so records always match
-    sig = autotune.degree_signature(autotune.degrees_from_graphs([lay]))
-    nb = lay.blocked.nb
-    step = engine.make_step_fn(g, table, cfg)
-    n_active_fn = jax.jit(lambda r, t: sp.gate_stats(lay, r, t)[1])
-    st = engine.init_state(g, list(spec.groups), jax.random.key(0),
-                           sweep="flat")
-    n_act = []
-    t0 = time.perf_counter()
-    for _ in range(n_steps):
-        st, _ = step(st)
-        n_act.append(int(n_active_fn(st.ring, st.t)))
-    us = (time.perf_counter() - t0) * 1e6 / n_steps
-    n_act = np.asarray(n_act)[warm:]
-    peak = int(n_act.max())
-    model_cap = autotune.gate_capacity(nb, lay.n_edges,
-                                       autotune.DEFAULT_GATE_RATE)
-    # candidate ladder around the observed peak (plus the model's pick):
-    # below-peak points measure the overflow cost curve, at/above-peak
-    # points are the zero-overflow provisioning candidates
-    caps = sorted({max(peak // 2, 1), max(peak, 1),
-                   min(max(int(np.ceil(peak * 1.25)), peak + 1), nb),
-                   model_cap})
-    for cap in caps:
-        out(f"gate_tune/{sig}/cap{cap}", us,
-            dict(capacity=cap, nb=nb,
-                 overflow_rate=round(float((n_act > cap).mean()), 4),
-                 occupancy=round(float(n_act.mean() / max(cap, 1)), 4),
-                 peak_active=peak, n_steps=n_steps, warmup=warm,
-                 scenario=tag, scale=scale))
+
+    def make_loss(ck):
+        def loss(w):
+            st = dataclasses_mod.replace(st0, weights=w)
+            _, spikes = rollout_mod.rollout(st, g, table, cfg, n_steps,
+                                            checkpoint_every=ck)
+            return jnp.mean(spikes)
+        return loss
+
+    for label, ck in (("naive", None), ("ckpt25", 25)):
+        loss = make_loss(ck)
+        temp = rollout_mod.grad_peak_memory_bytes(loss, st0.weights)
+        us = _time(jax.jit(jax.grad(loss)), (st0.weights,),
+                   max(reps // 10, 3))
+        out(f"snn_surrogate/rollout_mem/{label}", us,
+            dict(temp_bytes=int(temp), n_steps=n_steps,
+                 checkpoint_every=ck or 0, n_neurons=g.n_local,
+                 scale=scale))
 
 
 _SESSION_SOLO_CODE = """
@@ -766,7 +845,8 @@ def main(out, backend: str | None = None, *, wires=DEFAULT_WIRES,
          processes: int | None = None, devices_per_process: int = 2,
          quick: bool = False, profile: bool = False, model: str = "lif",
          scenario: str | None = None, ckpt: bool = False,
-         sessions: int | None = None, gate_tune: bool = False):
+         sessions: int | None = None, gate_tune: bool = False,
+         surrogate: bool = False):
     if sessions:
         # multi-tenant serving axis only: batched vs sequential throughput
         bench_sessions(out, quick=quick, n_sessions=sessions)
@@ -774,6 +854,11 @@ def main(out, backend: str | None = None, *, wires=DEFAULT_WIRES,
     if gate_tune:
         # measured gate-capacity records only (pallas:sparse provisioning)
         bench_gate_tune(out, quick=quick)
+        return
+    if surrogate:
+        # differentiable-mode axis only: surrogate step overhead + the
+        # checkpointed-rollout gradient memory trade (DESIGN.md §17)
+        bench_surrogate(out, quick=quick)
         return
     if ckpt:
         # checkpoint save/restore overhead only (fault-tolerance axis)
@@ -851,6 +936,10 @@ if __name__ == "__main__":
                     help="measured gate-capacity records only "
                          "(gate_tune/<sig>/cap{K}: overflow rate + "
                          "occupancy per candidate worklist capacity)")
+    ap.add_argument("--surrogate", action="store_true",
+                    help="differentiable-mode axis only: surrogate vs "
+                         "inference step overhead + naive vs checkpointed "
+                         "rollout gradient peak memory at T=200")
     ap.add_argument("--quick", action="store_true",
                     help="tiny config: smallest scales, few reps (CI smoke)")
     ap.add_argument("--profile", action="store_true",
@@ -894,7 +983,8 @@ if __name__ == "__main__":
          devices_per_process=args.devices_per_process,
          quick=args.quick, profile=args.profile,
          model=args.model, scenario=args.scenario, ckpt=args.ckpt,
-         sessions=args.sessions, gate_tune=args.gate_tune)
+         sessions=args.sessions, gate_tune=args.gate_tune,
+         surrogate=args.surrogate)
     if args.json:
         os.makedirs(os.path.dirname(args.json) or ".", exist_ok=True)
         with open(args.json, "w") as f:

@@ -1,7 +1,7 @@
 """Perf-trajectory guard: diff a fresh BENCH run against the committed
 baseline (``benchmarks/run.py --json`` output).
 
-Six independent checks, ordered machine-independent first:
+Seven independent checks, ordered machine-independent first:
 
 1. **Structure** - the fresh run must produce exactly the committed
    record set (a silently dropped backend/wire/phase leg fails CI even
@@ -19,7 +19,11 @@ Six independent checks, ordered machine-independent first:
    rows) build must peak strictly below the materialize-then-route
    pipeline at the largest scale both modes ran (the DESIGN.md §14
    memory claim, immune to absolute RSS baselines).
-6. **Timing drift** - fresh/baseline timing ratios, normalized by the
+6. **Remat win** - from the FRESH run alone: the checkpointed rollout
+   gradient's compiled peak temp memory must stay strictly below the
+   naive scan's at T=200 (the DESIGN.md §17 remat policy; byte counts
+   are jax-version-dependent, so only the ordering is guarded).
+7. **Timing drift** - fresh/baseline timing ratios, normalized by the
    run's median ratio (cancels absolute machine speed), must stay inside
    a wide band; catches one phase regressing relative to the rest.
 
@@ -40,7 +44,7 @@ EXACT_FIELDS = ("wire_bytes_step", "wire_bytes_intra", "wire_bytes_inter",
                 "eb", "pb", "edges", "active_fraction", "overflow",
                 "n_active", "ckpt_bytes", "ckpt_leaves", "overflow_rate",
                 "occupancy", "peak_active", "n_sessions", "n_steps",
-                "warmup")
+                "warmup", "checkpoint_every")
 
 
 def _records(path):
@@ -150,6 +154,34 @@ def check_build_rss(fresh, errors):
               f"materialized {mat}MB ({mat / max(proc, 1e-9):.2f}x)")
 
 
+def check_remat_win(fresh, errors):
+    """Checkpointed-rollout memory claim, fresh run only: the chunked
+    ``jax.checkpoint`` gradient's compiled peak TEMP bytes must stay
+    strictly below the naive scan's at T=200 (DESIGN.md §17 - the remat
+    policy ``repro.diff`` trains under).  Absolute byte counts are
+    jax-version-dependent, so only the ordering is guarded."""
+    mem = {r["name"].split("/")[-1]: r for r in fresh.values()
+           if r["name"].startswith("snn_surrogate/rollout_mem/")}
+    if not mem:
+        errors.append("no snn_surrogate/rollout_mem records in fresh run")
+        return
+    naive = mem.get("naive")
+    ckpts = {k: r for k, r in mem.items() if k != "naive"}
+    if naive is None or not ckpts:
+        errors.append(f"rollout_mem records incomplete: {sorted(mem)}")
+        return
+    for k, r in sorted(ckpts.items()):
+        if r["temp_bytes"] >= naive["temp_bytes"]:
+            errors.append(
+                f"remat win lost at T={r['n_steps']}: {k} grad peak "
+                f"temp {r['temp_bytes']}B >= naive "
+                f"{naive['temp_bytes']}B")
+        else:
+            print(f"remat win at T={r['n_steps']}: {k} grad peak temp "
+                  f"{r['temp_bytes']}B vs naive {naive['temp_bytes']}B "
+                  f"({naive['temp_bytes'] / max(r['temp_bytes'], 1):.2f}x)")
+
+
 def check_drift(fresh, base, errors, *, band):
     shared = sorted(set(fresh) & set(base))
     ratios = {}
@@ -195,6 +227,7 @@ def main(argv=None) -> int:
     check_gate_win(fresh, errors, factor=args.gate_factor)
     check_session_win(fresh, errors, factor=args.session_factor)
     check_build_rss(fresh, errors)
+    check_remat_win(fresh, errors)
     check_drift(fresh, base, errors, band=args.drift)
 
     if errors:

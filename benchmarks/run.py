@@ -71,6 +71,10 @@ def _bench_json(path: str, scale: str) -> None:
     # from data: gate_rate="measured:BENCH_full.json"); the deterministic
     # overflow_rate/occupancy fields are exact invariants
     bench_snn.bench_gate_tune(out, quick=quick)
+    # differentiable-mode costs (DESIGN.md §17): surrogate vs inference
+    # step overhead + naive vs checkpointed rollout gradient peak memory;
+    # diff.py holds checkpointed temp bytes strictly below naive at T=200
+    bench_snn.bench_surrogate(out, quick=quick)
     # multi-tenant serving throughput: N resident sessions in ONE vmapped
     # slot batch vs N sequential one-shot runs (DESIGN.md §16);
     # diff.py holds the batched speedup_vs_sequential above its floor

@@ -133,11 +133,13 @@ def gate_capacity(nb: int, n_edges: int, rate, *,
             raise ValueError(
                 f"gate rate spec must be a float or 'measured:<path>', "
                 f"got {rate!r}")
+        path = rate.split(":", 1)[1]
         cap = measured_gate_capacity(
-            load_measured_gate(rate.split(":", 1)[1]), signature,
+            load_measured_gate(path), signature,
             nb=nb, min_capacity=min_capacity)
         if cap is not None:
             return cap
+        _warn_measured_fallback(path, signature)
         rate = DEFAULT_GATE_RATE   # no measurement for this network
     if not 0.0 < rate <= 1.0:
         raise ValueError(f"gate rate must be in (0, 1], got {rate!r}")
@@ -145,6 +147,29 @@ def gate_capacity(nb: int, n_edges: int, rate, *,
     p_active = 1.0 - (1.0 - rate) ** k
     cap = max(int(np.ceil(nb * p_active)), min_capacity)
     return min(cap, nb)
+
+
+# (path, signature) pairs already warned about - the fallback fires once
+# per distinct miss, not once per step/jit trace
+_warned_measured_fallbacks: set = set()
+
+
+def _warn_measured_fallback(path: str, signature: str | None) -> None:
+    """One-time warning when a ``measured:<path>`` gate spec silently
+    degrades to the byte model: either the BENCH file has no
+    ``gate_tune/`` records at all, or none for this network's signature.
+    Silent fallback here cost a debugging session once - the capacity
+    quietly came from :data:`DEFAULT_GATE_RATE` instead of measurement."""
+    import warnings
+    key = (path, signature)
+    if key in _warned_measured_fallbacks:
+        return
+    _warned_measured_fallbacks.add(key)
+    warnings.warn(
+        f"gate capacity spec 'measured:{path}' has no gate_tune record "
+        f"for signature {signature!r}; falling back to the byte model at "
+        f"rate {DEFAULT_GATE_RATE} (run benchmarks.bench_snn --gate-tune "
+        "to measure this network)", RuntimeWarning, stacklevel=3)
 
 
 def load_measured_gate(path: str) -> dict:

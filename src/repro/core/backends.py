@@ -397,7 +397,8 @@ class SweepBackend:
     def neuron_update(self, layout: EdgeLayout, neurons, table, input_ex,
                       input_in, *,
                       synapse_model: str = snn.SynapseModel.CURRENT_EXP,
-                      model=None, key=None, t=None, gid=None):
+                      model=None, key=None, t=None, gid=None,
+                      surrogate=None):
         """Fused propagate/threshold/reset/refractory for one dt,
         dispatched through the NeuronModel registry (DESIGN.md §12).
 
@@ -406,11 +407,20 @@ class SweepBackend:
         path); ``key``/``t``/``gid`` feed stochastic models (poisson
         emitters; ``gid`` keys per-neuron draws by GLOBAL id so they are
         decomposition-invariant) and are ignored by deterministic
-        dynamics.
+        dynamics.  ``surrogate`` (DESIGN.md §17) selects the
+        surrogate-gradient spike on models that support it; the kwarg is
+        only forwarded when set, so inference-mode dispatch - and every
+        model that never opted in - is untouched.
         """
         m = neuron_models_mod.get_model("lif" if model is None else model)
+        if surrogate is None:
+            return m.step(neurons, table, input_ex, input_in,
+                          synapse_model=synapse_model, key=key, t=t,
+                          gid=gid)
+        m.spike_fn(surrogate)   # raises early on non-surrogate models
         return m.step(neurons, table, input_ex, input_in,
-                      synapse_model=synapse_model, key=key, t=t, gid=gid)
+                      synapse_model=synapse_model, key=key, t=t, gid=gid,
+                      surrogate=surrogate)
 
     # -- plasticity -------------------------------------------------------
     def stdp_update(self, layout: EdgeLayout, weights, arrived, post_spike,
@@ -615,11 +625,21 @@ class PallasBackend(SweepBackend):
 
     def neuron_update(self, layout, neurons, table, input_ex, input_in, *,
                       synapse_model: str = snn.SynapseModel.CURRENT_EXP,
-                      model=None, key=None, t=None, gid=None):
+                      model=None, key=None, t=None, gid=None,
+                      surrogate=None):
         # kernel path when the model ships a Pallas twin (lif/izhikevich/
         # adex); models without one (poisson) run their jnp step - it is
-        # a single elementwise draw, the same on every backend
+        # a single elementwise draw, the same on every backend.
+        # Surrogate mode (DESIGN.md §17) runs the jnp oracle instead: the
+        # kernels have no VJP, and the §12 interpret contract (kernel ==
+        # oracle bit-for-bit) keeps the forward trajectory identical -
+        # pinned by tests/test_diff.py.
         m = neuron_models_mod.get_model("lif" if model is None else model)
+        if surrogate is not None:
+            m.spike_fn(surrogate)   # raises early on non-surrogate models
+            return m.step(neurons, table, input_ex, input_in,
+                          synapse_model=synapse_model, key=key, t=t,
+                          gid=gid, surrogate=surrogate)
         if m.kernel_step is None:
             return m.step(neurons, table, input_ex, input_in,
                           synapse_model=synapse_model, key=key, t=t, gid=gid)

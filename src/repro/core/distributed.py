@@ -1025,7 +1025,8 @@ def _build_step(mesh: Mesh, groups, cfg: DistributedConfig, max_delay: int,
         neurons = backend.neuron_update(
             layout, neurons, table, input_ex, input_in,
             synapse_model=cfg.engine.synapse_model,
-            model=model, key=mkey, t=t, gid=g.get("global_id"))
+            model=model, key=mkey, t=t, gid=g.get("global_id"),
+            surrogate=cfg.engine.surrogate)
         bits = neurons.spike
 
         # ---- (4) plasticity ----------------------------------------------

@@ -75,7 +75,8 @@ __all__ = ["ShardGraph", "EngineConfig", "EngineState", "init_state",
            "engine_step", "run", "synaptic_sweep",
            "state_with_weights_layout", "StepContext", "make_step_context",
            "make_step_fn", "make_session_step_fn", "stack_states",
-           "slot_state", "set_slot_state", "masked_select"]
+           "slot_state", "set_slot_state", "masked_select",
+           "normalize_spike_dtype"]
 
 
 @dataclasses.dataclass(frozen=True)
@@ -148,6 +149,17 @@ class EngineConfig:
     # the state must be built for the same model (init_state(neuron_model=)
     # and <model>.make_param_table); mismatches raise at trace time.
     neuron_model: str = "lif"
+    # surrogate-gradient mode (DESIGN.md §17): None = inference (the
+    # historical bit-exact path); "st[:width]" / "fast_sigmoid[:beta]"
+    # swap the spike Heaviside's backward for a pseudo-derivative on the
+    # threshold models.  Forward trajectories are bit-identical either
+    # way; spike_bits become float {0.0, 1.0} carrying the gradient.
+    surrogate: str | None = None
+    # external stochastic drive sampler: "poisson" (exact integer events,
+    # the historical path) or "diffusion" (Gaussian mean + sqrt-variance
+    # reparameterization of the same rate - differentiable w.r.t.
+    # graph.ext_rate, the knob parameter inversion fits through).
+    external_drive_mode: str = "poisson"
 
 
 @dataclasses.dataclass
@@ -274,6 +286,24 @@ def _poisson_drive(key, graph: ShardGraph, dt: float, dtype):
     return (graph.ext_weight * events).astype(dtype)
 
 
+def _diffusion_drive(key, graph: ShardGraph, dt: float, dtype):
+    """Gaussian diffusion approximation of the Poisson drive: same mean
+    and variance (``lam + sqrt(lam) * N(0,1)``), but REPARAMETERIZED - the
+    noise is sampled once from the key stream and the event count is a
+    smooth function of ``graph.ext_rate``, so reverse-mode AD reaches the
+    drive rate (the ``eta`` axis of brunel inversion, DESIGN.md §17).
+    Integer-ness of event counts is given up; at the high collapsed rates
+    the scenarios use (hundreds of expected events/s/neuron) the
+    approximation error is far below the synaptic noise floor."""
+    lam = graph.ext_rate * (dt * 1e-3)
+    eps = jax.random.normal(key, (graph.n_local,), dtype=jnp.float32)
+    events = lam + jnp.sqrt(lam) * eps
+    return (graph.ext_weight * events).astype(dtype)
+
+
+_DRIVES = {"poisson": _poisson_drive, "diffusion": _diffusion_drive}
+
+
 def engine_step(state: EngineState, graph: ShardGraph, table: jax.Array,
                 cfg: EngineConfig, *,
                 backend: "backends_mod.SweepBackend | None" = None,
@@ -328,13 +358,19 @@ def engine_step(state: EngineState, graph: ShardGraph, table: jax.Array,
         if state.drive_key is not None:
             mkey = state.drive_key
     if cfg.external_drive and graph.ext_rate is not None:
-        input_ex = input_ex + _poisson_drive(sub, graph, cfg.dt, dtype)
+        if cfg.external_drive_mode not in _DRIVES:
+            raise ValueError(
+                f"unknown external_drive_mode {cfg.external_drive_mode!r};"
+                f" available: {sorted(_DRIVES)}")
+        drive = _DRIVES[cfg.external_drive_mode]
+        input_ex = input_ex + drive(sub, graph, cfg.dt, dtype)
 
     # (3) neuron dynamics (model-dispatched, DESIGN.md §12)
     neurons = backend.neuron_update(layout, state.neurons, table, input_ex,
                                     input_in, synapse_model=cfg.synapse_model,
                                     model=model, key=mkey, t=state.t,
-                                    gid=graph.global_id)
+                                    gid=graph.global_id,
+                                    surrogate=cfg.surrogate)
     spike_bits = neurons.spike
 
     # (4) plasticity: weights first (traces exclude this step's spikes:
@@ -523,6 +559,22 @@ def make_session_step_fn(graph: ShardGraph, table: jax.Array,
     return step, ctx
 
 
+def normalize_spike_dtype(state: EngineState,
+                          cfg: EngineConfig) -> EngineState:
+    """Match the state's ``spike`` leaf dtype to the config's spike mode
+    before a scan: surrogate mode carries float spike bits (they ARE the
+    gradient path), inference mode carries bools.  Values are always
+    exactly {0, 1} so the cast is lossless both ways; this is the
+    boundary twin of the ``gate_overflow`` normalization."""
+    want = state.neurons.v_m.dtype if cfg.surrogate is not None else \
+        jnp.bool_
+    if state.neurons.spike.dtype == want:
+        return state
+    neurons = dataclasses.replace(
+        state.neurons, spike=state.neurons.spike.astype(want))
+    return dataclasses.replace(state, neurons=neurons)
+
+
 def run(state: EngineState, graph: ShardGraph, table: jax.Array,
         cfg: EngineConfig, n_steps: int):
     """Scan ``n_steps``; returns (final_state, spikes (n_steps, n_local) bool).
@@ -539,6 +591,7 @@ def run(state: EngineState, graph: ShardGraph, table: jax.Array,
     if state.gate_overflow is None:   # stable scan carry structure
         state = dataclasses.replace(
             state, gate_overflow=jnp.zeros((), jnp.int32))
+    state = normalize_spike_dtype(state, cfg)
     if state.weights_layout != native_tag:
         state = dataclasses.replace(
             state,

@@ -54,6 +54,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core import snn
+from repro.diff import surrogate as diff_surrogate_mod
 from repro.kernels import adex_step as adex_kernel_mod
 from repro.kernels import izhikevich_step as izh_kernel_mod
 from repro.kernels.adex_step import EXP_CLAMP
@@ -137,6 +138,13 @@ class NeuronModel:
     stochastic: bool = False
     #: Pallas twin of ``step`` or None (jnp path serves all backends)
     kernel_step: Callable | None = None
+    #: True iff ``step`` accepts ``surrogate=`` (DESIGN.md §17): a
+    #: surrogate-gradient spec ("st[:width]" / "fast_sigmoid[:beta]")
+    #: that swaps the spike Heaviside's BACKWARD for a pseudo-derivative
+    #: while the forward - and the whole membrane trajectory - stays
+    #: bit-identical to inference mode.  Threshold models opt in; event
+    #: emitters (poisson, composites) have no threshold to differentiate.
+    supports_surrogate: bool = False
 
     # -- build-time -------------------------------------------------------
     def check_groups(self, groups) -> None:
@@ -208,8 +216,27 @@ class NeuronModel:
         (n,) int32, -1 on padding rows) keys them per neuron so the same
         network sharded differently draws the same spikes (DESIGN.md §14).
         Deterministic models ignore all three.
+
+        Models with ``supports_surrogate`` additionally accept
+        ``surrogate=`` (a spec string, None = inference mode): the
+        returned state's ``spike`` leaf becomes the float surrogate spike
+        (forward bits unchanged, surrogate VJP) - DESIGN.md §17.
         """
         raise NotImplementedError
+
+    def spike_fn(self, surrogate: str | None):
+        """Resolve a surrogate spec into the spike function ``step``
+        threads to its threshold op; None in inference mode.  Raises for
+        models that never opted in (the contract check both backends run
+        before dispatch)."""
+        if surrogate is None:
+            return None
+        if not self.supports_surrogate:
+            raise ValueError(
+                f"model {self.name!r} does not support surrogate-gradient "
+                "mode (no spike threshold to differentiate); use one of "
+                "the threshold models (lif / izhikevich / adex)")
+        return diff_surrogate_mod.get_surrogate(surrogate)
 
 
 def _gid_uniform(key, t, gid):
@@ -252,6 +279,7 @@ class LIFModel(NeuronModel):
 
     name = "lif"
     param_cls = snn.LIFParams
+    supports_surrogate = True
 
     def make_param_table(self, groups, dt, dtype=jnp.float32):
         self.check_groups(groups)
@@ -265,9 +293,10 @@ class LIFModel(NeuronModel):
 
     def step(self, state, table, input_ex, input_in, *,
              synapse_model=snn.SynapseModel.CURRENT_EXP, key=None, t=None,
-             gid=None):
+             gid=None, surrogate=None):
         return snn.lif_step(state, table, input_ex, input_in,
-                            synapse_model=synapse_model)
+                            synapse_model=synapse_model,
+                            spike_fn=self.spike_fn(surrogate))
 
     def kernel_step(self, state, table, input_ex, input_in, *,
                     synapse_model=snn.SynapseModel.CURRENT_EXP,
@@ -307,6 +336,7 @@ class IzhikevichModel(NeuronModel):
     name = "izhikevich"
     param_cls = IzhikevichParams
     extra_fields = ("u",)
+    supports_surrogate = True
 
     def make_param_table(self, groups, dt, dtype=jnp.float32):
         self.check_groups(groups)
@@ -330,14 +360,15 @@ class IzhikevichModel(NeuronModel):
 
     def step(self, state, table, input_ex, input_in, *,
              synapse_model=snn.SynapseModel.CURRENT_EXP, key=None, t=None,
-             gid=None):
+             gid=None, surrogate=None):
         _require_current(self, synapse_model)
         gid = state.group_id
         get = lambda name: jnp.take(
             table[:, izh_kernel_mod.COL[name]], gid, axis=0)
         v, u, se, si, rc, sp = izh_kernel_mod.izhikevich_math(
             state.v_m, state.extra["u"], state.syn_ex, state.syn_in,
-            state.ref_count, input_ex, input_in, get)
+            state.ref_count, input_ex, input_in, get,
+            spike_fn=self.spike_fn(surrogate))
         return snn.NeuronState(v_m=v, syn_ex=se, syn_in=si, ref_count=rc,
                                spike=sp, group_id=gid, extra={"u": u})
 
@@ -377,6 +408,7 @@ class AdExModel(NeuronModel):
     name = "adex"
     param_cls = AdExParams
     extra_fields = ("w_ad",)
+    supports_surrogate = True
 
     def make_param_table(self, groups, dt, dtype=jnp.float32):
         self.check_groups(groups)
@@ -399,14 +431,15 @@ class AdExModel(NeuronModel):
 
     def step(self, state, table, input_ex, input_in, *,
              synapse_model=snn.SynapseModel.CURRENT_EXP, key=None, t=None,
-             gid=None):
+             gid=None, surrogate=None):
         _require_current(self, synapse_model)
         gid = state.group_id
         get = lambda name: jnp.take(
             table[:, adex_kernel_mod.COL[name]], gid, axis=0)
         v, w, se, si, rc, sp = adex_kernel_mod.adex_math(
             state.v_m, state.extra["w_ad"], state.syn_ex, state.syn_in,
-            state.ref_count, input_ex, input_in, get)
+            state.ref_count, input_ex, input_in, get,
+            spike_fn=self.spike_fn(surrogate))
         return snn.NeuronState(v_m=v, syn_ex=se, syn_in=si, ref_count=rc,
                                spike=sp, group_id=gid, extra={"w_ad": w})
 

@@ -173,6 +173,7 @@ def lif_step(
     *,
     synapse_model: str = SynapseModel.CURRENT_EXP,
     i_ext: jax.Array | None = None,
+    spike_fn=None,
 ) -> NeuronState:
     """One dt of neuron dynamics. Pure elementwise; the jnp oracle for the
     ``lif_step`` Pallas kernel.
@@ -180,6 +181,13 @@ def lif_step(
     ``input_ex`` / ``input_in`` are the per-neuron synaptic increments
     accumulated by the synaptic sweep this step (pA for current mode, nS for
     conductance mode; inhibitory increments arrive as positive magnitudes).
+
+    ``spike_fn`` (surrogate mode, DESIGN.md §17): a float Heaviside on the
+    threshold distance with a surrogate VJP.  The returned state's ``spike``
+    leaf becomes ``spike_fn(v - v_th)`` masked by refractoriness - forward
+    values exactly ``{0.0, 1.0}`` matching the inference bool, but carrying
+    a gradient.  Reset/refractory bookkeeping stays keyed off the exact
+    bool (detached reset), so the membrane trajectory is bit-identical.
     """
     t = table[state.group_id]  # (n, NCOL) gather
     p_vv, p_ee, p_ii = t[:, COL["p_vv"]], t[:, COL["p_ee"]], t[:, COL["p_ii"]]
@@ -212,6 +220,12 @@ def lif_step(
     refractory = state.ref_count > 0
     v_new = jnp.where(refractory, v_reset, v_prop)
     spike = jnp.logical_and(jnp.logical_not(refractory), v_new >= v_th)
+    spike_out = spike
+    if spike_fn is not None:
+        # surrogate float spike: same forward values, surrogate backward;
+        # the where() kills the (zero-valued) refractory rows' gradient
+        spike_out = jnp.where(refractory, jnp.zeros_like(v_new),
+                              spike_fn(v_new - v_th))
     v_new = jnp.where(spike, v_reset, v_new)
     ref_count = jnp.where(
         spike, ref_steps,
@@ -222,7 +236,7 @@ def lif_step(
         syn_ex=syn_ex,
         syn_in=syn_in,
         ref_count=ref_count,
-        spike=spike,
+        spike=spike_out,
         group_id=state.group_id,
         extra=state.extra,
     )

@@ -1,0 +1,32 @@
+"""Differentiable simulation subsystem (DESIGN.md §17).
+
+Three layers on top of the engine's pure-JAX step:
+
+* :mod:`repro.diff.surrogate` - the surrogate-gradient spike primitive
+  (straight-through / fast-sigmoid custom-JVP tangents whose FORWARD is
+  the exact Heaviside the inference path computes), selected per-run by
+  ``EngineConfig.surrogate``;
+* :mod:`repro.diff.rollout` - the gradient-safe engine rollout: a
+  chunked ``jax.checkpoint`` scan that bounds reverse-mode memory through
+  the delay ring buffer (naive backprop stores every per-step ring -
+  O(T*D*M) floats);
+* :mod:`repro.diff.inverse` / :mod:`repro.diff.classify` - the two
+  workloads: scenario-parameter inversion (recover brunel's ``(g, eta)``
+  from a target PSTH by gradient descent) and surrogate-gradient SNN
+  classification on the ``repro.train`` optimizer/loop substrate.
+
+``surrogate`` is import-light (jax only) so :mod:`repro.core` modules can
+depend on it without a cycle; the heavier submodules load lazily.
+"""
+
+from __future__ import annotations
+
+import importlib
+
+__all__ = ["surrogate", "rollout", "inverse", "classify"]
+
+
+def __getattr__(name):
+    if name in __all__:
+        return importlib.import_module(f"repro.diff.{name}")
+    raise AttributeError(f"module {__name__!r} has no attribute {name!r}")

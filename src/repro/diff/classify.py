@@ -1,0 +1,214 @@
+"""Surrogate-gradient SNN classifier on the train substrate (DESIGN.md §17).
+
+A deliberately small end-to-end proof that the surrogate spike primitive
+trains: rate-coded input spike trains -> one hidden layer of the SAME LIF
+dynamics the simulator integrates (:func:`repro.core.snn.lif_step`, with
+``spike_fn`` from :mod:`repro.diff.surrogate`) -> linear readout on hidden
+spike counts.  Optimization reuses the production training substrate -
+the model exposes the ``init(key, dtype)`` / ``loss(params, batch)``
+interface :func:`repro.train.loop.make_train_step` expects, so AdamW,
+grad clipping and (optionally) the data-parallel batch sharding all come
+from :mod:`repro.train` unchanged.
+
+Wiring details:
+
+* Signed input weights are split into the engine's excitatory/inhibitory
+  channels (``relu(w)`` -> ``input_ex``, ``relu(-w)`` -> ``input_in``);
+  both are filtered by the LIF synapse, so input spikes arrive as
+  current transients exactly like recurrent spikes do in the simulator.
+* The time loop is a ``lax.scan`` over one sample's ``(T, n_in)`` spike
+  raster; the batch axis is ``vmap``-ed OUTSIDE the scan because
+  ``lif_step``'s parameter-table gather assumes flat ``(n,)`` state.
+* The readout consumes mean hidden spike counts - surrogate floats, so
+  cross-entropy gradients flow through every hidden spike back into
+  ``w_in`` across time.
+
+The synthetic task (noisy class prototypes, rate-coded) keeps the CI
+smoke dependency-free; chance is ``1/n_classes`` and
+``tests/test_diff.py`` asserts the one-epoch-trained classifier clears
+3x chance (ISSUE 10 acceptance).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import TrainConfig
+from repro.core import snn
+from repro.diff import surrogate as surrogate_mod
+from repro.sharding import rules as rules_mod
+from repro.train import loop as loop_mod
+
+__all__ = ["SNNClassifier", "make_prototypes", "make_dataset",
+           "train_classifier"]
+
+
+@dataclasses.dataclass(frozen=True)
+class SNNClassifier:
+    """Rate-coded spike train -> LIF hidden layer -> spike-count softmax.
+
+    Plugs into ``repro.train`` as a substrate model: ``init`` returns the
+    params pytree, ``loss(params, batch)`` returns ``(loss, metrics)``
+    for batches ``{"spikes": (B, T, n_in), "label": (B,)}``.
+    """
+
+    n_in: int = 40
+    n_hidden: int = 64
+    n_classes: int = 8
+    n_steps: int = 60
+    dt: float = 1.0
+    surrogate: str = "fast_sigmoid"
+    #: input-weight init scale [pA]; sized so a typical rate-coded sample
+    #: drives hidden neurons at tens-to-hundreds of Hz from init
+    w_in_scale: float = 150.0
+    #: readout input gain: mean spike counts live in [0, ~0.3], so a
+    #: fixed O(10) gain puts readout activations at O(1) from init
+    readout_gain: float = 6.0
+    lif: snn.LIFParams = dataclasses.field(
+        default_factory=lambda: snn.LIFParams(
+            tau_m=10.0, c_m=250.0, e_l=-65.0, v_th=-50.0, v_reset=-65.0,
+            t_ref=1.0, tau_syn_ex=2.0, tau_syn_in=2.0))
+
+    def __post_init__(self):
+        # built eagerly so the concrete table is never first materialized
+        # (and cached) inside somebody else's jit trace
+        object.__setattr__(
+            self, "_table", snn.make_param_table([self.lif], dt=self.dt))
+        object.__setattr__(
+            self, "_spike_fn", surrogate_mod.get_surrogate(self.surrogate))
+
+    def init(self, key, dtype=jnp.float32):
+        k_in, k_out = jax.random.split(key)
+        return {
+            "w_in": (self.w_in_scale * jax.random.normal(
+                k_in, (self.n_in, self.n_hidden))).astype(dtype),
+            "w_out": (jax.random.normal(
+                k_out, (self.n_hidden, self.n_classes))
+                / np.sqrt(self.n_hidden)).astype(dtype),
+            "b_out": jnp.zeros((self.n_classes,), dtype),
+        }
+
+    def _forward_one(self, params, spikes_in):
+        """Logits for ONE sample's raster ``(n_steps, n_in)``."""
+        w_in = params["w_in"].astype(jnp.float32)
+        state = snn.NeuronState(
+            v_m=jnp.full((self.n_hidden,), self.lif.e_l, jnp.float32),
+            syn_ex=jnp.zeros((self.n_hidden,), jnp.float32),
+            syn_in=jnp.zeros((self.n_hidden,), jnp.float32),
+            ref_count=jnp.zeros((self.n_hidden,), jnp.int32),
+            spike=jnp.zeros((self.n_hidden,), jnp.float32),
+            group_id=jnp.zeros((self.n_hidden,), jnp.int32),
+            extra={})
+
+        def step(s, x_t):
+            drive = x_t.astype(jnp.float32)
+            s = snn.lif_step(s, self._table,
+                             input_ex=drive @ jax.nn.relu(w_in),
+                             input_in=drive @ jax.nn.relu(-w_in),
+                             spike_fn=self._spike_fn)
+            return s, s.spike
+
+        _, hidden = jax.lax.scan(step, state, spikes_in)
+        counts = hidden.mean(axis=0)          # surrogate floats: has grad
+        return (self.readout_gain * counts
+                @ params["w_out"].astype(jnp.float32)
+                + params["b_out"].astype(jnp.float32))
+
+    def apply(self, params, spikes):
+        """Logits ``(B, n_classes)`` for rasters ``(B, n_steps, n_in)``."""
+        return jax.vmap(lambda x: self._forward_one(params, x))(spikes)
+
+    def loss(self, params, batch):
+        logits = self.apply(params, batch["spikes"])
+        labels = batch["label"]
+        logp = jax.nn.log_softmax(logits)
+        nll = -jnp.take_along_axis(logp, labels[:, None], axis=1).mean()
+        acc = jnp.mean(jnp.argmax(logits, axis=1) == labels)
+        return nll, {"loss": nll, "accuracy": acc}
+
+
+def make_prototypes(key, model: SNNClassifier) -> jax.Array:
+    """Class intensity prototypes ``(n_classes, n_in)`` in ``[0, 1]`` -
+    drawn ONCE and shared by every split (train and eval must code the
+    same classes)."""
+    return jax.random.uniform(key, (model.n_classes, model.n_in))
+
+
+def make_dataset(key, model: SNNClassifier, n_samples: int, protos, *,
+                 noise: float = 0.15, max_p: float = 0.35):
+    """Synthetic rate-coding task: a sample jitters its class prototype
+    (from :func:`make_prototypes`) with Gaussian noise and draws
+    Bernoulli spikes at ``intensity * max_p`` per step.  Labels are
+    round-robin (balanced).  Returns
+    ``{"spikes": (n, T, n_in) float32, "label": (n,) int32}``."""
+    k_noise, k_spikes = jax.random.split(key)
+    labels = jnp.arange(n_samples, dtype=jnp.int32) % model.n_classes
+    x = jnp.clip(protos[labels]
+                 + noise * jax.random.normal(
+                     k_noise, (n_samples, model.n_in)), 0.0, 1.0)
+    u = jax.random.uniform(
+        k_spikes, (n_samples, model.n_steps, model.n_in))
+    spikes = (u < (max_p * x)[:, None, :]).astype(jnp.float32)
+    return {"spikes": spikes, "label": labels}
+
+
+def train_classifier(model: SNNClassifier, tcfg: TrainConfig, *,
+                     n_train: int = 512, n_eval: int = 256,
+                     batch_size: int = 64, epochs: int = 1, seed: int = 0,
+                     data_parallel: bool = False):
+    """Train on the synthetic task; returns ``(params, history)`` where
+    ``history`` is a list of per-epoch dicts ending with held-out
+    ``eval_accuracy``.  ``data_parallel=True`` lays every batch out over
+    a 1-D ``("data",)`` device mesh (``repro.sharding`` batch rule) -
+    the loss is batch-separable, so XLA SPMD turns that single
+    annotation into standard data parallelism; on one device it is a
+    no-op, so the CI smoke exercises the same code path."""
+    if n_train % batch_size:
+        raise ValueError(f"n_train={n_train} must be a multiple of "
+                         f"batch_size={batch_size}")
+    key = jax.random.key(seed)
+    k_params, k_proto, k_train, k_eval = jax.random.split(key, 4)
+    params, opt_state = loop_mod.init_train_state(model, tcfg, k_params)
+    protos = make_prototypes(k_proto, model)
+    train = make_dataset(k_train, model, n_train, protos)
+    evald = make_dataset(k_eval, model, n_eval, protos)
+
+    sharding = None
+    if data_parallel:
+        mesh = jax.sharding.Mesh(np.array(jax.devices()), ("data",))
+        sharding = jax.sharding.NamedSharding(
+            mesh, rules_mod.batch_spec(mesh))
+
+    step_fn = jax.jit(loop_mod.make_train_step(model, tcfg),
+                      donate_argnums=(0, 1))
+    eval_fn = jax.jit(model.loss)
+
+    history = []
+    n_batches = n_train // batch_size
+    for epoch in range(epochs):
+        order = np.asarray(jax.random.permutation(
+            jax.random.fold_in(k_train, epoch), n_train))
+        losses, accs = [], []
+        for b in range(n_batches):
+            idx = order[b * batch_size:(b + 1) * batch_size]
+            batch = {k: v[idx] for k, v in train.items()}
+            if sharding is not None:
+                batch = jax.device_put(batch, sharding)
+            params, opt_state, metrics = step_fn(
+                params, opt_state, batch, jnp.asarray(
+                    epoch * n_batches + b))
+            losses.append(float(metrics["loss"]))
+            accs.append(float(metrics["accuracy"]))
+        _, eval_metrics = eval_fn(params, evald)
+        history.append({
+            "epoch": epoch,
+            "train_loss": float(np.mean(losses)),
+            "train_accuracy": float(np.mean(accs)),
+            "eval_accuracy": float(eval_metrics["accuracy"]),
+        })
+    return params, history

@@ -1,0 +1,106 @@
+"""Gradient-safe engine rollout: chunked ``jax.checkpoint`` scan
+(DESIGN.md §17).
+
+Reverse-mode AD through ``engine.run`` must store every intermediate the
+backward pass reads - and the engine's biggest per-step intermediate is
+the delay ring buffer, a ``(D, n_mirror)`` float array rewritten every
+step.  A naive T-step backprop therefore holds O(T * D * n_mirror) floats
+(plus per-step neuron/synapse residuals), which is exactly the memory wall
+the ``repro.train`` loop already solved for LM microbatches with
+``jax.checkpoint``.
+
+:func:`rollout` reuses that discipline on the simulation axis: the scan is
+split into ``T / checkpoint_every`` chunks, each chunk wrapped in
+``jax.checkpoint``.  The backward pass then stores one engine state per
+chunk boundary and rematerializes the inside of one chunk at a time -
+O(T/C * state + C * step residuals) instead of O(T * step residuals).
+``benchmarks/bench_snn.py --surrogate`` measures both variants' compiled
+peak memory (XLA's ``temp_size_in_bytes``) and ``benchmarks/diff.py``
+guards that the checkpointed rollout stays strictly below the naive one at
+T=200 (the ISSUE 10 acceptance bar).
+
+The rollout itself is mode-agnostic: with ``cfg.surrogate`` set the spike
+bits are surrogate floats and the whole thing is differentiable end to end
+(weights, drive rates under ``external_drive_mode="diffusion"``, any
+param-table entry); without it this is just ``engine.run`` with a
+different remat policy.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import backends as backends_mod
+from repro.core import engine as engine_mod
+from repro.core import neuron_models as neuron_models_mod
+
+__all__ = ["rollout", "grad_peak_memory_bytes"]
+
+
+def rollout(state, graph, table, cfg, n_steps: int, *,
+            checkpoint_every: int | None = None):
+    """Scan ``n_steps`` of :func:`repro.core.engine.engine_step`; returns
+    ``(final_state, spikes)`` with ``spikes`` shaped ``(n_steps,
+    n_local)`` (surrogate floats when ``cfg.surrogate`` is set, bools
+    otherwise).
+
+    ``checkpoint_every`` (None = naive) wraps each chunk of that many
+    steps in ``jax.checkpoint``; ``n_steps`` must divide evenly so every
+    chunk - and the scan carry - has one static shape.  Weights are
+    carried in the backend's native layout like ``engine.run``, but the
+    final state is returned AS CARRIED (no flat conversion: a training
+    loop differentiates through the rollout, and a layout permutation on
+    the way out would just add a gather to every backward pass).
+    """
+    if checkpoint_every is not None and checkpoint_every > 0:
+        if n_steps % checkpoint_every:
+            raise ValueError(
+                f"n_steps={n_steps} must be a multiple of "
+                f"checkpoint_every={checkpoint_every} (one static chunk "
+                "shape; pad the horizon or pick a divisor)")
+    backend = backends_mod.get_backend(cfg.sweep)
+    layout = backend.prepare(graph)
+    model = neuron_models_mod.get_model(cfg.neuron_model)
+    state = engine_mod.normalize_spike_dtype(state, cfg)
+    native_tag = backends_mod.layout_tag(layout, backend.weights_layout)
+    if state.gate_overflow is None:
+        state = dataclasses.replace(
+            state, gate_overflow=jnp.zeros((), jnp.int32))
+    if state.weights_layout != native_tag:
+        state = dataclasses.replace(
+            state,
+            weights=backends_mod.convert_weights(
+                layout, state.weights, state.weights_layout, native_tag),
+            weights_layout=native_tag)
+
+    def one(s, _):
+        return engine_mod.engine_step(s, graph, table, cfg,
+                                      backend=backend, layout=layout,
+                                      model=model)
+
+    if not checkpoint_every:
+        return jax.lax.scan(one, state, None, length=n_steps)
+
+    @jax.checkpoint
+    def chunk(s, _):
+        return jax.lax.scan(one, s, None, length=checkpoint_every)
+
+    final, spikes = jax.lax.scan(chunk, state, None,
+                                 length=n_steps // checkpoint_every)
+    return final, spikes.reshape((n_steps,) + spikes.shape[2:])
+
+
+def grad_peak_memory_bytes(loss_fn, *args) -> int:
+    """Compiled peak temp memory [bytes] of ``jax.grad(loss_fn)`` - XLA's
+    own buffer-assignment peak (``temp_size_in_bytes``), the
+    machine-independent measure the remat-policy bench records.  Returns
+    -1 when the runtime does not expose memory stats (older jaxlibs)."""
+    compiled = jax.jit(jax.grad(loss_fn)).lower(*args).compile()
+    try:
+        stats = compiled.memory_analysis()
+        return int(stats.temp_size_in_bytes)
+    except (AttributeError, TypeError):
+        return -1

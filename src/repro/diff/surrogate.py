@@ -1,0 +1,112 @@
+"""Surrogate-gradient spike primitive (DESIGN.md §17).
+
+The engine is pure JAX end-to-end; the ONE non-differentiable op in every
+neuron model is the spike Heaviside ``v >= v_th``.  This module wraps that
+comparison in a ``jax.custom_jvp`` whose
+
+* **primal** is the exact Heaviside the inference path computes -
+  ``(x >= 0)`` cast to the membrane dtype, so surrogate-mode trajectories
+  are bit-identical to inference mode (the §17 forward guarantee, pinned
+  per model/backend in ``tests/test_diff.py``); and
+* **tangent** substitutes a pseudo-derivative on the threshold distance
+  ``x = v - v_th`` [mV]:
+
+  - ``"st"`` / ``"st:<width>"``      - straight-through boxcar: grad 1
+    inside ``|x| <= width`` (default 1 mV), 0 outside;
+  - ``"fast_sigmoid"`` / ``"fast_sigmoid:<beta>"`` - SuperSpike
+    (Zenke & Ganguli 2018): ``beta / (1 + beta*|x|)**2`` (default beta 1).
+
+``custom_jvp`` rather than ``custom_vjp`` because the tangent rule
+``t * grad_fn(x)`` is linear in ``t``, so JAX derives BOTH differentiation
+modes from it: reverse (training, ``diff/rollout`` + ``jax.grad``) by
+transposing the linear rule, and forward (``jax.jacfwd``, which
+``diff/inverse`` uses for Gauss-Newton Jacobians - 2 params means 2 cheap
+JVP columns instead of one VJP per residual).
+
+Where the surrogate sits: model ``step`` functions compute their spike
+bool exactly as before (reset / refractory bookkeeping is keyed off the
+BOOL, so the reset path is detached - standard surrogate practice) and
+ADDITIONALLY emit the float spike from this primitive as the state's
+``spike`` leaf.  The engine writes that float into the delay ring, so the
+gradient of any downstream loss flows spike -> ring -> synaptic sweep ->
+membrane, across shards and timesteps alike.
+
+Specs are plain strings so they can ride ``EngineConfig`` (a static jit
+field); resolution is cached so repeated traces see one function object.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["get_surrogate", "available_surrogates", "spike_surrogate"]
+
+#: default straight-through window half-width [mV]
+DEFAULT_ST_WIDTH = 1.0
+#: default fast-sigmoid steepness [1/mV]
+DEFAULT_FS_BETA = 1.0
+
+
+@functools.partial(jax.custom_jvp, nondiff_argnums=(1,))
+def spike_surrogate(x, grad_fn):
+    """Heaviside forward (exact, in ``x.dtype``), ``grad_fn`` derivative."""
+    x = jnp.asarray(x)
+    return (x >= 0).astype(x.dtype)
+
+
+@spike_surrogate.defjvp
+def _spike_surrogate_jvp(grad_fn, primals, tangents):
+    (x,), (t,) = primals, tangents
+    x = jnp.asarray(x)
+    return spike_surrogate(x, grad_fn), grad_fn(x).astype(x.dtype) * t
+
+
+def _st_grad(width, x):
+    return (jnp.abs(x) <= width).astype(x.dtype)
+
+
+def _fs_grad(beta, x):
+    return beta / jnp.square(1.0 + beta * jnp.abs(x))
+
+
+_FAMILIES = {
+    "st": (_st_grad, DEFAULT_ST_WIDTH),
+    "fast_sigmoid": (_fs_grad, DEFAULT_FS_BETA),
+}
+
+
+def available_surrogates() -> tuple[str, ...]:
+    return tuple(sorted(_FAMILIES))
+
+
+@functools.lru_cache(maxsize=None)
+def get_surrogate(spec: str):
+    """Resolve ``"st"`` / ``"st:<width>"`` / ``"fast_sigmoid[:beta]"`` into
+    ``spike_fn(x) -> float``: exact Heaviside forward, surrogate backward.
+
+    Cached per spec so every trace of the same config shares one callable
+    (stable jit cache keys for closures that capture it).
+    """
+    name, _, arg = spec.partition(":")
+    if name not in _FAMILIES:
+        raise ValueError(
+            f"unknown surrogate {spec!r}; available families: "
+            f"{available_surrogates()} (parameterize like 'st:0.5' or "
+            f"'fast_sigmoid:10')")
+    grad_family, default = _FAMILIES[name]
+    try:
+        scale = float(arg) if arg else default
+    except ValueError:
+        raise ValueError(
+            f"surrogate {spec!r}: parameter {arg!r} is not a float")
+    if scale <= 0:
+        raise ValueError(f"surrogate {spec!r}: parameter must be > 0")
+    grad_fn = functools.partial(grad_family, scale)
+
+    def spike_fn(x):
+        return spike_surrogate(x, grad_fn)
+
+    return spike_fn

@@ -58,9 +58,14 @@ COL = {name: i for i, name in enumerate(_COLS)}
 NCOL = len(_COLS)
 
 
-def adex_math(v, w, syn_ex, syn_in, rc, iex, iin, get):
+def adex_math(v, w, syn_ex, syn_in, rc, iex, iin, get, spike_fn=None):
     """One Euler dt of the AdEx dynamics; shared op-for-op by the jnp
-    oracle and the kernel body (bit-exact interpret contract)."""
+    oracle and the kernel body (bit-exact interpret contract).
+
+    ``spike_fn`` (surrogate mode, DESIGN.md §17; jnp oracle only - the
+    kernel never passes it): emit the float surrogate spike on the peak
+    distance; forward values identical, reset bookkeeping stays on the
+    exact bool."""
     se_new = syn_ex * get("p_ee") + iex
     si_new = syn_in * get("p_ii") + iin
     g_l, e_l, delta_t = get("g_l"), get("e_l"), get("delta_t")
@@ -75,11 +80,15 @@ def adex_math(v, w, syn_ex, syn_in, rc, iex, iin, get):
     v_new = jnp.where(refractory, v_reset, v_prop)
     spike = jnp.logical_and(jnp.logical_not(refractory),
                             v_new >= get("v_peak"))
+    spike_out = spike
+    if spike_fn is not None:
+        spike_out = jnp.where(refractory, jnp.zeros_like(v_new),
+                              spike_fn(v_new - get("v_peak")))
     v_new = jnp.where(spike, v_reset, v_new)
     w_new = jnp.where(spike, w_prop + get("b"), w_prop)
     rc_new = jnp.where(spike, get("ref_steps").astype(jnp.int32),
                        jnp.maximum(rc - 1, 0).astype(jnp.int32))
-    return v_new, w_new, se_new, si_new, rc_new, spike
+    return v_new, w_new, se_new, si_new, rc_new, spike_out
 
 
 def _kernel(v_ref, w_ref, se_ref, si_ref, rc_ref, gid_ref, iex_ref, iin_ref,

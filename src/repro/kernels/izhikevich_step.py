@@ -52,10 +52,15 @@ COL = {name: i for i, name in enumerate(_COLS)}
 NCOL = len(_COLS)
 
 
-def izhikevich_math(v, u, syn_ex, syn_in, rc, iex, iin, get):
+def izhikevich_math(v, u, syn_ex, syn_in, rc, iex, iin, get, spike_fn=None):
     """One Euler dt of the quadratic dynamics; shared op-for-op by the jnp
     oracle and the kernel body so interpret-mode trajectories are
-    bit-exact (the fp32 contract of DESIGN.md §12)."""
+    bit-exact (the fp32 contract of DESIGN.md §12).
+
+    ``spike_fn`` (surrogate mode, DESIGN.md §17; jnp oracle only - the
+    kernel never passes it): emit the float surrogate spike on the peak
+    distance instead of the bool; forward values identical, reset and
+    refractory bookkeeping stay keyed off the exact bool."""
     dt = get("dt")
     se_new = syn_ex * get("p_ee") + iex
     si_new = syn_in * get("p_ii") + iin
@@ -68,11 +73,15 @@ def izhikevich_math(v, u, syn_ex, syn_in, rc, iex, iin, get):
     v_new = jnp.where(refractory, c, v_prop)
     spike = jnp.logical_and(jnp.logical_not(refractory),
                             v_new >= get("v_peak"))
+    spike_out = spike
+    if spike_fn is not None:
+        spike_out = jnp.where(refractory, jnp.zeros_like(v_new),
+                              spike_fn(v_new - get("v_peak")))
     v_new = jnp.where(spike, c, v_new)
     u_new = jnp.where(spike, u_prop + get("d"), u_prop)
     rc_new = jnp.where(spike, get("ref_steps").astype(jnp.int32),
                        jnp.maximum(rc - 1, 0).astype(jnp.int32))
-    return v_new, u_new, se_new, si_new, rc_new, spike
+    return v_new, u_new, se_new, si_new, rc_new, spike_out
 
 
 def _kernel(v_ref, u_ref, se_ref, si_ref, rc_ref, gid_ref, iex_ref, iin_ref,
